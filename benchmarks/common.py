@@ -1,0 +1,111 @@
+"""Shared benchmark utilities: timing + CSV emission + a tiny trained LM."""
+from __future__ import annotations
+
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+ROWS = []
+
+
+def emit(name: str, us_per_call: float, derived: str):
+    ROWS.append((name, us_per_call, derived))
+    print(f"{name},{us_per_call:.1f},{derived}")
+
+
+def time_fn(fn, *args, iters: int = 5, warmup: int = 1) -> float:
+    """Median wall-time per call in microseconds (results blocked)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts) * 1e6)
+
+
+# ---------------------------------------------------------------------------
+# tiny LM trained once per benchmark session (PTQ benches need a model whose
+# logits mean something).  ~0.5M params, 60 quick steps on the synthetic
+# Markov stream; cached in-process.
+# ---------------------------------------------------------------------------
+_TINY = {}
+
+
+def tiny_lm(steps: int = 60, method: str = "bf16"):
+    key = (steps, method)
+    if key in _TINY:
+        return _TINY[key]
+    from repro.core.qgemm import QuantConfig
+    from repro.data import DataConfig, make_stream
+    from repro.models.base import ArchConfig, Ctx, build_model
+    from repro.optim import AdamWConfig, adamw_init, adamw_update
+
+    cfg = ArchConfig(name="tiny", family="dense", n_layers=2, d_model=128,
+                     n_heads=4, n_kv_heads=2, d_ff=256, vocab=256,
+                     qk_norm=True, attn_chunk=128,
+                     quant=QuantConfig(method=method))
+    model = build_model(cfg)
+    params, _ = model.init(jax.random.PRNGKey(0))
+    opt_cfg = AdamWConfig()
+    opt = adamw_init(params)
+    stream = make_stream(DataConfig(vocab=256, seq_len=64, batch_per_shard=8,
+                                    seed=3))
+    ctx = Ctx(jax.random.PRNGKey(1), cfg.quant)
+
+    @jax.jit
+    def step(params, opt, batch, k):
+        c = Ctx(k, cfg.quant)
+        loss, g = jax.value_and_grad(
+            lambda p: model.loss(p, batch, c))(params)
+        params, opt, _ = adamw_update(opt_cfg, params, opt, g, 3e-3)
+        return params, opt, loss
+
+    loss = None
+    for i in range(steps):
+        b = stream.batch(i)
+        batch = {k: jnp.asarray(v) for k, v in b.items()}
+        params, opt, loss = step(params, opt, batch,
+                                 jax.random.PRNGKey(100 + i))
+    _TINY[key] = (cfg, model, params, float(loss))
+    return _TINY[key]
+
+
+def eval_ppl(cfg, model, params, *, method: str | None = None,
+             n_batches: int = 4, qparams=None):
+    """Eval perplexity of the tiny LM on held-out synthetic batches, with
+    weights optionally quantize-dequantized by ``method`` (RTN PTQ)."""
+    from repro.core import quantize as Q
+    from repro.data import DataConfig, make_stream
+    from repro.models.base import Ctx
+    from repro.core.qgemm import QuantConfig
+
+    def q2d(w):
+        if method == "bf16":
+            return w
+        if w.ndim == 2 and min(w.shape) >= 16:
+            return Q.qdq_2d(w, method)
+        if w.ndim == 3 and min(w.shape[1:]) >= 16:   # stacked layer weights
+            return jax.vmap(lambda m: Q.qdq_2d(m, method))(w)
+        return w
+
+    p = qparams if qparams is not None else params
+    if method is not None and qparams is None:
+        p = jax.tree.map(q2d, params)
+    ecfg = cfg.replace(quant=QuantConfig(method="bf16"))  # activations bf16
+    from repro.models.base import build_model
+    emodel = build_model(ecfg)
+    ctx = Ctx(jax.random.PRNGKey(9), ecfg.quant)
+    # held-out batches from the SAME stream (seed 3), disjoint step range
+    stream = make_stream(DataConfig(vocab=cfg.vocab, seq_len=64,
+                                    batch_per_shard=8, seed=3))
+    tot = 0.0
+    for i in range(n_batches):
+        b = stream.batch(1000 + i)
+        batch = {k: jnp.asarray(v) for k, v in b.items()}
+        tot += float(emodel.loss(p, batch, ctx))
+    return float(np.exp(tot / n_batches))

@@ -1,0 +1,100 @@
+"""Generate the §Dry-run-table and §Roofline-table sections of
+EXPERIMENTS.md from artifacts (idempotent: replaces everything after the
+marker line)."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks import roofline as RL
+
+MARKER = "## §Dry-run-table / §Roofline-table / §Perf-cells"
+EXP = os.path.join(os.path.dirname(__file__), "..", "EXPERIMENTS.md")
+
+
+def dryrun_table(mesh: str) -> str:
+    rows = []
+    for f in sorted(glob.glob(os.path.join(RL.ART, f"*__{mesh}.json"))):
+        r = json.load(open(f))
+        if r.get("quant", "mixfp4") != "mixfp4" or r.get("suffix"):
+            continue
+        if r["status"] == "ok":
+            mem = (r["memory"]["temp_size_in_bytes"]
+                   + r["memory"]["argument_size_in_bytes"]) / 1e9
+            rows.append(
+                f"| {r['arch']} | {r['shape']} | {r['entry']} | ok | "
+                f"{mem:.1f} | {r['collectives']['total_bytes']/1e9:.1f} | "
+                f"{r['flops_exact']:.2e} | {r['compile_s']:.0f}s |")
+        elif r["status"] == "skipped":
+            rows.append(f"| {r['arch']} | {r['shape']} | — | skip | — | — | "
+                        f"— | {r['reason'][:46]} |")
+        else:
+            rows.append(f"| {r['arch']} | {r['shape']} | — | ERROR | — | — "
+                        f"| — | {str(r.get('error'))[:40]} |")
+    hdr = (f"\n### Dry-run grid — {mesh} mesh "
+           f"({'512' if mesh == 'multi' else '256'} chips)\n\n"
+           "| arch | shape | entry | status | mem/dev GB (CPU-backend, "
+           "opt0) | coll/dev GB | FLOPs (exact) | compile |\n"
+           "|---|---|---|---|---|---|---|---|\n")
+    return hdr + "\n".join(rows) + "\n"
+
+
+def roofline_table() -> str:
+    rows = RL.bench_roofline.__wrapped__("single") if hasattr(
+        RL.bench_roofline, "__wrapped__") else None
+    cells = RL.load_cells("single")
+    out = ["\n### Roofline — single-pod (256 chips), quant=mixfp4\n",
+           "| arch | shape | compute s | memory s | collective s | dominant "
+           "| MODEL/HLO FLOPs | useful-MFU @bound |",
+           "|---|---|---|---|---|---|---|---|"]
+    for (arch, shape), r in sorted(cells.items()):
+        row = RL.roofline_row(r)
+        if row is None:
+            continue
+        bound = max(row["t_compute_s"], row["t_memory_s"],
+                    row["t_collective_s"])
+        mfu = (row["model_flops"] / (r["n_devices"] * RL.HW_FLOPS)) / bound \
+            if bound else 0.0
+        out.append(
+            f"| {arch} | {shape} | {row['t_compute_s']:.2e} | "
+            f"{row['t_memory_s']:.2e} | {row['t_collective_s']:.2e} | "
+            f"{row['dominant']} | {row['useful_ratio']:.2f} | {mfu:.3f} |")
+    return "\n".join(out) + "\n"
+
+
+def variants_table() -> str:
+    """Quant-method / override variants recorded for §Perf."""
+    rows = []
+    for f in sorted(glob.glob(os.path.join(RL.ART, "*.json"))):
+        r = json.load(open(f))
+        if r.get("status") != "ok":
+            continue
+        if r.get("quant", "mixfp4") == "mixfp4" and not r.get("suffix"):
+            continue
+        tag = r.get("suffix") or r["quant"]
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | {tag} | "
+            f"{r['flops_exact']:.2e} | "
+            f"{r['collectives']['total_bytes']/1e9:.1f} | "
+            f"{(r['memory']['temp_size_in_bytes'] + r['memory']['argument_size_in_bytes'])/1e9:.1f} |")
+    if not rows:
+        return ""
+    return ("\n### Variant cells (§Perf comparisons)\n\n"
+            "| arch | shape | mesh | variant | FLOPs | coll GB | mem GB |\n"
+            "|---|---|---|---|---|---|---|\n" + "\n".join(rows) + "\n")
+
+
+def main():
+    with open(EXP) as f:
+        text = f.read()
+    head = text.split(MARKER)[0] + MARKER + "\n"
+    body = (dryrun_table("single") + dryrun_table("multi")
+            + roofline_table() + variants_table())
+    with open(EXP, "w") as f:
+        f.write(head + body)
+    print("EXPERIMENTS.md tables regenerated")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,215 @@
+"""Benchmarks reproducing the paper's tables/figures (CPU-scale proxies).
+
+Each function prints `name,us_per_call,derived` rows via common.emit and
+returns a dict for EXPERIMENTS.md.  HF checkpoints/WikiText are unavailable
+offline, so accuracy tables use (a) QSNR on synthetic + real-activation-like
+tensors and (b) RTN-PTQ perplexity of a tiny LM trained in-process — the
+claims validated are the paper's *orderings* (MixFP4 <= 4/6 <= NVFP4 etc.).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks import common
+from repro.core import analysis, hadamard, quantize as Q
+from repro.core.qgemm import QuantConfig
+
+
+def _mixed_tensor(key, shape, outlier_frac=0.01, outlier_scale=8.0):
+    """LLM-activation-like tensor: Gaussian + sparse outliers."""
+    k1, k2, k3 = jax.random.split(key, 3)
+    x = jax.random.normal(k1, shape)
+    mask = jax.random.uniform(k2, shape) < outlier_frac
+    out = jax.random.normal(k3, shape) * outlier_scale
+    return jnp.where(mask, out, x)
+
+
+# ---------------------------------------------------------------------------
+# Table 3 proxy: RTN quantization quality across formats, +-RHT
+# ---------------------------------------------------------------------------
+def bench_table3_rtn_formats():
+    key = jax.random.PRNGKey(0)
+    x = _mixed_tensor(key, (256, 1024))
+    signs = hadamard.rht_signs(jax.random.PRNGKey(1), 1024)
+    xr = hadamard.rht(x, signs, axis=-1)
+    rows = {}
+    for name, xx in [("plain", x), ("rht", xr)]:
+        for m in ["nvfp4", "nvint4", "four_six", "mixfp4"]:
+            us = common.time_fn(
+                jax.jit(lambda a, mm=m: Q.qdq(a, mm)), xx)
+            q = float(analysis.qsnr(xx, Q.qdq(xx, m)))
+            rows[f"{m}_{name}"] = q
+            common.emit(f"table3_qsnr_{m}_{name}", us, f"qsnr_db={q:.3f}")
+    # paper orderings
+    ok1 = rows["mixfp4_plain"] >= rows["nvfp4_plain"]
+    ok2 = rows["mixfp4_plain"] >= rows["four_six_plain"] - 0.05
+    ok3 = rows["mixfp4_rht"] >= rows["nvfp4_rht"]
+    common.emit("table3_orderings", 0.0,
+                f"mix>=nvfp4={ok1};mix>=46={ok2};mix_rht>=nvfp4_rht={ok3}")
+
+    # tiny-LM RTN PTQ ppl (Table 3's model-level analogue)
+    cfg, model, params, train_loss = common.tiny_lm()
+    base = common.eval_ppl(cfg, model, params, method=None)
+    d = {"bf16": base}
+    for m in ["nvfp4", "nvint4", "four_six", "mixfp4"]:
+        d[m] = common.eval_ppl(cfg, model, params, method=m)
+        common.emit(f"table3_tinylm_ppl_{m}", 0.0,
+                    f"ppl={d[m]:.4f};bf16={base:.4f}")
+    common.emit("table3_tinylm_order", 0.0,
+                f"mixfp4<=nvfp4={d['mixfp4'] <= d['nvfp4'] + 1e-6}")
+    return rows | {f"ppl_{k}": v for k, v in d.items()}
+
+
+# ---------------------------------------------------------------------------
+# Fig. 2/3: crest-factor heterogeneity (inter/intra tensor)
+# ---------------------------------------------------------------------------
+def bench_fig2_crest_stats():
+    key = jax.random.PRNGKey(2)
+    tensors = {
+        "weight_like": jax.random.normal(key, (512, 512)) * 0.02,
+        "act_flat": jax.random.uniform(jax.random.PRNGKey(3), (512, 512),
+                                       minval=-1, maxval=1),
+        "act_outlier": _mixed_tensor(jax.random.PRNGKey(4), (512, 512),
+                                     0.02, 12.0),
+    }
+    out = {}
+    for name, x in tensors.items():
+        c = analysis.crest_factor(x)
+        us = common.time_fn(jax.jit(analysis.crest_factor), x)
+        out[name] = (float(c.mean()), float(c.std()))
+        common.emit(f"fig2_crest_{name}", us,
+                    f"mean={out[name][0]:.3f};std={out[name][1]:.3f}")
+    # activations show higher spatial variability than weights (Fig. 2)
+    common.emit("fig2_variability_order", 0.0,
+                f"act_outlier_std>weight_std="
+                f"{out['act_outlier'][1] > out['weight_like'][1]}")
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Fig. 4/5: format-set ablation + selection skew, +-RHT
+# ---------------------------------------------------------------------------
+def bench_fig45_format_selection():
+    key = jax.random.PRNGKey(5)
+    x = _mixed_tensor(key, (512, 1024))
+    signs = hadamard.rht_signs(jax.random.PRNGKey(6), 1024)
+    xr = hadamard.rht(x, signs, axis=-1)
+    out = {}
+    # Fig. 4: adding E1M2 >> adding E3M0
+    e_base = float(jnp.mean((Q.qdq(x, "nvfp4") - x) ** 2))
+    e_e1 = float(jnp.mean((Q.qdq(x, "mixfp4") - x) ** 2))
+    e_e3 = float(jnp.mean((Q.qdq(x, "nvfp4_e3") - x) ** 2))
+    e_all = float(jnp.mean((Q.qdq(x, "mixfp4_e3") - x) ** 2))
+    gain_e1 = (e_base - e_e1) / e_base
+    gain_e3 = (e_base - e_e3) / e_base
+    common.emit("fig4_gain_add_e1m2", 0.0, f"rel_mse_gain={gain_e1:.4f}")
+    common.emit("fig4_gain_add_e3m0", 0.0, f"rel_mse_gain={gain_e3:.4f}")
+    common.emit("fig4_diminishing_returns", 0.0,
+                f"e1_gain>e3_gain={gain_e1 > gain_e3};"
+                f"full_vs_mix={(e_e1 - e_all) / e_e1:.4f}")
+    # Fig. 5: selection fractions skew, +-RHT
+    for name, xx in [("plain", x), ("rht", xr)]:
+        f = analysis.selection_fractions(xx, "mixfp4_e3")
+        out[name] = f.tolist()
+        common.emit(f"fig5_selection_{name}", 0.0,
+                    f"e2m1={f[0]:.3f};e1m2={f[1]:.3f};e3m0={f[2]:.3f}")
+    # RHT pushes selection toward INT-like (paper: skew strengthens)
+    common.emit("fig5_rht_shifts_to_e1m2", 0.0,
+                f"{out['rht'][1] >= out['plain'][1]}")
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Table 5: block-size sensitivity
+# ---------------------------------------------------------------------------
+def bench_table5_blocksize():
+    key = jax.random.PRNGKey(7)
+    x = _mixed_tensor(key, (256, 1024))
+    out = {}
+    for bs in [8, 16, 32, 64]:
+        row = {}
+        for m in ["nvfp4", "mixfp4", "nvfp4_e3", "mixfp4_e3"]:
+            q = float(analysis.qsnr(x, Q.qdq(x, m, block=bs)))
+            row[m] = q
+        out[bs] = row
+        common.emit(f"table5_bs{bs}", 0.0,
+                    ";".join(f"{m}={v:.2f}" for m, v in row.items()))
+    # paper: at g=16 E2+E1 ~ full mixture; at g=64 E3 catches up
+    gap16 = out[16]["mixfp4_e3"] - out[16]["mixfp4"]
+    gap64 = out[64]["mixfp4_e3"] - out[64]["mixfp4"]
+    common.emit("table5_trend", 0.0,
+                f"gap16={gap16:.3f};gap64={gap64:.3f};"
+                f"e3_helps_more_at_64={gap64 >= gap16 - 0.05}")
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Table 7 / App. D: stochastic rounding ablation
+# ---------------------------------------------------------------------------
+def bench_table7_sr():
+    g = jax.random.normal(jax.random.PRNGKey(8), (512, 256)) * 0.1
+    # bias of the quantized-gradient estimator over many draws
+    rne = Q.qdq(g, "mixfp4", rounding="rne")
+    bias_rne = float(jnp.abs(jnp.mean(rne - g)))
+    srs = [Q.qdq(g, "mixfp4", rounding="sr", key=jax.random.PRNGKey(i))
+           for i in range(24)]
+    sr_mean = jnp.mean(jnp.stack([s - g for s in srs]))
+    bias_sr = float(jnp.abs(sr_mean))
+    common.emit("table7_grad_bias_rne", 0.0, f"bias={bias_rne:.2e}")
+    common.emit("table7_grad_bias_sr", 0.0, f"bias={bias_sr:.2e}")
+    common.emit("table7_sr_less_biased", 0.0, f"{bias_sr < bias_rne + 1e-9}")
+    return {"rne": bias_rne, "sr": bias_sr}
+
+
+# ---------------------------------------------------------------------------
+# Appendix A: QSNR crossover
+# ---------------------------------------------------------------------------
+def bench_appendix_a():
+    us = common.time_fn(lambda: analysis.qsnr_crossover(), iters=3)
+    k, r, q = analysis.qsnr_crossover()
+    common.emit("appendixA_crossover", us,
+                f"kappa={k:.15f};R={r:.12e};qsnr_db={q:.10f}")
+    return {"kappa": k}
+
+
+# ---------------------------------------------------------------------------
+# Fig. 12 / App. B: tensor-core NAND-gate cost model
+# ---------------------------------------------------------------------------
+def bench_fig12_hardware_model():
+    """Reproduce Eq. 40-50: incremental NAND cost of MixFP4 support."""
+    G_NOT, G_AND2, G_OR2, G_HA, G_FA = 1, 2, 2, 5, 12
+    G_MUX2 = 2 * G_AND2 + G_OR2 + G_NOT          # = 7 NAND (Eq. 47)
+    assert G_MUX2 == 7
+    # Eq. 48: dual-mode decode per FP4 element
+    dG_elem = 2 * G_MUX2 + 2 * G_AND2            # = 18
+    # Eq. 49: per block dot, A+B operands = 16 elements
+    dG_block = 16 * dG_elem                      # = 288
+    # Eq. 50: E2M1->E2M2 multiplier/adder/aligner growth
+    dG_mult = (8 * 9 - 8 * 4) * G_FA             # 40 FA
+    dG_add = (8 * 12 - 8 * 10) * G_FA            # 16 FA
+    dG_align = (8 * 40 - 8 * 30) * G_MUX2        # 80 MUX
+    total = dG_block + dG_mult + dG_add + dG_align
+    common.emit("fig12_nand_decode", 0.0, f"nand={dG_block}")
+    common.emit("fig12_nand_datapath", 0.0,
+                f"mult={dG_mult};add={dG_add};align={dG_align}")
+    common.emit("fig12_nand_total", 0.0,
+                f"nand={total};paper=1520;match={total == 1520}")
+
+    # baseline slice (Table 2/6 model) for the relative-overhead figure:
+    # 4x E8M10 + 4x E5M3 + 8x E2M1 multipliers + shared adder tree
+    def fp_mac(k, x, y, n):
+        mult = k * (y + 1) ** 2 * G_FA / 2 + k * x * G_FA  # coarse Table 6
+        add = k * n * G_FA + k * x * (G_FA + 5) + k * n * \
+            max(math.log2(n), 1) * G_MUX2
+        return mult + add
+
+    base = fp_mac(4, 8, 10, 32) + fp_mac(4, 5, 3, 16) + fp_mac(8, 2, 1, 8)
+    rel_area = total / base
+    common.emit("fig12_relative_overhead", 0.0,
+                f"rel_area={rel_area:.4f};paper_area=0.031;"
+                f"order_of_magnitude_ok={0.003 < rel_area < 0.3}")
+    return {"nand": total, "rel_area": rel_area}

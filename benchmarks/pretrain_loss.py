@@ -1,0 +1,69 @@
+"""Fig. 10/11: pretraining-loss comparison BF16 vs NVFP4 vs 4/6 vs MixFP4.
+
+A scaled-down Qwen3-style model (same family as the paper's 114M: qk-norm,
+GQA, SwiGLU, RoPE) trains from identical init/data under each GEMM format;
+the claim validated is the paper's ordering in the late stage:
+    BF16 <= MixFP4 <= 4/6 <= NVFP4   (loss; Figs. 10b/11b)
+with stochastic rounding + RHT active exactly as Fig. 7 prescribes.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks import common
+from repro.core.qgemm import QuantConfig
+from repro.data import DataConfig, make_stream
+from repro.models.base import ArchConfig, Ctx, build_model
+from repro.optim import AdamWConfig, adamw_init, adamw_update
+
+
+def _train(method: str, steps: int, cfg0: ArchConfig):
+    cfg = cfg0.replace(quant=QuantConfig(method=method))
+    model = build_model(cfg)
+    params, _ = model.init(jax.random.PRNGKey(0))
+    opt_cfg = AdamWConfig()
+    opt = adamw_init(params)
+    stream = make_stream(DataConfig(vocab=cfg.vocab, seq_len=64,
+                                    batch_per_shard=8, seed=11))
+
+    @jax.jit
+    def step(params, opt, batch, k):
+        c = Ctx(k, cfg.quant)
+        loss, g = jax.value_and_grad(
+            lambda p: model.loss(p, batch, c))(params)
+        params, opt, _ = adamw_update(opt_cfg, params, opt, g, 3e-3)
+        return params, opt, loss
+
+    losses = []
+    for i in range(steps):
+        batch = {k: jnp.asarray(v) for k, v in stream.batch(i).items()}
+        params, opt, loss = step(params, opt, batch,
+                                 jax.random.PRNGKey(7000 + i))
+        losses.append(float(loss))
+    return losses
+
+
+def bench_fig10_pretrain(steps: int = 80):
+    cfg0 = ArchConfig(name="qwen3ish", family="dense", n_layers=2,
+                      d_model=128, n_heads=4, n_kv_heads=2, d_ff=256,
+                      vocab=256, qk_norm=True, attn_chunk=128)
+    curves = {}
+    for m in ["bf16", "nvfp4", "four_six", "mixfp4"]:
+        curves[m] = _train(m, steps, cfg0)
+        tail = float(np.mean(curves[m][-10:]))
+        common.emit(f"fig10_final_loss_{m}", 0.0, f"loss_tail10={tail:.4f}")
+    tails = {m: float(np.mean(c[-10:])) for m, c in curves.items()}
+    ok_bf16 = tails["bf16"] <= min(tails[m] for m in
+                                   ["nvfp4", "four_six", "mixfp4"]) + 0.02
+    ok_mix = tails["mixfp4"] <= tails["nvfp4"] + 0.02
+    common.emit("fig10_ordering", 0.0,
+                f"bf16_best={ok_bf16};mixfp4<=nvfp4={ok_mix};"
+                f"gap_mix_vs_nvfp4={tails['nvfp4'] - tails['mixfp4']:.4f}")
+    np_curves = {m: np.asarray(c) for m, c in curves.items()}
+    import os
+    out = os.path.join(os.path.dirname(__file__), "..", "artifacts")
+    os.makedirs(out, exist_ok=True)
+    np.savez(os.path.join(out, "pretrain_curves.npz"), **np_curves)
+    return tails

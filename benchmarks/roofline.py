@@ -1,0 +1,173 @@
+"""§Roofline: three-term roofline per (arch x shape) from dry-run artifacts.
+
+    compute term    = FLOPs / (chips * 197e12)          [s]
+    memory term     = HBM bytes / (chips * 819e9)       [s]
+    collective term = collective bytes / (chips-link * 50e9) [s]
+
+Sources (see EXPERIMENTS.md §Roofline for the full methodology):
+  * FLOPs: exact jaxpr walk (launch/flops.py) — XLA's cost_analysis counts
+    while bodies once, so it is recorded only as `flops_hlo_once`,
+  * HBM bytes: cost_analysis 'bytes accessed' corrected by the loop-body
+    multiplier (flops_exact / flops_hlo_once), a documented approximation,
+  * collective bytes: trip-count-weighted HLO parse (hlo_analysis.py);
+    per-device payload bytes over the 50 GB/s ICI link (cross-pod traffic
+    is priced on the same link constant, conservatively).
+
+MODEL_FLOPS = 6*N*D (dense) / 6*N_active*D (MoE) for train; 2*N*D for
+decode/prefill — the useful-FLOP ratio exposes quantization-sim + remat
+overhead.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+import numpy as np
+
+from benchmarks import common
+from repro import configs
+from repro.configs import shapes as shp
+
+HW_FLOPS = 197e12
+HW_HBM = 819e9
+HW_ICI = 50e9
+
+ART = os.path.join(os.path.dirname(__file__), "..", "artifacts", "dryrun")
+
+
+def _param_counts(arch: str):
+    from repro.models.base import build_model
+    import jax
+    cfg = configs.full_config(arch)
+    model = build_model(cfg)
+    sds = jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0))[0])
+    n_total = sum(int(np.prod(x.shape)) for x in jax.tree.leaves(sds))
+    if cfg.n_experts:
+        per_expert = 3 * cfg.d_model * cfg.d_ff_expert * cfg.n_layers
+        active = n_total - per_expert * cfg.n_experts \
+            + per_expert * cfg.top_k
+    else:
+        active = n_total
+    return cfg, n_total, active
+
+
+def model_flops(arch: str, shape_name: str) -> float:
+    """Analytic useful FLOPs (global) for the cell."""
+    cfg, n_total, active = _param_counts(arch)
+    s = shp.SHAPES[shape_name]
+    tokens = s.seq * s.batch
+    if s.kind == "train":
+        return 6.0 * active * tokens
+    if s.kind == "prefill":
+        return 2.0 * active * tokens
+    return 2.0 * active * s.batch  # decode: one token per sequence
+
+
+def analytic_hbm_bytes(arch: str, shape_name: str, chips: int = 256) -> float:
+    """Per-device HBM traffic model (documented in EXPERIMENTS.md §Roofline).
+
+    XLA's 'bytes accessed' at opt0 counts unfused per-op IO (353 GB/device
+    for a 114M model) and while-bodies once — useless as traffic.  This
+    model counts, per device per step:
+
+    train (FSDP):   weights gathered bf16 x3 passes (fwd/dgrad/wgrad reads)
+                    + grads f32 + opt moments r/w (sharded)
+                    + activations: tokens_loc x d x L x 2B x alpha
+                      (alpha=8: fwd write+read, bwd recompute, QDQ r/w)
+    prefill (TP):   local weight shard reads x1 + KV cache writes
+                    + activations (alpha=4, no bwd)
+    decode (TP):    local weight shard read + KV cache read up to seq
+                    (window-limited for SWA; SSM state r/w instead)
+    """
+    cfg, n_total, active = _param_counts(arch)
+    s = shp.SHAPES[shape_name]
+    d, L = cfg.d_model, cfg.n_layers + cfg.n_dec_layers
+    if s.kind == "train":
+        tokens_loc = s.seq * s.batch / chips
+        w = 3 * 2 * n_total                     # FSDP: full weights, bf16, x3
+        opt = (4 * n_total + 2 * 2 * 4 * n_total) / chips  # grads + mu/nu r/w
+        act = tokens_loc * d * L * 2 * 8
+        return w + opt + act
+    # serving: weights sharded over model=16 (per-device shard read once)
+    w = 2 * n_total / 16
+    if s.kind == "prefill":
+        tokens_loc = s.seq * s.batch / 16       # data axis
+        kv = (2 * s.seq * cfg.n_kv_heads * cfg.dh * L * 2 * s.batch) / chips
+        act = tokens_loc * d * L * 2 * 4
+        return w + kv + act
+    # decode: one token, read the whole cache (sharded over chips)
+    eff_seq = min(s.seq, cfg.window) if cfg.window else s.seq
+    if cfg.family in ("ssm", "hybrid"):
+        di = cfg.ssm_expand * d
+        state = cfg.n_layers * s.batch * di * cfg.ssm_state * 4 * 2
+        kv = state / chips
+        if cfg.attn_period:
+            na = cfg.n_layers // cfg.attn_period + 1
+            kv += (2 * s.seq * cfg.n_heads * cfg.dh * na * 2 * s.batch) / chips
+    else:
+        kv = (2 * eff_seq * cfg.n_kv_heads * cfg.dh * L * 2 * s.batch) / chips
+    return w + kv
+
+
+def load_cells(mesh: str = "single", quant: str = "mixfp4"):
+    cells = {}
+    for f in glob.glob(os.path.join(ART, "*.json")):
+        r = json.load(open(f))
+        if r.get("mesh") != mesh or r.get("quant", "mixfp4") != quant:
+            continue
+        cells[(r["arch"], r["shape"])] = r
+    return cells
+
+
+def roofline_row(r: dict) -> dict | None:
+    if r.get("status") != "ok":
+        return None
+    chips = r["n_devices"]
+    fl = r["flops_exact"] if r["flops_exact"] > 0 else r["flops_hlo_once"]
+    t_compute = fl / (chips * HW_FLOPS)
+    hbm_bytes = analytic_hbm_bytes(r["arch"], r["shape"], chips)
+    t_memory = hbm_bytes / HW_HBM
+    t_coll = r["collectives"]["total_bytes"] / HW_ICI
+    mf = model_flops(r["arch"], r["shape"])
+    terms = {"compute": t_compute, "memory": t_memory,
+             "collective": t_coll}
+    dom = max(terms, key=terms.get)
+    bound = max(terms.values())
+    return {
+        "arch": r["arch"], "shape": r["shape"],
+        "t_compute_s": t_compute, "t_memory_s": t_memory,
+        "t_collective_s": t_coll, "dominant": dom,
+        "model_flops": mf, "hlo_flops": fl,
+        "useful_ratio": mf / fl if fl else 0.0,
+        "roofline_fraction": t_compute / bound if bound else 0.0,
+        "fits_hbm": (r["memory"]["temp_size_in_bytes"]
+                     + r["memory"]["argument_size_in_bytes"]) < 16e9,
+    }
+
+
+def bench_roofline(mesh: str = "single"):
+    rows = []
+    for (arch, shape), r in sorted(load_cells(mesh).items()):
+        row = roofline_row(r)
+        if row is None:
+            common.emit(f"roofline_{arch}_{shape}", 0.0,
+                        f"status={r.get('status')};"
+                        f"reason={r.get('reason', r.get('error', ''))[:60]}")
+            continue
+        rows.append(row)
+        common.emit(
+            f"roofline_{arch}_{shape}", 0.0,
+            f"compute={row['t_compute_s']:.3e}s;"
+            f"memory={row['t_memory_s']:.3e}s;"
+            f"collective={row['t_collective_s']:.3e}s;"
+            f"dominant={row['dominant']};"
+            f"useful_ratio={row['useful_ratio']:.2f};"
+            f"roofline_frac={row['roofline_fraction']:.2f};"
+            f"fits={row['fits_hbm']}")
+    if rows:
+        out = os.path.join(os.path.dirname(__file__), "..", "artifacts",
+                           f"roofline_{mesh}.json")
+        with open(out, "w") as f:
+            json.dump(rows, f, indent=1)
+    return rows

@@ -1,0 +1,50 @@
+"""Benchmark harness — one entry per paper table/figure + roofline.
+
+Prints ``name,us_per_call,derived`` CSV rows.  The roofline section reads
+whatever dry-run artifacts exist (run ``python -m repro.launch.dryrun --all``
+first for the full table).
+"""
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+    from benchmarks import common
+    print("name,us_per_call,derived")
+
+    from benchmarks import (kernels_bench, paper_tables, pretrain_loss,
+                            ptq_pipelines, roofline)
+    sections = [
+        ("appendixA", paper_tables.bench_appendix_a),
+        ("fig2_crest", paper_tables.bench_fig2_crest_stats),
+        ("fig4_5_selection", paper_tables.bench_fig45_format_selection),
+        ("table5_blocksize", paper_tables.bench_table5_blocksize),
+        ("table7_sr", paper_tables.bench_table7_sr),
+        ("fig12_hw", paper_tables.bench_fig12_hardware_model),
+        ("kernel_quant", kernels_bench.bench_quant_kernel),
+        ("kernel_gemm", kernels_bench.bench_gemm_w4a16),
+        ("kernel_qdq_cost", kernels_bench.bench_qdq_cost_vs_single_format),
+        ("table3_rtn", paper_tables.bench_table3_rtn_formats),
+        ("table4_pipelines", ptq_pipelines.bench_table4_pipelines),
+        ("fig10_pretrain", pretrain_loss.bench_fig10_pretrain),
+        ("roofline", roofline.bench_roofline),
+    ]
+
+    failures = []
+    for name, fn in sections:
+        try:
+            fn()
+        except Exception as e:
+            traceback.print_exc()
+            failures.append(name)
+            common.emit(f"{name}_FAILED", 0.0, repr(e)[:120])
+    if failures:
+        print(f"# {len(failures)} benchmark sections failed: {failures}",
+              file=sys.stderr)
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,70 @@
+"""Batched serving with packed MixFP4 weights (deliverable b, serving kind).
+
+Brings up a small LM, packs its weights into the paper's 4.5-bit wire
+format, and serves a stream of batched requests through the continuous-
+batching engine (greedy decode, slot reuse), reporting tokens/s and the
+weight-memory compression.
+
+Run:  PYTHONPATH=src python examples/serve.py [--requests 6] [--new-tokens 8]
+"""
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.core.qgemm import QuantConfig
+from repro.models.base import ArchConfig, Ctx, build_model, param_count
+from repro.serving.engine import Request, ServeEngine
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--requests", type=int, default=6)
+    ap.add_argument("--new-tokens", type=int, default=8)
+    ap.add_argument("--batch", type=int, default=4)
+    args = ap.parse_args()
+
+    cfg = ArchConfig(name="serve-demo", family="dense", n_layers=2,
+                     d_model=128, n_heads=4, n_kv_heads=2, d_ff=256,
+                     vocab=256, attn_chunk=128,
+                     quant=QuantConfig(method="mixfp4"))
+    model = build_model(cfg)
+    params, _ = model.init(jax.random.PRNGKey(0))
+    print(f"model: {param_count(params)/1e6:.2f}M params")
+
+    engine = ServeEngine(cfg, params, batch_size=args.batch, max_len=64)
+    print(f"packed MixFP4 weights: {engine.compression:.2f}x smaller than "
+          f"bf16 ({engine.packed_bytes/1024:.0f} KiB vs "
+          f"{engine.dense_bytes/1024:.0f} KiB)")
+
+    rng = np.random.RandomState(0)
+    pending = [Request(uid=i,
+                       prompt=rng.randint(0, cfg.vocab, size=6).astype(np.int32),
+                       max_new_tokens=args.new_tokens)
+               for i in range(args.requests)]
+
+    t0 = time.time()
+    done_tokens = 0
+    active = 0
+    while pending or active:
+        while pending and engine.add_request(pending[0]):
+            print(f"  admitted request {pending[0].uid}")
+            pending.pop(0)
+            active += 1
+        out = engine.step()
+        done_tokens += len(out)
+        finished = [u for u, _ in out
+                    if all(s is None or s.uid != u for s in engine.slots)]
+        for u in finished:
+            print(f"  request {u} finished")
+            active -= 1
+        if not out and not pending:
+            break
+    dt = time.time() - t0
+    print(f"\nserved {args.requests} requests, {done_tokens} tokens "
+          f"in {dt:.1f}s ({done_tokens/dt:.1f} tok/s on CPU interpret mode)")
+
+
+if __name__ == "__main__":
+    main()

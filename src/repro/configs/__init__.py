@@ -1,0 +1,38 @@
+"""Architecture registry: one module per assigned arch (+ the paper's own
+pretraining models).  Each module exposes ``config()`` (the exact published
+configuration) and ``smoke_config()`` (a reduced same-family config for CPU
+smoke tests)."""
+from __future__ import annotations
+
+import importlib
+
+ARCH_IDS = [
+    "qwen2_moe_a2_7b",
+    "qwen3_moe_30b_a3b",
+    "internvl2_2b",
+    "falcon_mamba_7b",
+    "seamless_m4t_medium",
+    "phi3_medium_14b",
+    "starcoder2_15b",
+    "gemma2_2b",
+    "h2o_danube_3_4b",
+    "zamba2_1_2b",
+]
+
+PAPER_IDS = ["mixfp4_114m", "mixfp4_476m"]
+
+_ALIAS = {i.replace("_", "-"): i for i in ARCH_IDS + PAPER_IDS}
+
+
+def get_arch(name: str):
+    """Return the config module for an arch id (dash or underscore form)."""
+    mod_name = _ALIAS.get(name, name).replace("-", "_").replace(".", "_")
+    return importlib.import_module(f"repro.configs.{mod_name}")
+
+
+def full_config(name: str):
+    return get_arch(name).config()
+
+
+def smoke_config(name: str):
+    return get_arch(name).smoke_config()

@@ -1,0 +1,27 @@
+"""Falcon-Mamba-7B [arXiv:2410.05355] — attention-free Mamba-1 stack.
+
+64L d_model=4096, d_inner=8192 (expand 2), ssm_state=16, conv 4,
+vocab=65024.  MixFP4 applies to the projection GEMMs; the selective-scan
+recurrence is not a GEMM and stays bf16/f32 (DESIGN.md §Arch-applicability).
+SSM => O(1)-state decode: this arch RUNS long_500k."""
+from repro.models.base import ArchConfig
+
+
+def config() -> ArchConfig:
+    return ArchConfig(
+        name="falcon-mamba-7b", family="ssm",
+        n_layers=64, d_model=4096, n_heads=1, n_kv_heads=1,
+        d_ff=0, vocab=65024,
+        ssm_state=16, ssm_conv=4, ssm_expand=2, ssm_version=1,
+        ssm_chunk=128,
+    )
+
+
+def smoke_config() -> ArchConfig:
+    return ArchConfig(
+        name="falcon-mamba-smoke", family="ssm",
+        n_layers=2, d_model=64, n_heads=1, n_kv_heads=1,
+        d_ff=0, vocab=256,
+        ssm_state=4, ssm_conv=4, ssm_expand=2, ssm_version=1,
+        ssm_chunk=16,
+    )

@@ -1,0 +1,26 @@
+"""InternVL2-2B [arXiv:2404.16821] — InternViT + InternLM2 backbone.
+
+The brief specifies the transformer BACKBONE only; the vision frontend is a
+stub (input_specs provides precomputed patch embeddings).
+24L d_model=2048 16H (kv=8) d_ff=8192 vocab=92553."""
+from repro.models.base import ArchConfig
+
+N_PATCHES = 256  # precomputed ViT patch embeddings prepended to the text
+
+
+def config() -> ArchConfig:
+    return ArchConfig(
+        name="internvl2-2b", family="vlm",
+        n_layers=24, d_model=2048, n_heads=16, n_kv_heads=8,
+        d_ff=8192, vocab=92553, rope_theta=1_000_000.0,
+        n_prefix_embeds=N_PATCHES, frontend="vision",
+    )
+
+
+def smoke_config() -> ArchConfig:
+    return ArchConfig(
+        name="internvl2-smoke", family="vlm",
+        n_layers=2, d_model=64, n_heads=4, n_kv_heads=2,
+        d_ff=128, vocab=256,
+        n_prefix_embeds=8, frontend="vision", attn_chunk=64,
+    )

@@ -1,0 +1,24 @@
+"""SeamlessM4T-medium [arXiv:2308.11596] — encoder-decoder, multimodal.
+
+12L encoder + 12L decoder, d_model=1024, 16H (kv=16), d_ff=4096,
+vocab=256206.  The audio frontend is a stub: input_specs provides
+precomputed frame embeddings as encoder input."""
+from repro.models.base import ArchConfig
+
+
+def config() -> ArchConfig:
+    return ArchConfig(
+        name="seamless-m4t-medium", family="encdec",
+        n_layers=12, n_dec_layers=12, d_model=1024,
+        n_heads=16, n_kv_heads=16, d_ff=4096, vocab=256206,
+        frontend="audio",
+    )
+
+
+def smoke_config() -> ArchConfig:
+    return ArchConfig(
+        name="seamless-smoke", family="encdec",
+        n_layers=2, n_dec_layers=2, d_model=64,
+        n_heads=4, n_kv_heads=4, d_ff=128, vocab=256,
+        frontend="audio", attn_chunk=64,
+    )

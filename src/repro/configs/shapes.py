@@ -1,0 +1,97 @@
+"""Assigned input shapes and their applicability per architecture.
+
+Four shapes per LM arch (seq_len x global_batch):
+  train_4k     4,096 x 256   -> train_step
+  prefill_32k  32,768 x 32   -> prefill_step (fwd + KV-cache write)
+  decode_32k   32,768 x 128  -> serve_step (1 new token, cache of seq_len)
+  long_500k    524,288 x 1   -> serve_step; needs sub-quadratic attention
+
+long_500k runs only for SSM/hybrid/pure-SWA archs (falcon-mamba, zamba2,
+h2o-danube); pure full/global-attention archs skip it (DESIGN.md §5).
+Encoder-decoder archs run decode shapes on the decoder side.
+
+Decode semantics: the cache holds seq_len-1 tokens; the step appends one
+token at index seq_len-1 and attends over the full seq_len window.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.base import ArchConfig
+
+
+@dataclass(frozen=True)
+class Shape:
+    name: str
+    kind: str      # train | prefill | decode
+    seq: int
+    batch: int
+
+
+SHAPES = {
+    "train_4k": Shape("train_4k", "train", 4_096, 256),
+    "prefill_32k": Shape("prefill_32k", "prefill", 32_768, 32),
+    "decode_32k": Shape("decode_32k", "decode", 32_768, 128),
+    "long_500k": Shape("long_500k", "decode", 524_288, 1),
+}
+
+
+def applicable(cfg: ArchConfig, shape_name: str) -> tuple[bool, str]:
+    """(runs?, reason).  Mirrors DESIGN.md §5."""
+    if shape_name != "long_500k":
+        return True, "ok"
+    if cfg.family in ("ssm", "hybrid"):
+        return True, "ssm/hybrid: O(1)-state or linear-memory decode"
+    if cfg.window and not cfg.local_global_period:
+        return True, "pure SWA: bounded window cache"
+    if cfg.local_global_period:
+        return False, "alternating local/GLOBAL attention is quadratic at 500k"
+    return False, "pure full attention is quadratic at 500k"
+
+
+def token_inputs(cfg: ArchConfig, shape: Shape, *, reduced: bool = False):
+    """ShapeDtypeStructs for the data-side inputs of the entry point.
+
+    ``reduced`` shrinks seq/batch for CPU smoke use of the same code path.
+    """
+    s = min(shape.seq, 64) if reduced else shape.seq
+    b = min(shape.batch, 2) if reduced else shape.batch
+    i32 = jnp.int32
+    sd = jax.ShapeDtypeStruct
+
+    if shape.kind == "train":
+        if cfg.family == "encdec":
+            return {
+                "src_embeds": sd((b, s, cfg.d_model), jnp.bfloat16),
+                "tokens": sd((b, s), i32),
+                "labels": sd((b, s), i32),
+            }
+        if cfg.n_prefix_embeds:
+            st = s - cfg.n_prefix_embeds
+            return {
+                "tokens": sd((b, st), i32),
+                "prefix": sd((b, cfg.n_prefix_embeds, cfg.d_model),
+                             jnp.bfloat16),
+                "labels": sd((b, st), i32),
+            }
+        return {"tokens": sd((b, s), i32), "labels": sd((b, s), i32)}
+
+    if shape.kind == "prefill":
+        if cfg.family == "encdec":
+            return {
+                "src_embeds": sd((b, s, cfg.d_model), jnp.bfloat16),
+                "tokens": sd((b, s), i32),
+            }
+        if cfg.n_prefix_embeds:
+            return {
+                "tokens": sd((b, s - cfg.n_prefix_embeds), i32),
+                "prefix": sd((b, cfg.n_prefix_embeds, cfg.d_model),
+                             jnp.bfloat16),
+            }
+        return {"tokens": sd((b, s), i32)}
+
+    # decode: one token per sequence
+    return {"tokens": sd((b,), i32)}

@@ -1,0 +1,27 @@
+"""Zamba2-1.2B [arXiv:2411.15242] — Mamba-2 backbone + shared attn blocks.
+
+38L d_model=2048, ssm_state=64 (Mamba-2/SSD, head_dim 64), with a SHARED
+transformer block (32H, head_dim=128, d_ff=8192 on concat(x, x_embed))
+applied every 6 layers, vocab=32000.  Hybrid -> RUNS long_500k (SSM states
++ linear-memory shared-attn KV)."""
+from repro.models.base import ArchConfig
+
+
+def config() -> ArchConfig:
+    return ArchConfig(
+        name="zamba2-1.2b", family="hybrid",
+        n_layers=38, d_model=2048, n_heads=32, n_kv_heads=32, head_dim=128,
+        d_ff=8192, vocab=32000,
+        ssm_state=64, ssm_conv=4, ssm_expand=2, ssm_version=2,
+        ssm_head_dim=64, ssm_chunk=64, attn_period=6,
+    )
+
+
+def smoke_config() -> ArchConfig:
+    return ArchConfig(
+        name="zamba2-smoke", family="hybrid",
+        n_layers=3, d_model=64, n_heads=4, n_kv_heads=4, head_dim=32,
+        d_ff=128, vocab=256,
+        ssm_state=8, ssm_conv=4, ssm_expand=2, ssm_version=2,
+        ssm_head_dim=16, ssm_chunk=16, attn_period=2, attn_chunk=64,
+    )

@@ -1,0 +1,104 @@
+"""Statistical analysis tools: crest factor, QSNR, the Appendix-A crossover.
+
+Reproduces:
+  - the crest-factor metric of Fig. 2/3 (per-block peak / RMS),
+  - QSNR (Eq. 4),
+  - the NVINT4-vs-NVFP4 QSNR crossover kappa* = 2.224277301764024 (Appendix A,
+    Eq. 30-33) via the exact closed forms and a numeric root find,
+  - per-block format-selection statistics (Fig. 5 machinery).
+"""
+from __future__ import annotations
+
+import math
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from scipy import optimize, special
+
+from repro.core import quantize as Q
+
+__all__ = [
+    "crest_factor",
+    "qsnr",
+    "r_nvint4",
+    "r_nvfp4",
+    "qsnr_crossover",
+    "selection_fractions",
+]
+
+
+def crest_factor(x: jax.Array, *, block: int = 16, axis: int = -1) -> jax.Array:
+    """Within-block crest factor kappa = max|x| / RMS(x) (Eq. 3), per block."""
+    xb, _, _ = Q._to_blocks_1d(jnp.asarray(x, jnp.float32), block, axis)
+    peak = jnp.max(jnp.abs(xb), axis=-1)
+    rms = jnp.sqrt(jnp.mean(jnp.square(xb), axis=-1))
+    return jnp.where(rms > 0, peak / rms, 0.0)
+
+
+def qsnr(x: jax.Array, x_hat: jax.Array) -> jax.Array:
+    """QSNR in dB (Eq. 4): -10 log10(||x - x_hat||^2 / ||x||^2)."""
+    num = jnp.sum(jnp.square(x - x_hat))
+    den = jnp.sum(jnp.square(x))
+    return -10.0 * jnp.log10(num / den)
+
+
+# ---------------------------------------------------------------------------
+# Appendix A: analytic relative-MSE models under the Gaussian block assumption.
+# ---------------------------------------------------------------------------
+_G = 16          # block size
+_Q_INT = 7       # exact symmetric INT4 max code (Eq. 7)
+_ALPHA = 1.0 / 96.0     # Eq. 18 (M=1)
+_BETA = 1.0 / 1728.0    # Eq. 22
+
+
+def _phi(z: float) -> float:
+    return math.exp(-0.5 * z * z) / math.sqrt(2.0 * math.pi)
+
+
+def _Phi(z: float) -> float:
+    return 0.5 * (1.0 + special.erf(z / math.sqrt(2.0)))
+
+
+def r_nvint4(kappa: float, g: int = _G, q: int = _Q_INT) -> float:
+    """Eq. 12: relative MSE of NVINT4 with exact Q=7 and the (g-1)/g refinement."""
+    return (kappa / q) ** 2 / 12.0 * (g - 1) / g
+
+
+def r_nvfp4(kappa: float, g: int = _G) -> float:
+    """Eq. 24 with the closed forms of Eq. 26/29 (t = kappa/6)."""
+    t = kappa / 6.0
+    w_norm = 2.0 * (t * _phi(t) + 1.0 - _Phi(t))       # Eq. 29
+    p_sub = 2.0 * _Phi(t) - 1.0                        # Eq. 26
+    return _ALPHA * (w_norm - kappa * kappa / g) + _BETA * kappa * kappa * p_sub
+
+
+def qsnr_crossover(g: int = _G) -> tuple[float, float, float]:
+    """Solve Eq. 30 for kappa*; returns (kappa*, R*, QSNR* dB).
+
+    The paper reports kappa* = 2.224277301764024, R* = 0.007888089150418761,
+    QSNR* = 21.03028189684982 dB for g=16, Q=7.
+    """
+    f = lambda k: r_nvint4(k, g) - r_nvfp4(k, g)
+    kstar = optimize.brentq(f, 0.5, 6.0, xtol=1e-15, rtol=8.9e-16)
+    rstar = r_nvint4(kstar, g)
+    return kstar, rstar, -10.0 * math.log10(rstar)
+
+
+# ---------------------------------------------------------------------------
+# Format-selection statistics (Fig. 5): fraction of blocks picking each format.
+# ---------------------------------------------------------------------------
+def selection_fractions(
+    x: jax.Array,
+    method: str = "mixfp4",
+    *,
+    block: int = 16,
+    axis: int = -1,
+) -> np.ndarray:
+    """Quantize ``x`` and return the fraction of blocks selecting each
+    candidate format (in METHODS[method] order)."""
+    bq, _, _ = Q.block_quantize_1d(x, method, block=block, axis=axis)
+    ncand = len(Q.method_candidates(method))
+    sel = np.asarray(bq.type_bits).ravel()
+    return np.bincount(sel, minlength=ncand) / sel.size

@@ -1,0 +1,220 @@
+"""FP4 micro-format codebooks and rounding primitives (paper §2.1, §3.1, Table 1).
+
+Every format is described by its *magnitude codebook* — the non-negative values
+representable by the 3 payload bits (sign handled separately).  The paper's
+micro-formats:
+
+  E2M1 (bias 1)  : {0, 0.5, 1, 1.5, 2, 3, 4, 6}          — NVFP4 payload
+  E2M1(4)        : same lattice but AbsMax maps to 4      — Four-over-Six variant
+  E1M2 (bias 0)  : {0, 0.5, 1.0, 1.5, 2.0, 2.5, 3.0, 3.5} — uniform; x2 remap == INT4
+  E3M0 (bias 3)  : {0, 0.25, 0.5, 1, 2, 4, 8, 16}         — power-of-two levels
+  INT4 symmetric : {0, 1, 2, 3, 4, 5, 6, 7}               — NVINT4 payload
+
+Encodings follow Table 1 bit layouts exactly (S.E.M with subnormals at E=0), which
+the packing tests verify bit-for-bit.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "FP4Format",
+    "E2M1",
+    "E2M1_4",
+    "E1M2",
+    "E3M0",
+    "INT4",
+    "quantize_to_codebook",
+    "stochastic_round_to_codebook",
+    "e2m1_encode",
+    "e2m1_decode",
+    "e1m2_encode",
+    "e1m2_decode",
+    "decode_to_e2m2",
+    "E4M3_MAX",
+    "E4M3_MAX_E1M2_PATH",
+    "PER_TENSOR_DENOM",
+    "round_to_e4m3",
+    "e4m3_to_bits",
+    "bits_to_e4m3",
+]
+
+# ---------------------------------------------------------------------------
+# E4M3 constants (per-block scale format).  448 = 1.75 * 2^8 is the max finite
+# E4M3 magnitude; 384 = 1.5 * 2^8 is used for the E1M2 branch so that
+# 6 * 448 == 7 * 384 == 2688 (Algorithm 1, line 4).
+# ---------------------------------------------------------------------------
+E4M3_MAX = 448.0
+E4M3_MAX_E1M2_PATH = 384.0
+PER_TENSOR_DENOM = 2688.0  # = 6 * 448 = 7 * 384
+
+
+@dataclass(frozen=True)
+class FP4Format:
+    """A 4-bit micro-format: magnitude codebook + AbsMax anchor value."""
+
+    name: str
+    #: sorted non-negative representable magnitudes (8 entries incl. 0)
+    levels: tuple
+    #: block AbsMax maps to this value when computing the per-block scale
+    amax_target: float
+
+    @property
+    def max_level(self) -> float:
+        return self.levels[-1]
+
+    def levels_array(self, dtype=jnp.float32) -> jax.Array:
+        return jnp.asarray(self.levels, dtype=dtype)
+
+
+E2M1 = FP4Format("e2m1", (0.0, 0.5, 1.0, 1.5, 2.0, 3.0, 4.0, 6.0), 6.0)
+# Four-over-Six: identical lattice, but the block max is mapped to 4 (values
+# above 4 saturate to 6 only via scale rounding).  Used as the "4" candidate of
+# the 4/6 baseline (Cook et al., 2025).
+E2M1_4 = FP4Format("e2m1_4", (0.0, 0.5, 1.0, 1.5, 2.0, 3.0, 4.0, 6.0), 4.0)
+# E1M2 stored magnitudes are {0 .. 3.5}; the fixed x2 decode remap (paper §3.1,
+# Fig. 6) makes the *effective* lattice {0 .. 7}.  We work in the effective
+# (remapped) domain everywhere outside bit-packing, so levels are integers.
+E1M2 = FP4Format("e1m2", (0.0, 1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0), 7.0)
+E3M0 = FP4Format("e3m0", (0.0, 0.25, 0.5, 1.0, 2.0, 4.0, 8.0, 16.0), 16.0)
+INT4 = FP4Format("int4", (0.0, 1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0), 7.0)
+
+
+# ---------------------------------------------------------------------------
+# Rounding onto a codebook.
+# ---------------------------------------------------------------------------
+def _midpoints(levels: jax.Array) -> jax.Array:
+    return 0.5 * (levels[1:] + levels[:-1])
+
+
+def quantize_to_codebook(x: jax.Array, fmt: FP4Format) -> jax.Array:
+    """Round-to-nearest (ties toward the even *index*, matching hardware RNE on
+    the uniform lattices) of |x| onto ``fmt.levels``, preserving sign, with
+    saturation at the max level.
+
+    Uses searchsorted over the 7 midpoints — exact for arbitrary (non-uniform)
+    codebooks like E2M1/E3M0.
+    """
+    levels = fmt.levels_array(x.dtype)
+    mags = jnp.abs(x)
+    mids = _midpoints(levels)
+    # side='right' => value exactly at a midpoint rounds DOWN; we fix ties to
+    # even below.
+    idx = jnp.searchsorted(mids, mags, side="left")
+    # tie handling: if mag == midpoint[k], choose the even index of {k, k+1}
+    lo = jnp.clip(idx, 0, 6)
+    is_tie = mags == mids[lo]
+    tie_up = (lo % 2) == 1  # lower index odd -> upper index even -> round up
+    idx = jnp.where(is_tie & tie_up, lo + 1, idx)
+    idx = jnp.clip(idx, 0, 7)
+    q = levels[idx]
+    return jnp.sign(x) * q
+
+
+def stochastic_round_to_codebook(
+    x: jax.Array, fmt: FP4Format, key: jax.Array
+) -> jax.Array:
+    """Stochastic rounding onto ``fmt.levels`` (Appendix D).
+
+    |x| lands between levels L[k] <= |x| <= L[k+1]; round up with probability
+    (|x|-L[k]) / (L[k+1]-L[k]).  Unbiased: E[q] == clamp(|x|).
+    """
+    levels = fmt.levels_array(x.dtype)
+    mags = jnp.clip(jnp.abs(x), 0.0, fmt.max_level)
+    # index of the lower level: largest k with L[k] <= mags
+    k = jnp.clip(jnp.searchsorted(levels, mags, side="right") - 1, 0, 6)
+    lo = levels[k]
+    hi = levels[k + 1]
+    frac = jnp.where(hi > lo, (mags - lo) / (hi - lo), 0.0)
+    u = jax.random.uniform(key, x.shape, dtype=x.dtype)
+    q = jnp.where(u < frac, hi, lo)
+    return jnp.sign(x) * q
+
+
+# ---------------------------------------------------------------------------
+# Bit-level encode/decode (Table 1).  Payload convention: [s | p2 p1 p0].
+#   E2M1: e = p2 p1, m = p0, bias 1
+#   E1M2: e = p2,    m = p1 p0, bias 0
+# These are used by core/pack.py and kernels/; numerics elsewhere operate on
+# decoded values.
+# ---------------------------------------------------------------------------
+_E2M1_DECODE = np.array([0.0, 0.5, 1.0, 1.5, 2.0, 3.0, 4.0, 6.0], np.float32)
+# stored E1M2 magnitudes (pre-remap): index == payload
+_E1M2_STORED = np.array([0.0, 0.25, 0.5, 0.75, 1.0, 1.25, 1.5, 1.75], np.float32) * 2.0
+# effective (x2-remapped) magnitudes used by the compute path
+_E1M2_DECODE = np.array([0.0, 1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0], np.float32)
+
+
+def e2m1_encode(values: jax.Array) -> jax.Array:
+    """Signed values already on the E2M1 lattice -> uint8 nibbles [s|p2p1p0]."""
+    mags = jnp.abs(values)
+    levels = jnp.asarray(_E2M1_DECODE, values.dtype)
+    payload = jnp.argmin(jnp.abs(mags[..., None] - levels), axis=-1).astype(jnp.uint8)
+    sign = (values < 0).astype(jnp.uint8)
+    return (sign << 3) | payload
+
+
+def e2m1_decode(nibbles: jax.Array, dtype=jnp.float32) -> jax.Array:
+    payload = nibbles & 0x7
+    sign = (nibbles >> 3) & 0x1
+    mags = jnp.asarray(_E2M1_DECODE, dtype)[payload]
+    return jnp.where(sign == 1, -mags, mags)
+
+
+def e1m2_encode(values: jax.Array) -> jax.Array:
+    """Signed values on the *effective* (x2-remapped) E1M2 lattice {0..7} ->
+    uint8 nibbles.  The stored payload is the E1M2 bit pattern of value/2,
+    which by Table 1 is simply the integer level itself.
+    """
+    mags = jnp.abs(values)
+    payload = jnp.clip(jnp.round(mags), 0, 7).astype(jnp.uint8)
+    sign = (values < 0).astype(jnp.uint8)
+    return (sign << 3) | payload
+
+
+def e1m2_decode(nibbles: jax.Array, dtype=jnp.float32) -> jax.Array:
+    payload = nibbles & 0x7
+    sign = (nibbles >> 3) & 0x1
+    mags = jnp.asarray(_E1M2_DECODE, dtype)[payload]
+    return jnp.where(sign == 1, -mags, mags)
+
+
+def decode_to_e2m2(nibbles: jax.Array, type_bit: jax.Array, dtype=jnp.float32) -> jax.Array:
+    """The paper's Fig. 9 unified decoder: payload + block-shared T -> one
+    internal representation.  T=0 -> E2M1 (zero-pad mantissa / shift path),
+    T=1 -> E1M2 (LUT path incl. the x2 remap).  Every output is exactly
+    representable in E2M2 (and hence in bf16, our TPU internal format).
+
+    ``type_bit`` broadcasts against ``nibbles`` (block-shared).
+    """
+    v_e2m1 = e2m1_decode(nibbles, dtype)
+    v_e1m2 = e1m2_decode(nibbles, dtype)
+    return jnp.where(type_bit.astype(bool), v_e1m2, v_e2m1)
+
+
+# ---------------------------------------------------------------------------
+# E4M3 per-block scale helpers.  We lean on jnp.float8_e4m3fn for the rounding
+# (XLA convert = RNE with saturation to +-448, no inf) and bitcast for packing.
+# ---------------------------------------------------------------------------
+def round_to_e4m3(x: jax.Array) -> jax.Array:
+    """Round to nearest E4M3 value, returned in f32 (saturating at 448)."""
+    return x.astype(jnp.float8_e4m3fn).astype(jnp.float32)
+
+
+def e4m3_to_bits(x: jax.Array) -> jax.Array:
+    """f32 values (assumed E4M3-representable) -> uint8 bit patterns."""
+    return jax.lax.bitcast_convert_type(
+        x.astype(jnp.float8_e4m3fn), jnp.uint8
+    )
+
+
+def bits_to_e4m3(bits: jax.Array) -> jax.Array:
+    """uint8 bit patterns -> f32 values."""
+    return jax.lax.bitcast_convert_type(
+        bits.astype(jnp.uint8), jnp.float8_e4m3fn
+    ).astype(jnp.float32)

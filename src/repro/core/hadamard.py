@@ -1,0 +1,72 @@
+"""Fast Walsh-Hadamard transform and the random Hadamard transform (RHT).
+
+The paper applies an RHT to both inputs of the weight-gradient GEMM (Fig. 7,
+following the NVFP4 pretraining recipe) and studies RHT's effect on format
+selection (Fig. 5).  We implement the transform as a block-diagonal orthogonal
+operator: the target axis is split into groups of ``group`` elements (a power
+of two, matching the quantization block by default) and each group is hit by
+sign-randomized H_g / sqrt(g).
+
+Orthogonality gives exactness of the mixed GEMM in infinite precision:
+    (H D x)^T (H D y) = x^T y        for the SAME D and H on both operands,
+so the RHT only reshapes the *quantization* statistics (crest factors), which
+is precisely the paper's point.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["fwht", "rht", "rht_signs"]
+
+
+def fwht(x: jax.Array, *, axis: int = -1, normalize: bool = True) -> jax.Array:
+    """Fast Walsh-Hadamard transform along ``axis`` (length must be 2^k).
+
+    O(n log n) butterfly; the loop unrolls at trace time (log2(n) stages).
+    """
+    x = jnp.moveaxis(x, axis, -1)
+    n = x.shape[-1]
+    if n & (n - 1):
+        raise ValueError(f"FWHT length must be a power of two, got {n}")
+    lead = x.shape[:-1]
+    h = 1
+    while h < n:
+        x = x.reshape(*lead, n // (2 * h), 2, h)
+        a = x[..., 0, :]
+        b = x[..., 1, :]
+        x = jnp.concatenate([(a + b)[..., None, :], (a - b)[..., None, :]],
+                            axis=-2).reshape(*lead, n)
+        h *= 2
+    if normalize:
+        x = x * (n ** -0.5)
+    return jnp.moveaxis(x, -1, axis)
+
+
+def rht_signs(key: jax.Array, n: int, dtype=jnp.float32) -> jax.Array:
+    """Random +-1 diagonal for the RHT (one sign per position along the axis)."""
+    return jax.random.rademacher(key, (n,), dtype=dtype)
+
+
+def rht(
+    x: jax.Array,
+    signs: jax.Array,
+    *,
+    axis: int = -1,
+    group: int = 16,
+) -> jax.Array:
+    """Grouped random Hadamard transform along ``axis``.
+
+    ``signs`` has shape (axis_len,) and MUST be shared by both GEMM operands
+    for the transform to cancel in the dot product.  ``group`` is the
+    Hadamard size (defaults to the quantization block size g=16).
+    """
+    x = jnp.moveaxis(x, axis, -1)
+    n = x.shape[-1]
+    if n % group:
+        raise ValueError(f"axis length {n} not divisible by RHT group {group}")
+    x = x * signs.astype(x.dtype)
+    xg = x.reshape(*x.shape[:-1], n // group, group)
+    xg = fwht(xg, axis=-1)
+    x = xg.reshape(*x.shape[:-1], n)
+    return jnp.moveaxis(x, -1, axis)

@@ -1,0 +1,70 @@
+"""Bit-exact packed storage for MixFP4 tensors (Fig. 1 wire format).
+
+Storage layout per 1-D block of g=16 values:
+  - payload: 16 x 4-bit nibbles, packed two per byte (8 bytes)
+  - scale:   1 byte = {T | e4m3[6:0]}   (type bit in the sign position, §B.3)
+  - plus one FP32 per-tensor scale.
+
+Total: 4.5 bits/value + 4 bytes/tensor — identical to NVFP4, proving the
+paper's zero-metadata claim at the bit level.  ``unpack`` runs the paper's
+Fig. 9 decoder (E2M1 shift path vs E1M2 LUT path selected by T).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import formats, scaling
+from repro.core.quantize import BlockQuantized
+
+__all__ = ["PackedMixFP4", "pack_blocks", "unpack_blocks", "packed_nbytes"]
+
+
+class PackedMixFP4(NamedTuple):
+    """Packed block-quantized tensor (structure-of-arrays).
+
+    payload  (..., nblocks, g//2) uint8 — two FP4 nibbles per byte (lo=even idx)
+    scales   (..., nblocks)       uint8 — {T, e4m3[6:0]}
+    scale32  ()                   f32   — per-tensor scale
+    """
+
+    payload: jax.Array
+    scales: jax.Array
+    scale32: jax.Array
+
+
+def pack_blocks(bq: BlockQuantized) -> PackedMixFP4:
+    """Encode a BlockQuantized (MixFP4/NVFP4-family) into the wire format.
+
+    ``bq.values`` must lie on the candidate codebook selected by
+    ``bq.type_bits`` (0 -> E2M1 lattice, 1 -> effective INT lattice).
+    """
+    t = bq.type_bits[..., None]  # broadcast over block elements
+    nib_e2m1 = formats.e2m1_encode(bq.values)
+    nib_e1m2 = formats.e1m2_encode(bq.values)
+    nib = jnp.where(t.astype(bool), nib_e1m2, nib_e2m1)
+    lo = nib[..., 0::2]
+    hi = nib[..., 1::2]
+    payload = (lo | (hi << 4)).astype(jnp.uint8)
+    scales = scaling.pack_scale_with_type(bq.scale8, bq.type_bits)
+    return PackedMixFP4(payload, scales, bq.scale32.astype(jnp.float32))
+
+
+def unpack_blocks(p: PackedMixFP4, dtype=jnp.float32) -> jax.Array:
+    """Fig. 9 decode: nibbles + block-shared T -> unified values; then apply
+    the two-level scales.  Returns dequantized blocks (..., nblocks, g)."""
+    lo = p.payload & 0xF
+    hi = (p.payload >> 4) & 0xF
+    nib = jnp.stack([lo, hi], axis=-1).reshape(*p.payload.shape[:-1],
+                                               p.payload.shape[-1] * 2)
+    scale8, t = scaling.unpack_scale_and_type(p.scales)
+    vals = formats.decode_to_e2m2(nib, t[..., None], dtype=jnp.float32)
+    out = vals * scale8[..., None] * p.scale32
+    return out.astype(dtype)
+
+
+def packed_nbytes(p: PackedMixFP4) -> int:
+    """Wire bytes (payload + block scales + tensor scale)."""
+    return int(p.payload.size) + int(p.scales.size) + 4

@@ -1,0 +1,158 @@
+"""Quantized linear layer with the paper's Fig. 7 training flow.
+
+The three GEMMs of a linear layer run in simulated MixFP4 (green paths of
+Fig. 7) while the surrounding tensors stay high-precision:
+
+  FPROP :  Y  = Q(X) @ Q(W)            X blocked 1-D along K, W blocked 2-D
+  DGRAD :  dX = Q(dY) @ Q(W)^T         dY blocked 1-D along N; W's 2-D tiles
+                                        serve W and W^T identically
+  WGRAD :  dW = Q(RHT X)^T @ Q(RHT dY)  RHT with *shared* signs along the
+                                        token (contraction) axis; exact in
+                                        infinite precision, reshapes block
+                                        statistics at 4-bit (Fig. 5)
+
+Gradients are quantized with stochastic rounding (Appendix D); weights use a
+2-D (16x16) tile so FPROP and DGRAD see the same quantized weight.  Master
+weights are FP32 (kept by the optimizer); GEMM operands are cast to bf16 with
+f32 accumulation, modelling the FP4 tensor core's FP32 accumulate.
+
+`method='bf16'` degrades to a plain mixed-precision matmul (the BF16 baseline
+of Figs. 10/11).
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import hadamard, quantize as Q
+
+__all__ = ["QuantConfig", "qgemm", "quantized_matmul"]
+
+
+@dataclass(frozen=True)
+class QuantConfig:
+    """Static configuration of the quantized GEMM boundary (hashable)."""
+
+    method: str = "mixfp4"          # 'bf16'|'nvfp4'|'nvint4'|'four_six'|'mixfp4'|...
+    block: int = 16                  # 1-D block for activations/gradients
+    weight_block: tuple = (16, 16)   # 2-D weight tile (Fig. 7)
+    fwd_rounding: str = "rne"
+    grad_rounding: str = "sr"        # stochastic rounding on gradients (App. D)
+    wgrad_rht: bool = True           # RHT on both WGRAD inputs (Fig. 7)
+    rht_group: int = 16
+
+    @property
+    def is_quantized(self) -> bool:
+        return self.method != "bf16"
+
+
+def _mm(a: jax.Array, b: jax.Array) -> jax.Array:
+    """bf16 x bf16 -> f32-accumulated matmul (tensor-core model)."""
+    return jax.lax.dot_general(
+        a.astype(jnp.bfloat16),
+        b.astype(jnp.bfloat16),
+        (((a.ndim - 1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+
+def _rht_tokens(x: jax.Array, signs: jax.Array, group: int) -> jax.Array:
+    """RHT along axis 0 (tokens), zero-padding to a multiple of ``group``.
+
+    Zero rows stay zero under the block-diagonal transform only if padding is
+    aligned to whole groups; padded rows sit in their own groups when M is
+    group-aligned after padding, and any mixing among padded-zero rows is
+    still zero — so the padded region contributes nothing to the dot product.
+    """
+    m = x.shape[0]
+    pad = (-m) % group
+    if pad:
+        x = jnp.pad(x, ((0, pad),) + ((0, 0),) * (x.ndim - 1))
+    return hadamard.rht(x, signs, axis=0, group=group)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def qgemm(cfg: QuantConfig, x: jax.Array, w: jax.Array, key: jax.Array):
+    """y = x @ w through the quantized GEMM boundary.
+
+    x: (..., K) activations (bf16/f32);  w: (K, N) master weight (f32);
+    key: PRNG key consumed by stochastic rounding / RHT signs in the backward
+    pass (ignored for 'bf16' or pure-RNE configs).
+    """
+    y, _ = _qgemm_fwd(cfg, x, w, key)
+    return y
+
+
+def _fwd_quantize(cfg: QuantConfig, x, w):
+    # cast the FP32 master weight to bf16 at the boundary BEFORE quantizing:
+    # under FSDP the per-layer weight all-gather then moves bf16, not f32
+    # (negligible vs 4-bit rounding; recorded in EXPERIMENTS.md §Perf)
+    w16 = w.astype(jnp.bfloat16)
+    if not cfg.is_quantized:
+        return x, w16
+    xq = Q.qdq(x, cfg.method, block=cfg.block, axis=-1, rounding=cfg.fwd_rounding)
+    wq = Q.qdq_2d(w16, cfg.method, block=cfg.weight_block, rounding=cfg.fwd_rounding)
+    return xq, wq
+
+
+def _qgemm_fwd(cfg: QuantConfig, x, w, key):
+    xq, wq = _fwd_quantize(cfg, x, w)
+    y = _mm(xq, wq).astype(x.dtype)
+    return y, (x, w, key)
+
+
+def _qgemm_bwd(cfg: QuantConfig, res, dy):
+    x, w, key = res
+    kd, kw1, kw2, ks = jax.random.split(jax.random.fold_in(key, 0x6D78), 4)
+
+    if not cfg.is_quantized:
+        dx = jax.lax.dot_general(
+            dy.astype(jnp.bfloat16), w.astype(jnp.bfloat16).T,
+            (((dy.ndim - 1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32).astype(x.dtype)
+        xf = x.reshape(-1, x.shape[-1])
+        dyf = dy.reshape(-1, dy.shape[-1])
+        dw = _mm(xf.T, dyf).astype(w.dtype)
+        return dx, dw, _int_zero(key)
+
+    # ---- DGRAD: dX = Q_sr(dY) @ Q(W)^T  (contraction over N) -------------
+    dyq = Q.qdq(dy, cfg.method, block=cfg.block, axis=-1,
+                rounding=cfg.grad_rounding, key=kd)
+    wq = Q.qdq_2d(w.astype(jnp.bfloat16), cfg.method, block=cfg.weight_block,
+                  rounding=cfg.fwd_rounding)
+    dx = jax.lax.dot_general(
+        dyq.astype(jnp.bfloat16), wq.astype(jnp.bfloat16).T,
+        (((dy.ndim - 1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32).astype(x.dtype)
+
+    # ---- WGRAD: dW = Q(RHT X)^T @ Q_sr(RHT dY)  (contraction over tokens) -
+    xf = x.reshape(-1, x.shape[-1]).astype(jnp.float32)
+    dyf = dy.reshape(-1, dy.shape[-1]).astype(jnp.float32)
+    if cfg.wgrad_rht:
+        m_pad = xf.shape[0] + ((-xf.shape[0]) % cfg.rht_group)
+        signs = hadamard.rht_signs(ks, m_pad)
+        xf = _rht_tokens(xf, signs, cfg.rht_group)
+        dyf = _rht_tokens(dyf, signs, cfg.rht_group)
+    xfq = Q.qdq(xf, cfg.method, block=cfg.block, axis=0,
+                rounding=cfg.fwd_rounding)
+    dyfq = Q.qdq(dyf, cfg.method, block=cfg.block, axis=0,
+                 rounding=cfg.grad_rounding, key=kw2)
+    dw = _mm(xfq.T, dyfq).astype(w.dtype)
+    return dx, dw, _int_zero(key)
+
+
+def _int_zero(key):
+    """float0 cotangent for the integer PRNG key argument."""
+    return np.zeros(np.shape(key), dtype=jax.dtypes.float0)
+
+
+qgemm.defvjp(_qgemm_fwd, _qgemm_bwd)
+
+
+def quantized_matmul(x, w, key, cfg: QuantConfig):
+    """Convenience wrapper with arguments in data-first order."""
+    return qgemm(cfg, x, w, key)

@@ -1,0 +1,289 @@
+"""Block-scaled adaptive quantization — Algorithm 1 (MixFP4) and baselines.
+
+One engine implements every format in the paper:
+
+  nvfp4     : candidates = [E2M1]                      (Abecassis et al.)
+  nvint4    : candidates = [INT4]                      (paper §2.1 definition)
+  four_six  : candidates = [E2M1(6), E2M1(4)]          (Cook et al. 4/6)
+  mixfp4    : candidates = [E2M1(6), E1M2]             (the paper)
+  mixfp4_e3 : candidates = [E2M1(6), E1M2, E3M0]       (Fig. 4/5 ablation)
+  nvfp4_e3  : candidates = [E2M1(6), E3M0]             (Fig. 4 ablation)
+
+Per block (size g along the GEMM reduction axis — or a 2-D tile for weights),
+each candidate micro-format is evaluated under its own E4M3 scale
+(blockmax / amax_target) and the lowest-MSE candidate wins (Alg. 1 lines 7-23).
+The winning index is the type bit T, stored in the sign bit of the E4M3 scale
+byte by ``core.pack`` — zero metadata overhead.
+
+Blocks are laid along the *reduction* dimension of the consuming GEMM so that
+the block scale factors out of the dot product (Eq. 35): activations/grads are
+blocked 1-D along their contraction axis; weights are blocked 2-D (16x16,
+Fig. 7) so W and W^T share tiles.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import formats, scaling
+from repro.core.formats import FP4Format
+
+__all__ = [
+    "METHODS",
+    "BlockQuantized",
+    "adaptive_block_quantize",
+    "block_quantize_1d",
+    "block_quantize_2d",
+    "dequantize_1d",
+    "dequantize_2d",
+    "qdq",
+    "qdq_2d",
+    "method_candidates",
+]
+
+# method name -> candidate micro-format list (selection order = type-bit value)
+METHODS: dict[str, tuple[FP4Format, ...]] = {
+    "nvfp4": (formats.E2M1,),
+    "nvint4": (formats.INT4,),
+    "four_six": (formats.E2M1, formats.E2M1_4),
+    "mixfp4": (formats.E2M1, formats.E1M2),
+    "mixfp4_e3": (formats.E2M1, formats.E1M2, formats.E3M0),
+    "nvfp4_e3": (formats.E2M1, formats.E3M0),
+}
+
+
+def method_candidates(method: str) -> tuple[FP4Format, ...]:
+    try:
+        return METHODS[method]
+    except KeyError:
+        raise ValueError(f"unknown quantization method {method!r}; "
+                         f"one of {sorted(METHODS)} or 'bf16'") from None
+
+
+class BlockQuantized(NamedTuple):
+    """A block-quantized tensor in structure-of-arrays form.
+
+    values     (..., nblocks, g) — codebook levels (signed), f32
+    scale8     (..., nblocks)    — per-block E4M3 scale (f32-valued)
+    scale32    ()                — per-tensor FP32 scale
+    type_bits  (..., nblocks)    — winning candidate index (uint8)
+    """
+
+    values: jax.Array
+    scale8: jax.Array
+    scale32: jax.Array
+    type_bits: jax.Array
+
+    def dequantize(self) -> jax.Array:
+        return (self.values * self.scale8[..., None]) * self.scale32
+
+
+def _quantize_values(y: jax.Array, fmt: FP4Format, rounding: str, key):
+    if rounding == "rne":
+        return formats.quantize_to_codebook(y, fmt)
+    if rounding == "sr":
+        if key is None:
+            raise ValueError("stochastic rounding requires a PRNG key")
+        return formats.stochastic_round_to_codebook(y, fmt, key)
+    raise ValueError(f"unknown rounding {rounding!r}")
+
+
+def adaptive_block_quantize(
+    xb: jax.Array,
+    candidates: Sequence[FP4Format],
+    *,
+    rounding: str = "rne",
+    key: jax.Array | None = None,
+    scale32: jax.Array | None = None,
+) -> BlockQuantized:
+    """Algorithm 1 on pre-blocked data ``xb`` of shape (..., nblocks, g).
+
+    ``scale32`` may be passed in (e.g. computed on the unpadded tensor);
+    otherwise it is derived from ``xb`` itself.
+    """
+    xb = xb.astype(jnp.float32)
+    if scale32 is None:
+        scale32 = scaling.tensor_scale(xb)
+    xs = xb / scale32                     # Alg.1 line 5 ("X_FP8" range)
+    absmax = jnp.max(jnp.abs(xs), axis=-1)
+
+    qs, s8s, errs = [], [], []
+    for i, fmt in enumerate(candidates):
+        s8 = scaling.block_scale_e4m3(absmax, fmt.amax_target)
+        y = xs / s8[..., None]
+        k = None if key is None else jax.random.fold_in(key, i)
+        q = _quantize_values(y, fmt, rounding, k)
+        deq = q * s8[..., None]
+        err = jnp.mean(jnp.square(deq - xs), axis=-1)
+        qs.append(q)
+        s8s.append(s8)
+        errs.append(err)
+
+    if len(candidates) == 1:
+        return BlockQuantized(
+            qs[0], s8s[0], scale32,
+            jnp.zeros(absmax.shape, jnp.uint8),
+        )
+
+    err_stack = jnp.stack(errs)            # (C, ..., nblocks)
+    sel = jnp.argmin(err_stack, axis=0)    # ties -> lowest index (E2M1 first)
+    q_stack = jnp.stack(qs)
+    s8_stack = jnp.stack(s8s)
+    q_sel = jnp.take_along_axis(q_stack, sel[None, ..., None], axis=0)[0]
+    s8_sel = jnp.take_along_axis(s8_stack, sel[None], axis=0)[0]
+    return BlockQuantized(q_sel, s8_sel, scale32, sel.astype(jnp.uint8))
+
+
+# ---------------------------------------------------------------------------
+# 1-D blocking along an arbitrary axis (activations / gradients).
+# ---------------------------------------------------------------------------
+def _to_blocks_1d(x: jax.Array, block: int, axis: int):
+    x = jnp.moveaxis(x, axis, -1)
+    n = x.shape[-1]
+    pad = (-n) % block
+    if pad:
+        x = jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(0, pad)])
+    nb = x.shape[-1] // block
+    return x.reshape(*x.shape[:-1], nb, block), n, pad
+
+
+def _from_blocks_1d(xb: jax.Array, orig_n: int, axis: int):
+    x = xb.reshape(*xb.shape[:-2], xb.shape[-2] * xb.shape[-1])
+    x = x[..., :orig_n]
+    return jnp.moveaxis(x, -1, axis)
+
+
+def block_quantize_1d(
+    x: jax.Array,
+    method: str,
+    *,
+    block: int = 16,
+    axis: int = -1,
+    rounding: str = "rne",
+    key: jax.Array | None = None,
+) -> tuple[BlockQuantized, int, int]:
+    """Quantize with 1-D blocks of size ``block`` along ``axis``.
+
+    Returns (BlockQuantized, original axis length, axis) for dequantization.
+    """
+    candidates = method_candidates(method)
+    s32 = scaling.tensor_scale(x)
+    xb, n, _pad = _to_blocks_1d(x, block, axis)
+    bq = adaptive_block_quantize(
+        xb, candidates, rounding=rounding, key=key, scale32=s32
+    )
+    return bq, n, axis
+
+
+def dequantize_1d(bq: BlockQuantized, orig_n: int, axis: int) -> jax.Array:
+    return _from_blocks_1d(bq.dequantize(), orig_n, axis)
+
+
+# ---------------------------------------------------------------------------
+# 2-D tile blocking (weights; Fig. 7 "2D block quantization").  A (bm x bn)
+# tile shares one scale + one type bit, so W and W^T quantize identically.
+# ---------------------------------------------------------------------------
+def _to_blocks_2d(w: jax.Array, bm: int, bn: int):
+    m, n = w.shape
+    pm, pn = (-m) % bm, (-n) % bn
+    if pm or pn:
+        w = jnp.pad(w, ((0, pm), (0, pn)))
+    gm, gn = w.shape[0] // bm, w.shape[1] // bn
+    t = w.reshape(gm, bm, gn, bn).transpose(0, 2, 1, 3)  # (gm, gn, bm, bn)
+    return t.reshape(gm, gn, bm * bn), (m, n)
+
+
+def _from_blocks_2d(tb: jax.Array, shape, bm: int, bn: int):
+    gm, gn = tb.shape[0], tb.shape[1]
+    t = tb.reshape(gm, gn, bm, bn).transpose(0, 2, 1, 3).reshape(gm * bm, gn * bn)
+    return t[: shape[0], : shape[1]]
+
+
+def block_quantize_2d(
+    w: jax.Array,
+    method: str,
+    *,
+    block: tuple[int, int] = (16, 16),
+    rounding: str = "rne",
+    key: jax.Array | None = None,
+):
+    """Quantize a 2-D weight matrix with (bm x bn) tiles sharing scale + T."""
+    assert w.ndim == 2, "block_quantize_2d expects a matrix"
+    candidates = method_candidates(method)
+    bm, bn = block
+    s32 = scaling.tensor_scale(w)
+    tb, shape = _to_blocks_2d(w, bm, bn)
+    bq = adaptive_block_quantize(
+        tb, candidates, rounding=rounding, key=key, scale32=s32
+    )
+    return bq, shape, block
+
+
+def dequantize_2d(bq: BlockQuantized, shape, block) -> jax.Array:
+    bm, bn = block
+    return _from_blocks_2d(bq.dequantize(), shape, bm, bn)
+
+
+# ---------------------------------------------------------------------------
+# Quantize-dequantize ("fake quant") — the GEMM-boundary simulation of Fig. 7.
+# ---------------------------------------------------------------------------
+def qdq(
+    x: jax.Array,
+    method: str,
+    *,
+    block: int = 16,
+    axis: int = -1,
+    rounding: str = "rne",
+    key: jax.Array | None = None,
+) -> jax.Array:
+    """Quantize-dequantize ``x`` with 1-D blocks; identity for method='bf16'
+    (cast through bf16, the paper's high-precision operand dtype)."""
+    if method == "bf16":
+        return x.astype(jnp.bfloat16).astype(x.dtype)
+    bq, n, ax = block_quantize_1d(
+        x, method, block=block, axis=axis, rounding=rounding, key=key
+    )
+    return dequantize_1d(bq, n, ax).astype(x.dtype)
+
+
+def qdq_2d(
+    w: jax.Array,
+    method: str,
+    *,
+    block: tuple[int, int] = (16, 16),
+    rounding: str = "rne",
+    key: jax.Array | None = None,
+    col_chunk: int = 4096,
+) -> jax.Array:
+    """2-D tile quantize-dequantize for weight matrices.
+
+    Wide matrices are processed in column chunks under lax.map so the ~6
+    f32-sized candidate intermediates never materialise for the full matrix
+    (bounds per-layer quantization temps on big-FFN archs); the per-tensor
+    scale stays global (computed once over w)."""
+    if method == "bf16":
+        return w.astype(jnp.bfloat16).astype(w.dtype)
+    m, n = w.shape
+    if n <= col_chunk or n % col_chunk:
+        bq, shape, blk = block_quantize_2d(
+            w, method, block=block, rounding=rounding, key=key)
+        return dequantize_2d(bq, shape, blk).astype(w.dtype)
+
+    candidates = method_candidates(method)
+    s32 = scaling.tensor_scale(w)
+    nc = n // col_chunk
+    bm, bn = block
+
+    def one(i):
+        wc = jax.lax.dynamic_slice_in_dim(w, i * col_chunk, col_chunk, axis=1)
+        tb, shape = _to_blocks_2d(wc, bm, bn)
+        k = None if key is None else jax.random.fold_in(key, i)
+        bq = adaptive_block_quantize(tb, candidates, rounding=rounding,
+                                     key=k, scale32=s32)
+        return _from_blocks_2d(bq.dequantize(), shape, bm, bn).astype(w.dtype)
+
+    chunks = jax.lax.map(one, jnp.arange(nc))       # (nc, m, col_chunk)
+    return jnp.moveaxis(chunks, 0, 1).reshape(m, n)

@@ -1,0 +1,77 @@
+"""Two-level block scaling (paper §2.1, Fig. 1) and zero-overhead type packing (§B.3).
+
+Level 2: per-tensor FP32 scale   s32 = max|X| / 2688          (Alg. 1 line 4)
+Level 1: per-block  E4M3 scale   s8  = E4M3(blockmax / amax_target)
+
+The E4M3 scale is positive by construction, so its sign bit is free — MixFP4
+repurposes it as the block-shared format-type bit T (0 = E2M1, 1 = E1M2):
+
+    scale_packed = {T, e4m3_bits[6:0]}          (Eq. 39: decode forces sign=0)
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import formats
+
+__all__ = [
+    "tensor_scale",
+    "block_scale_e4m3",
+    "pack_scale_with_type",
+    "unpack_scale_and_type",
+    "E4M3_MIN_SUBNORMAL",
+]
+
+# smallest positive E4M3 value (subnormal): 2^-9.  Used to guard blocks whose
+# scale would round to zero (tiny blockmax relative to the tensor max).
+E4M3_MIN_SUBNORMAL = 2.0**-9
+
+
+def tensor_scale(x: jax.Array, denom: float = formats.PER_TENSOR_DENOM) -> jax.Array:
+    """Per-tensor FP32 scale s32 = max|X| / denom (Alg. 1 line 4).
+
+    Guarded so an all-zero tensor yields scale 1 (quantizes to zeros).
+    """
+    amax = jnp.max(jnp.abs(x)).astype(jnp.float32)
+    return jnp.where(amax > 0, amax / denom, 1.0)
+
+
+def block_scale_e4m3(block_absmax: jax.Array, amax_target: float) -> jax.Array:
+    """Per-block E4M3 scale (Alg. 1 lines 7 / 12), f32-valued, E4M3-representable.
+
+    E4M3 rounding saturates at 448 and flushes tiny values toward 0; blocks with
+    a non-zero max whose scale would round to 0 are clamped to the minimum E4M3
+    subnormal so dequantization never divides by zero.  All-zero blocks get
+    scale 1 (their payload is all zeros regardless).
+    """
+    raw = block_absmax.astype(jnp.float32) / amax_target
+    # XLA's f8e4m3fn cast maps values beyond ~464 to NaN (no inf encoding);
+    # saturate explicitly at the E4M3 max (matters for the 4/6 baseline whose
+    # blockmax/4 scale can reach 672).
+    raw = jnp.clip(raw, 0.0, formats.E4M3_MAX)
+    s = formats.round_to_e4m3(raw)
+    s = jnp.where((block_absmax > 0) & (s <= 0), E4M3_MIN_SUBNORMAL, s)
+    s = jnp.where(block_absmax > 0, s, 1.0)
+    return s
+
+
+def pack_scale_with_type(scale_f32: jax.Array, type_bits: jax.Array) -> jax.Array:
+    """Pack a positive E4M3-representable scale and a per-block type bit into one
+    uint8: bit 7 carries T, bits [6:0] the E4M3 magnitude bits.
+
+    Zero extra storage relative to NVFP4's unsigned E4M3 scale byte (§B.3).
+    """
+    bits = formats.e4m3_to_bits(scale_f32)
+    t = (type_bits.astype(jnp.uint8) & 1) << 7
+    return (bits & 0x7F) | t
+
+
+def unpack_scale_and_type(packed: jax.Array):
+    """Inverse of :func:`pack_scale_with_type` (Eq. 39: force sign to 0).
+
+    Returns ``(scale_f32, type_bits uint8)``.
+    """
+    t = (packed >> 7) & 1
+    scale = formats.bits_to_e4m3(packed & 0x7F)
+    return scale, t.astype(jnp.uint8)

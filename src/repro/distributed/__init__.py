@@ -1,0 +1,5 @@
+from repro.distributed.gradcomp import (GradCompressionState,
+                                        compressed_grad_reduce,
+                                        gradcomp_init)
+from repro.distributed.sharding import (batch_spec, make_train_shardings,
+                                        prepend_pod)

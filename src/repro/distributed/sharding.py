@@ -1,0 +1,79 @@
+"""Sharding utilities: spec rewriting for the multi-pod mesh and the
+train-step sharding assembly."""
+from __future__ import annotations
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+__all__ = ["prepend_pod", "batch_spec", "make_train_shardings"]
+
+
+def prepend_pod(spec_tree):
+    """Rewrite specs for the multi-pod mesh: every occurrence of the 'data'
+    axis becomes ('pod', 'data') so DP spans pods.  Model/TP stays in-pod
+    (ICI); only gradient reduction crosses the pod axis (DCI)."""
+    def rw(spec):
+        if spec is None:
+            return spec
+        parts = []
+        for p in spec:
+            if p == "data":
+                parts.append(("pod", "data"))
+            elif isinstance(p, tuple) and "data" in p:
+                parts.append(tuple(
+                    a for q in p for a in (("pod", "data") if q == "data"
+                                           else (q,))))
+            else:
+                parts.append(p)
+        return P(*parts)
+    return jax.tree.map(rw, spec_tree,
+                        is_leaf=lambda x: isinstance(x, P) or x is None)
+
+
+def sanitize_specs(spec_tree, sds_tree, mesh):
+    """Replicate any dim whose size is not divisible by its assigned mesh
+    axes (explicit jit in_shardings demand exact divisibility, unlike
+    internal constraints which GSPMD pads).  Rank-mismatched trailing spec
+    entries are dropped."""
+    sizes = dict(mesh.shape)
+
+    def axis_size(p):
+        if p is None:
+            return 1
+        if isinstance(p, tuple):
+            n = 1
+            for a in p:
+                n *= sizes[a]
+            return n
+        return sizes[p]
+
+    def fix(spec, sd):
+        if spec is None:
+            return P()
+        parts = list(spec)[: len(sd.shape)]
+        parts += [None] * (len(sd.shape) - len(parts))
+        for i, p in enumerate(parts):
+            if p is not None and sd.shape[i] % axis_size(p) != 0:
+                parts[i] = None
+        return P(*parts)
+
+    return jax.tree.map(fix, spec_tree, sds_tree,
+                        is_leaf=lambda x: isinstance(x, P) or x is None)
+
+
+def batch_spec(batch_like, multi_pod: bool = False):
+    """Shard every batch leaf on dim 0 over the DP axes."""
+    axes = ("pod", "data") if multi_pod else ("data",)
+    def spec(x):
+        return P(axes, *([None] * (x.ndim - 1)))
+    return jax.tree.map(spec, batch_like)
+
+
+def make_train_shardings(mesh, param_specs, batch_like, multi_pod=False):
+    """NamedShardings for (params, batch) on ``mesh``."""
+    pspecs = prepend_pod(param_specs) if multi_pod else param_specs
+    to_sh = lambda s: NamedSharding(mesh, s if s is not None else P())
+    param_sh = jax.tree.map(to_sh, pspecs,
+                            is_leaf=lambda x: isinstance(x, P) or x is None)
+    batch_sh = jax.tree.map(to_sh, batch_spec(batch_like, multi_pod))
+    return param_sh, batch_sh

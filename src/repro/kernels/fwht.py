@@ -1,0 +1,64 @@
+"""Pallas TPU kernel: grouped random Hadamard transform (RHT hot path).
+
+The WGRAD RHT (Fig. 7) touches both GEMM inputs every backward pass; fusing
+sign-flip + the log2(g) butterfly stages into one VMEM pass avoids g
+intermediate HBM round-trips.  Groups (default 16, the quantization block)
+transform independently, so the kernel tiles rows and keeps the full feature
+extent resident.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["fwht_rows"]
+
+
+def _fwht_kernel(x_ref, s_ref, o_ref, *, group: int):
+    x = x_ref[...].astype(jnp.float32) * s_ref[...].astype(jnp.float32)
+    bm, k = x.shape
+    x = x.reshape(bm, k // group, group)
+    h = 1
+    while h < group:
+        x = x.reshape(bm, k // group, group // (2 * h), 2, h)
+        a = x[..., 0, :]
+        b = x[..., 1, :]
+        x = jnp.concatenate(
+            [(a + b)[..., None, :], (a - b)[..., None, :]], axis=-2
+        ).reshape(bm, k // group, group)
+        h *= 2
+    x = x * (group ** -0.5)
+    o_ref[...] = x.reshape(bm, k).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("group", "bm", "interpret"))
+def fwht_rows(
+    x: jax.Array,
+    signs: jax.Array,
+    *,
+    group: int = 16,
+    bm: int | None = None,
+    interpret: bool = False,
+) -> jax.Array:
+    """Grouped RHT along the last axis of (M, K); signs shape (K,)."""
+    m, k = x.shape
+    assert k % group == 0 and signs.shape == (k,)
+    if bm is None:
+        bm = max(1, min(256, (4 * 1024 * 1024 // 8) // max(k, 1)))
+        while m % bm and bm > 1:
+            bm //= 2
+    assert m % bm == 0
+    return pl.pallas_call(
+        functools.partial(_fwht_kernel, group=group),
+        grid=(m // bm,),
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i: (i, 0)),
+            pl.BlockSpec((1, k), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, k), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, k), x.dtype),
+        interpret=interpret,
+    )(x, signs.reshape(1, k))

@@ -1,0 +1,213 @@
+"""Pallas TPU kernel: block-scaled MixFP4 GEMM with in-VMEM Fig. 9 decode.
+
+TPU adaptation of the paper's tensor-core datapath (§3.3, DESIGN.md §2):
+the packed FP4 payload and type-in-sign scale bytes stream HBM->VMEM; a
+branch-free dual-codebook decoder (E2M1 shift path / E1M2 integer path,
+selected by the block-shared T bit) expands them to bf16 *with the block
+scale fused on the VPU*, and the MXU performs the matmul with f32
+accumulation.  Eq. 35's factored-scale dot is restructured to scale-before-
+MXU because the 128x128 systolic array cannot emit per-16-element partials.
+
+Two entry points:
+  mixfp4_gemm_w4a16 : bf16 activations x packed weight  (serving decode path;
+                      weight HBM traffic is 4.5 bits/value instead of 16)
+  mixfp4_gemm_w4a4  : packed activations x packed weight (full FP4 MMA analog)
+
+Weight layout (from ``pack_weight_kn``): payload (K//2, N) uint8 with two
+K-consecutive nibbles per byte; scales (K//16, N//16) uint8 for the paper's
+2-D 16x16 weight tiles.  Activation layout (W4A4): payload (M, K//2), scales
+(M, K//16) — 1-D blocks along the contraction axis.
+
+Grid: (M/bm, N/bn, K/bk), K innermost; the f32 output block is revisited
+across the K loop and used as the accumulator (standard Pallas reduction
+pattern), initialised at k==0.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["mixfp4_gemm_w4a16", "mixfp4_gemm_w4a4"]
+
+_G = 16
+
+
+def _decode_scales(scale_bytes: jax.Array):
+    """scale byte {T | e4m3[6:0]} -> (f32 scale, bool T)."""
+    t = (scale_bytes >> 7).astype(jnp.uint8)
+    s = jax.lax.bitcast_convert_type(
+        (scale_bytes & 0x7F).astype(jnp.uint8), jnp.float8_e4m3fn
+    ).astype(jnp.float32)
+    return s, t
+
+
+def _decode_nibbles(nib: jax.Array, t_full: jax.Array) -> jax.Array:
+    """Fig. 9 unified decode, gather-free.
+
+    E2M1 path: value = (1 + m/2) * 2^(e-1), subnormal m/2 at e=0 — computed
+    with two selects and an exp2 (the 'shift path').
+    E1M2 path: effective value == integer payload (the x2 remap folds in).
+    """
+    sign = 1.0 - 2.0 * ((nib >> 3) & 1).astype(jnp.float32)
+    p = (nib & 0x7).astype(jnp.float32)
+    e = jnp.floor(p * 0.5)          # payload >> 1, as float
+    mbit = p - 2.0 * e              # payload & 1
+    v_e2m1 = jnp.where(
+        p < 2.0, 0.5 * mbit,
+        jnp.exp2(e - 1.0) * (1.0 + 0.5 * mbit),
+    )
+    v = jnp.where(t_full.astype(bool), p, v_e2m1)
+    return sign * v
+
+
+def _expand_weight_tile(wp, ws, bk: int, bn: int):
+    """Decode a packed weight tile: payload (bk//2, bn) + scales
+    (bk//16, bn//16) -> bf16 (bk, bn) with scales fused (sans scale32)."""
+    lo = wp & 0xF
+    hi = (wp >> 4) & 0xF
+    nib = jnp.stack([lo, hi], axis=1).reshape(bk, bn)
+    s, t = _decode_scales(ws)
+    # broadcast per-tile scale/type over the 16x16 tile extent
+    s_full = jnp.broadcast_to(
+        s[:, None, :, None], (bk // _G, _G, bn // _G, _G)).reshape(bk, bn)
+    t_full = jnp.broadcast_to(
+        t[:, None, :, None], (bk // _G, _G, bn // _G, _G)).reshape(bk, bn)
+    vals = _decode_nibbles(nib, t_full)
+    return (vals * s_full).astype(jnp.bfloat16)
+
+
+def _expand_act_tile(xp, xs, bm: int, bk: int):
+    """Decode packed activations: payload (bm, bk//2) + scales (bm, bk//16)
+    -> bf16 (bm, bk) with 1-D block scales fused (sans scale32)."""
+    lo = xp & 0xF
+    hi = (xp >> 4) & 0xF
+    nib = jnp.stack([lo, hi], axis=-1).reshape(bm, bk)
+    s, t = _decode_scales(xs)
+    s_full = jnp.broadcast_to(s[:, :, None], (bm, bk // _G, _G)).reshape(bm, bk)
+    t_full = jnp.broadcast_to(t[:, :, None], (bm, bk // _G, _G)).reshape(bm, bk)
+    vals = _decode_nibbles(nib, t_full)
+    return (vals * s_full).astype(jnp.bfloat16)
+
+
+# ---------------------------------------------------------------------------
+# W4A16
+# ---------------------------------------------------------------------------
+def _w4a16_kernel(s32_ref, x_ref, wp_ref, ws_ref, o_ref):
+    k_idx = pl.program_id(2)
+
+    @pl.when(k_idx == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    bk2, bn = wp_ref.shape
+    w = _expand_weight_tile(wp_ref[...], ws_ref[...], 2 * bk2, bn)
+    x = x_ref[...].astype(jnp.bfloat16)
+    acc = jax.lax.dot(x, w, preferred_element_type=jnp.float32)
+    o_ref[...] += acc * s32_ref[0, 0]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("bm", "bn", "bk", "interpret"))
+def mixfp4_gemm_w4a16(
+    x: jax.Array,
+    payload: jax.Array,
+    scales: jax.Array,
+    scale32: jax.Array,
+    *,
+    bm: int = 128,
+    bn: int = 256,
+    bk: int = 256,
+    interpret: bool = False,
+) -> jax.Array:
+    """y = x @ dequant(packed W); x (M, K) bf16/f32, returns (M, N) f32."""
+    m, k = x.shape
+    n = payload.shape[1]
+    assert payload.shape == (k // 2, n) and scales.shape == (k // _G, n // _G)
+    bm = min(bm, m)
+    bn = min(bn, n)
+    bk = min(bk, k)
+    assert m % bm == 0 and n % bn == 0 and k % bk == 0
+    assert bk % _G == 0 and bn % _G == 0
+    grid = (m // bm, n // bn, k // bk)
+    s32 = scale32.reshape(1, 1).astype(jnp.float32)
+
+    return pl.pallas_call(
+        _w4a16_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda i, j, kk: (0, 0)),
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk // 2, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((bk // _G, bn // _G), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=interpret,
+    )(s32, x, payload, scales)
+
+
+# ---------------------------------------------------------------------------
+# W4A4
+# ---------------------------------------------------------------------------
+def _w4a4_kernel(s32_ref, xp_ref, xs_ref, wp_ref, ws_ref, o_ref):
+    k_idx = pl.program_id(2)
+
+    @pl.when(k_idx == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    bm, bk2 = xp_ref.shape
+    bk = 2 * bk2
+    bn = wp_ref.shape[1]
+    x = _expand_act_tile(xp_ref[...], xs_ref[...], bm, bk)
+    w = _expand_weight_tile(wp_ref[...], ws_ref[...], bk, bn)
+    acc = jax.lax.dot(x, w, preferred_element_type=jnp.float32)
+    o_ref[...] += acc * s32_ref[0, 0]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("bm", "bn", "bk", "interpret"))
+def mixfp4_gemm_w4a4(
+    x_payload: jax.Array,
+    x_scales: jax.Array,
+    x_scale32: jax.Array,
+    payload: jax.Array,
+    scales: jax.Array,
+    scale32: jax.Array,
+    *,
+    bm: int = 128,
+    bn: int = 256,
+    bk: int = 256,
+    interpret: bool = False,
+) -> jax.Array:
+    """y = dequant(packed X) @ dequant(packed W), f32 out."""
+    m = x_payload.shape[0]
+    k = x_payload.shape[1] * 2
+    n = payload.shape[1]
+    assert payload.shape == (k // 2, n) and scales.shape == (k // _G, n // _G)
+    assert x_scales.shape == (m, k // _G)
+    bm = min(bm, m)
+    bn = min(bn, n)
+    bk = min(bk, k)
+    assert m % bm == 0 and n % bn == 0 and k % bk == 0
+    grid = (m // bm, n // bn, k // bk)
+    s32 = (x_scale32.astype(jnp.float32)
+           * scale32.astype(jnp.float32)).reshape(1, 1)
+
+    return pl.pallas_call(
+        _w4a4_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda i, j, kk: (0, 0)),
+            pl.BlockSpec((bm, bk // 2), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bm, bk // _G), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk // 2, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((bk // _G, bn // _G), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=interpret,
+    )(s32, x_payload, x_scales, payload, scales)

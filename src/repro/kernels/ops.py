@@ -1,0 +1,59 @@
+"""Public kernel entry points with automatic interpret-mode fallback.
+
+On TPU the Pallas kernels compile natively; on CPU (this container) they run
+in interpret mode, which executes the kernel body in Python/XLA-CPU and is
+what the per-kernel allclose tests exercise.  ``pack_weight_kn`` /
+``quantize_rows`` are the packing producers shared by serving and tests.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.fwht import fwht_rows
+from repro.kernels.mixfp4_gemm import mixfp4_gemm_w4a4, mixfp4_gemm_w4a16
+from repro.kernels.mixfp4_quant import mixfp4_quant_rows
+
+__all__ = [
+    "default_interpret",
+    "quantize_rows",
+    "pack_weight_kn",
+    "gemm_w4a16",
+    "gemm_w4a4",
+    "rht_rows",
+]
+
+
+def default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def quantize_rows(x: jax.Array, **kw):
+    """Fused MixFP4 row quantizer (payload, scales, scale32)."""
+    kw.setdefault("interpret", default_interpret())
+    return mixfp4_quant_rows(x, **kw)
+
+
+def pack_weight_kn(w: jax.Array, method: str = "mixfp4",
+                   block: tuple[int, int] = (16, 16)):
+    """Quantize+pack a (K, N) weight for the GEMM kernels (oracle-produced;
+    packing is offline/per-checkpoint, not a hot path)."""
+    return ref.ref_pack_weight_kn(w, method, block)
+
+
+def gemm_w4a16(x, payload, scales, scale32, **kw):
+    kw.setdefault("interpret", default_interpret())
+    return mixfp4_gemm_w4a16(x, payload, scales, scale32, **kw)
+
+
+def gemm_w4a4(xp, xs, xs32, payload, scales, scale32, **kw):
+    kw.setdefault("interpret", default_interpret())
+    return mixfp4_gemm_w4a4(xp, xs, xs32, payload, scales, scale32, **kw)
+
+
+def rht_rows(x, signs, **kw):
+    kw.setdefault("interpret", default_interpret())
+    return fwht_rows(x, signs, **kw)

@@ -1,0 +1,277 @@
+import os
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
+                           + os.environ.get("XLA_EXTRA_FLAGS", ""))
+# ^ MUST precede every other import (jax locks device count at first init).
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this lowers the real entry point (train_step / prefill_step /
+serve_step) with production shardings on the 16x16 single-pod mesh and the
+2x16x16 multi-pod mesh, compiles it, and records:
+
+  * memory_analysis()  — proves the cell fits per-device HBM,
+  * cost_analysis()    — HLO FLOPs / bytes for the roofline,
+  * collective payload bytes parsed from the optimized HLO,
+
+into artifacts/dryrun/<arch>__<shape>__<mesh>[__<quant>].json, consumed by
+benchmarks/roofline.py and EXPERIMENTS.md.
+
+Usage:
+  python -m repro.launch.dryrun --arch gemma2-2b --shape train_4k
+  python -m repro.launch.dryrun --all [--mesh single,multi] [--quant mixfp4]
+"""
+import argparse
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro import configs
+from repro.configs import shapes as shp
+from repro.core.qgemm import QuantConfig
+from repro.distributed.sharding import prepend_pod, sanitize_specs
+from repro.launch import steps as steps_lib
+from repro.launch.flops import entry_flops
+from repro.launch.hlo_analysis import parse_collectives
+from repro.launch.mesh import make_production_mesh
+from repro.models import base as model_base
+from repro.models.base import build_model
+from repro.optim.adamw import AdamWState
+
+ARTIFACTS = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                         "artifacts", "dryrun")
+
+_is_spec = lambda x: isinstance(x, P)
+
+
+def _abstract_init(model):
+    """(param ShapeDtypeStructs, specs) without allocating."""
+    box = {}
+
+    def f():
+        v, s = model.init(jax.random.PRNGKey(0))
+        box["specs"] = s
+        return v
+
+    sds = jax.eval_shape(f)
+    return sds, box["specs"]
+
+
+def _shardings(mesh, spec_tree, sds_tree, multi_pod: bool):
+    spec_tree = prepend_pod(spec_tree) if multi_pod else spec_tree
+    spec_tree = sanitize_specs(spec_tree, sds_tree, mesh)
+    return jax.tree.map(lambda s: NamedSharding(mesh, s),
+                        spec_tree, is_leaf=_is_spec)
+
+
+def _batch_specs(batch_sds, data_axes, data_size: int):
+    def spec(sd):
+        if sd.shape and sd.shape[0] % data_size == 0:
+            return P(data_axes, *([None] * (len(sd.shape) - 1)))
+        return P(*([None] * len(sd.shape)))  # e.g. batch=1 long_500k
+    return jax.tree.map(spec, batch_sds)
+
+
+def _f32_like(sds_tree):
+    return jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, jnp.float32), sds_tree)
+
+
+def build_cell(arch: str, shape_name: str, mesh, multi_pod: bool,
+               quant_method: str = "mixfp4", overrides: dict | None = None):
+    """Returns ((jitted_fn, arg_sds), entry_tag) or (None, skip_reason)."""
+    cfg = configs.full_config(arch).replace(
+        quant=QuantConfig(method=quant_method))
+    if overrides:
+        cfg = cfg.replace(**overrides)
+    shape = shp.SHAPES[shape_name]
+    ok, reason = shp.applicable(cfg, shape_name)
+    if not ok:
+        return None, reason
+
+    # Sharding regimes (DESIGN.md §4):
+    #  * single-pod train: FSDP — global batch 256 shards over all 256
+    #    chips (data x model); weights stay model-sharded, gathered per
+    #    layer (ZeRO-3 pattern).
+    #  * multi-pod train: the pod axis extends DP (batch 256 over
+    #    pod x data = 32) and TP keeps the in-pod model axis — batch is
+    #    exhausted, so FSDP cannot span 512 chips.
+    #  * serving: TP/SP over model; DP over (pod x) data.
+    fsdp = shape.kind == "train" and not multi_pod
+    model_base.set_fsdp(fsdp)
+    model_base.set_sp(shape.kind == "prefill")
+    data_axes = ("pod", "data") if multi_pod else ("data",)
+    if fsdp:
+        data_axes = data_axes + ("model",)
+    data_size = mesh.shape["data"] * mesh.shape.get("pod", 1) * (
+        mesh.shape["model"] if fsdp else 1)
+    model = build_model(cfg)
+    params_sds, param_specs = _abstract_init(model)
+    batch_sds = shp.token_inputs(cfg, shape)
+    batch_specs = _batch_specs(batch_sds, data_axes, data_size)
+    batch_sh = jax.tree.map(lambda s: NamedSharding(mesh, s), batch_specs,
+                            is_leaf=_is_spec)
+
+    if shape.kind == "train":
+        _, train_step = steps_lib.make_train_step(
+            cfg, mesh, data_axes=data_axes)
+        state_sds = steps_lib.TrainState(
+            params=params_sds,
+            opt=AdamWState(jax.ShapeDtypeStruct((), jnp.int32),
+                           _f32_like(params_sds), _f32_like(params_sds)),
+            step=jax.ShapeDtypeStruct((), jnp.int32),
+            key=jax.ShapeDtypeStruct((2,), jnp.uint32))
+        state_specs = steps_lib.train_state_specs(
+            param_specs, zero1=True, data_axes=data_axes)
+        in_sh = (_shardings(mesh, state_specs, state_sds, False), batch_sh)
+        fn = jax.jit(train_step, in_shardings=in_sh, donate_argnums=(0,))
+        return (fn, (state_sds, batch_sds)), "train_step"
+
+    b = shape.batch
+    param_sh = _shardings(mesh, param_specs, params_sds, multi_pod)
+    cache_sds = jax.eval_shape(lambda: model.init_cache(b, shape.seq))
+    cache_sh = _shardings(mesh, model.cache_specs(), cache_sds, multi_pod)
+
+    if shape.kind == "prefill":
+        _, prefill_step = steps_lib.make_prefill_step(
+            cfg, mesh, data_axes=data_axes)
+        in_sh = (param_sh, batch_sh, cache_sh)
+        fn = jax.jit(prefill_step, in_shardings=in_sh, donate_argnums=(2,))
+        return (fn, (params_sds, batch_sds, cache_sds)), "prefill_step"
+
+    # decode
+    _, serve_step = steps_lib.make_serve_step(cfg, mesh, data_axes=data_axes)
+    tok_sds = jax.ShapeDtypeStruct((b,), jnp.int32)
+    len_sds = jax.ShapeDtypeStruct((), jnp.int32)
+    tok_spec = P(data_axes) if b % data_size == 0 else P(None)
+    in_sh = (param_sh, NamedSharding(mesh, tok_spec), cache_sh,
+             NamedSharding(mesh, P()))
+    fn = jax.jit(serve_step, in_shardings=in_sh, donate_argnums=(2,))
+    return (fn, (params_sds, tok_sds, cache_sds, len_sds)), "serve_step"
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str,
+             quant_method: str = "mixfp4", out_dir: str | None = None,
+             overrides: dict | None = None, suffix: str = ""):
+    multi_pod = mesh_kind == "multi"
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    t0 = time.time()
+    with mesh:
+        built, tag = build_cell(arch, shape_name, mesh, multi_pod,
+                                quant_method, overrides)
+        if built is None:
+            rec = {"arch": arch, "shape": shape_name, "mesh": mesh_kind,
+                   "status": "skipped", "reason": tag, "quant": quant_method}
+            _write(rec, out_dir)
+            print(f"[dryrun] SKIP {arch} {shape_name} {mesh_kind}: {tag}",
+                  flush=True)
+            return rec
+        fn, args = built
+        try:
+            flops_exact = float(entry_flops(fn, *args))
+        except Exception as e:
+            print(f"[dryrun] flops-count failed: {e}", flush=True)
+            flops_exact = -1.0
+        t_flops = time.time() - t0
+        lowered = fn.lower(*args)
+        t_lower = time.time() - t0 - t_flops
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_flops - t_lower
+
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+        hlo = compiled.as_text()
+        coll = parse_collectives(hlo)
+
+    n_dev = 512 if multi_pod else 256
+    mem_rec = {k: int(getattr(mem, k, 0)) for k in
+               ["argument_size_in_bytes", "output_size_in_bytes",
+                "temp_size_in_bytes", "generated_code_size_in_bytes"]}
+    rec = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_kind,
+        "entry": tag, "quant": quant_method, "status": "ok",
+        "suffix": suffix, "overrides": overrides or {},
+        "n_devices": n_dev,
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "flops_hlo_once": float(cost.get("flops", -1)),
+        "flops_exact": flops_exact,
+        "bytes_accessed_total": float(cost.get("bytes accessed", -1)),
+        "memory": mem_rec,
+        "collectives": {
+            "bytes_by_kind": coll.bytes_by_kind,
+            "count_by_kind": coll.count_by_kind,
+            "bytes_by_groupsize": coll.bytes_by_groupsize,
+            "total_bytes": coll.total_bytes,
+        },
+    }
+    _write(rec, out_dir)
+    print(f"[dryrun] OK {arch} {shape_name} {mesh_kind} "
+          f"flops={rec['flops_exact']:.3e} "
+          f"coll={coll.total_bytes / 1e6:.1f}MB "
+          f"lower={t_lower:.0f}s compile={t_compile:.0f}s", flush=True)
+    return rec
+
+
+def _write(rec, out_dir=None):
+    d = os.path.abspath(out_dir or ARTIFACTS)
+    os.makedirs(d, exist_ok=True)
+    name = f"{rec['arch']}__{rec['shape']}__{rec['mesh']}"
+    if rec.get("quant", "mixfp4") != "mixfp4":
+        name += f"__{rec['quant']}"
+    if rec.get("suffix"):
+        name += f"__{rec['suffix']}"
+    with open(os.path.join(d, name + ".json"), "w") as f:
+        json.dump(rec, f, indent=1)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="single,multi")
+    ap.add_argument("--quant", default="mixfp4")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default=None)
+    ap.add_argument("--set", default="", help="cfg overrides k=v,k=v")
+    ap.add_argument("--suffix", default="", help="artifact name suffix")
+    args = ap.parse_args()
+    overrides = {}
+    for kv in args.set.split(","):
+        if "=" in kv:
+            k, v = kv.split("=", 1)
+            overrides[k] = type(getattr(
+                configs.full_config("gemma2-2b"), k))(eval(v))
+
+    archs = configs.ARCH_IDS if (args.all or not args.arch) \
+        else [args.arch.replace("-", "_").replace(".", "_")]
+    shapes = list(shp.SHAPES) if (args.all or not args.shape) \
+        else [args.shape]
+    meshes = args.mesh.split(",")
+
+    failures = []
+    for arch in archs:
+        for shape_name in shapes:
+            for mesh_kind in meshes:
+                try:
+                    run_cell(arch, shape_name, mesh_kind, args.quant,
+                             args.out, overrides, args.suffix)
+                except Exception as e:
+                    traceback.print_exc()
+                    failures.append((arch, shape_name, mesh_kind, str(e)))
+                    _write({"arch": arch, "shape": shape_name,
+                            "mesh": mesh_kind, "status": "error",
+                            "quant": args.quant,
+                            "error": str(e)[:2000]}, args.out)
+    if failures:
+        print(f"[dryrun] {len(failures)} FAILURES:")
+        for f in failures:
+            print("   ", f)
+        raise SystemExit(1)
+    print("[dryrun] all cells OK")
+
+
+if __name__ == "__main__":
+    main()

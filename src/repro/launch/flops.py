@@ -1,0 +1,119 @@
+"""Exact-trip-count FLOP accounting from the jaxpr.
+
+XLA's ``cost_analysis()`` counts while-loop bodies once, which silently
+undercounts scanned-layer programs by ~L.  The jaxpr retains structured
+control flow with known lengths (lax.scan carries ``length``; lax.map is a
+scan), so walking it gives exact FLOP totals for our programs — matmuls at
+2*M*N*K, elementwise/reduction/transcendental ops at 1 FLOP/element (the
+quantization simulation is elementwise-heavy, so these matter for the
+useful-FLOP ratio of EXPERIMENTS.md §Roofline).
+
+Shapes in the outer jaxpr are GLOBAL; shard_map bodies see per-shard shapes
+and execute on every device, so their counts are scaled by the mesh size.
+The result is the global FLOPs of one step; per-device = total / n_devices
+under perfect sharding (documented approximation).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import numpy as np
+
+__all__ = ["count_flops", "entry_flops"]
+
+_ELEMENTWISE = {
+    "add", "sub", "mul", "div", "rem", "max", "min", "neg", "abs", "sign",
+    "exp", "exp2", "log", "log1p", "expm1", "tanh", "logistic", "erf",
+    "rsqrt", "sqrt", "pow", "integer_pow", "floor", "ceil", "round",
+    "is_finite", "and", "or", "not", "xor", "shift_left",
+    "shift_right_logical", "shift_right_arithmetic", "select_n", "clamp",
+    "nextafter", "sin", "cos", "atan2", "square",
+}
+_COMPARE = {"eq", "ne", "lt", "le", "gt", "ge"}
+_REDUCE = {"reduce_sum", "reduce_max", "reduce_min", "reduce_prod",
+           "reduce_and", "reduce_or", "argmax", "argmin",
+           "cumsum", "cumlogsumexp", "cummax", "cumprod", "logsumexp"}
+_FREE = {
+    "reshape", "broadcast_in_dim", "transpose", "slice", "dynamic_slice",
+    "dynamic_update_slice", "concatenate", "convert_element_type",
+    "bitcast_convert_type", "gather", "scatter", "scatter-add", "pad",
+    "squeeze", "rev", "iota", "copy", "stop_gradient", "device_put",
+    "sharding_constraint", "split", "pjit_sharding_constraint", "real",
+    "imag", "reduce_precision", "random_seed", "random_wrap", "random_bits",
+    "random_unwrap", "random_fold_in", "random_clone", "threefry2x32",
+    "rng_bit_generator", "expand_dims", "squeeze", "select_and_scatter_add",
+}
+
+
+def _size(v) -> int:
+    try:
+        return int(np.prod(v.aval.shape))
+    except Exception:
+        return 0
+
+
+def _subjaxprs(params):
+    for key in ("jaxpr", "call_jaxpr", "fun_jaxpr", "cond_jaxpr"):
+        if key in params:
+            sub = params[key]
+            yield getattr(sub, "jaxpr", sub)
+    if "branches" in params:
+        for b in params["branches"]:
+            yield getattr(b, "jaxpr", b)
+    if "body_jaxpr" in params:
+        yield params["body_jaxpr"].jaxpr
+
+
+def count_flops(jaxpr) -> float:
+    total = 0.0
+    for eqn in jaxpr.eqns:
+        p = eqn.primitive.name
+        params = eqn.params
+        if p == "dot_general":
+            (lc, _), _ = params["dimension_numbers"]
+            lhs = eqn.invars[0].aval
+            k = 1
+            for d in lc:
+                k *= lhs.shape[d]
+            total += 2.0 * _size(eqn.outvars[0]) * k
+        elif p == "conv_general_dilated":
+            rhs = eqn.invars[1].aval
+            total += 2.0 * _size(eqn.outvars[0]) * int(np.prod(rhs.shape[1:]))
+        elif p == "scan":
+            inner = count_flops(params["jaxpr"].jaxpr)
+            total += params["length"] * inner
+        elif p == "while":
+            total += count_flops(params["body_jaxpr"].jaxpr)  # lower bound
+        elif p == "cond":
+            total += max((count_flops(getattr(b, "jaxpr", b))
+                          for b in params["branches"]), default=0.0)
+        elif p == "shard_map":
+            mesh = params.get("mesh")
+            n = int(np.prod(list(mesh.shape.values()))) if mesh is not None \
+                else 1
+            total += n * count_flops(params["jaxpr"])
+        elif p in ("sort",):
+            n = _size(eqn.invars[0])
+            total += n * max(math.log2(max(n, 2)), 1.0)
+        elif p in _ELEMENTWISE or p in _COMPARE:
+            total += max((_size(o) for o in eqn.outvars), default=0)
+        elif p in _REDUCE or p.startswith("reduce_"):
+            total += _size(eqn.invars[0])
+        elif p in _FREE:
+            pass
+        else:
+            # unknown structured primitive: recurse into any sub-jaxprs
+            found = False
+            for sub in _subjaxprs(params):
+                total += count_flops(sub)
+                found = True
+            if not found:
+                total += max((_size(o) for o in eqn.outvars), default=0)
+    return total
+
+
+def entry_flops(fn, *args) -> float:
+    """Global FLOPs of one call of ``fn(*args)`` (args may be SDS)."""
+    jaxpr = jax.make_jaxpr(fn)(*args)
+    return count_flops(jaxpr.jaxpr)

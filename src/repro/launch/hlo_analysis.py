@@ -1,0 +1,187 @@
+"""Parse collective traffic out of compiled HLO, trip-count aware.
+
+``cost_analysis()`` reports FLOPs/bytes with while-loop bodies counted ONCE,
+and collective bytes not at all.  This module walks the optimized HLO text:
+
+  1. split the module into named computations,
+  2. find every while op, extract its trip count from the condition
+     computation (scan loops compare the induction variable against a
+     constant), and its body/condition computation names,
+  3. propagate execution multipliers from ENTRY through while bodies
+     (nested loops multiply) and conditional branches (counted once —
+     upper bound),
+  4. sum operand bytes of every all-gather / all-reduce / reduce-scatter /
+     all-to-all / collective-permute, weighted by its computation's
+     multiplier, attributing each op to the mesh axes it spans via
+     ``replica_groups`` partition size.
+
+The same multiplier map also scales per-computation FLOPs when the caller
+supplies them (see launch/costprobe.py for the FLOPs-side accounting).
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+
+__all__ = ["CollectiveStats", "parse_collectives", "computation_multipliers",
+           "HW"]
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"(f64|f32|f16|bf16|f8e4m3fn|f8e5m2|s64|u64|s32|u32|"
+                       r"s16|u16|s8|u8|pred|c64|c128)\[([0-9,]*)\]")
+
+_COMP_HDR = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(")
+_WHILE_RE = re.compile(r"while\(.*?\)+.*?condition=%?([\w.\-]+).*?body=%?([\w.\-]+)")
+_CALL_RE = re.compile(r"(?:call|fusion)\(.*?\).*?(?:to_apply|calls)=%?([\w.\-]+)")
+_COND_RE = re.compile(r"conditional\(")
+_BRANCH_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_TO_APPLY = re.compile(r"(?:true_computation|false_computation)=%?([\w.\-]+)")
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+# iota form: replica_groups=[n_groups,group_size]<=[N](T(...))?
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]<=")
+_KINDS = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+          "collective-permute")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        n = 1
+        if m.group(2):
+            for d in m.group(2).split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[m.group(1)]
+    return total
+
+
+def _split_computations(hlo: str) -> dict[str, list[str]]:
+    """Computation header lines are top-level (no indent), end with '{', and
+    contain '->'; bodies are indented; '}' at column 0 closes."""
+    comps: dict[str, list[str]] = {}
+    cur = None
+    for line in hlo.splitlines():
+        stripped = line.strip()
+        if (not line.startswith((" ", "\t", "}"))
+                and stripped.endswith("{") and "->" in stripped):
+            m = _COMP_HDR.match(stripped)
+            if m:
+                cur = m.group(1)
+                comps[cur] = []
+                continue
+        if stripped == "}" and not line.startswith(" "):
+            cur = None
+        elif cur is not None:
+            comps[cur].append(line)
+    return comps
+
+
+def _entry_name(hlo: str, comps) -> str | None:
+    m = re.search(r"^ENTRY\s+%?([\w.\-]+)", hlo, re.M)
+    if m:
+        return m.group(1)
+    return next(iter(comps)) if comps else None
+
+
+def _trip_count(cond_lines: list[str]) -> int:
+    """Scan conditions compare the induction var with a constant bound."""
+    consts = []
+    for ln in cond_lines:
+        for m in re.finditer(r"constant\((\d+)\)", ln):
+            consts.append(int(m.group(1)))
+    candidates = [c for c in consts if c > 1]
+    return max(candidates) if candidates else 1
+
+
+def computation_multipliers(hlo: str) -> dict[str, float]:
+    """comp name -> expected executions per program run."""
+    comps = _split_computations(hlo)
+    entry = _entry_name(hlo, comps)
+    mult: dict[str, float] = {}
+
+    def visit(name: str, m: float):
+        if name not in comps:
+            return
+        mult[name] = mult.get(name, 0.0) + m
+        for ln in comps[name]:
+            w = _WHILE_RE.search(ln)
+            if w:
+                cond, body = w.group(1), w.group(2)
+                trips = _trip_count(comps.get(cond, []))
+                visit(cond, m * (trips + 1))
+                visit(body, m * trips)
+                continue
+            c = _CALL_RE.search(ln)
+            if c:
+                visit(c.group(1), m)
+            b = _BRANCH_RE.search(ln)
+            if b:
+                for name2 in b.group(1).split(","):
+                    visit(name2.strip().lstrip("%"), m)
+            for t in _TO_APPLY.finditer(ln):
+                visit(t.group(1), m)
+
+    if entry:
+        visit(entry, 1.0)
+    return mult
+
+
+@dataclass
+class CollectiveStats:
+    #: op kind -> executed payload bytes (per device)
+    bytes_by_kind: dict = field(default_factory=dict)
+    count_by_kind: dict = field(default_factory=dict)
+    #: bytes split by the participating group size ("groupsize:N")
+    bytes_by_groupsize: dict = field(default_factory=dict)
+    total_bytes: int = 0
+
+    def add(self, kind: str, nbytes: float, gsize: int, mult: float):
+        b = nbytes * mult
+        self.bytes_by_kind[kind] = self.bytes_by_kind.get(kind, 0) + b
+        self.count_by_kind[kind] = self.count_by_kind.get(kind, 0) + mult
+        key = f"group{gsize}"
+        self.bytes_by_groupsize[key] = self.bytes_by_groupsize.get(key, 0) + b
+        self.total_bytes += b
+
+
+def parse_collectives(hlo_text: str) -> CollectiveStats:
+    """Trip-count-weighted per-device collective payload bytes."""
+    comps = _split_computations(hlo_text)
+    mult = computation_multipliers(hlo_text)
+    stats = CollectiveStats()
+    for cname, lines in comps.items():
+        m = mult.get(cname, 0.0)
+        if m <= 0:
+            continue
+        for ln in lines:
+            ls = ln.strip()
+            mm = re.match(
+                r"[%\w.\-]+\s*=\s*(.*?)\s*(all-reduce|all-gather|"
+                r"reduce-scatter|all-to-all|collective-permute)"
+                r"(-start)?\(", ls)
+            if not mm:
+                continue
+            nbytes = _shape_bytes(mm.group(1))
+            if not nbytes:
+                continue
+            gi = _GROUPS_IOTA_RE.search(ls)
+            if gi:
+                gsize = int(gi.group(2))
+            else:
+                g = _GROUPS_RE.search(ls)
+                gsize = len(g.group(1).split(",")) if g else 0
+            stats.add(mm.group(2), nbytes, gsize, m)
+    stats.total_bytes = int(stats.total_bytes)
+    return stats
+
+
+@dataclass(frozen=True)
+class HW:
+    """TPU v5e per-chip constants (given in the brief)."""
+    peak_flops: float = 197e12      # bf16 FLOP/s
+    hbm_bw: float = 819e9           # B/s
+    ici_bw: float = 50e9            # B/s per link

@@ -1,0 +1,32 @@
+"""Production meshes (TPU v5e target).
+
+Single-pod : (data=16, model=16)            = 256 chips
+Multi-pod  : (pod=2, data=16, model=16)     = 512 chips
+
+DP spans pod x data (gradient reduction hierarchical: reduce-scatter in-pod
+over ICI, all-reduce across pods over DCI — optionally MixFP4-compressed,
+see distributed/gradcomp.py).  TP/EP live on the in-pod 'model' axis.
+
+Defined as a FUNCTION so importing this module never touches jax device
+state (the dry-run sets XLA_FLAGS before any jax initialisation).
+"""
+from __future__ import annotations
+
+import jax
+
+__all__ = ["make_production_mesh", "make_host_mesh"]
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(data: int | None = None, model: int = 1):
+    """Small mesh over whatever devices this host actually has (tests,
+    examples, elastic restarts on fewer chips)."""
+    n = jax.device_count()
+    if data is None:
+        data = n // model
+    return jax.make_mesh((data, model), ("data", "model"))

@@ -1,0 +1,94 @@
+"""Entry-point builders: train_step / prefill_step / serve_step.
+
+These close over (model, cfg, mesh) and are what both the real drivers
+(launch/train.py, launch/serve.py) and the dry-run (launch/dryrun.py) lower.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.base import ArchConfig, Ctx, build_model
+from repro.optim import AdamWConfig, adamw_init, adamw_update, warmup_cosine
+from repro.optim.adamw import AdamWState
+
+__all__ = ["TrainState", "make_train_step", "make_prefill_step",
+           "make_serve_step", "train_state_specs"]
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: AdamWState
+    step: jax.Array
+    key: jax.Array
+
+
+def train_state_specs(param_specs, *, zero1: bool = False,
+                      data_axes=("data",)):
+    from repro.optim.adamw import zero1_specs
+    mspecs = zero1_specs(param_specs, data_axes) if zero1 else param_specs
+    return TrainState(
+        params=param_specs,
+        opt=AdamWState(step=P(), mu=mspecs, nu=mspecs),
+        step=P(), key=P())
+
+
+def make_train_step(cfg: ArchConfig, mesh=None, *,
+                    opt: AdamWConfig = AdamWConfig(),
+                    max_lr: float = 1e-3, warmup: int = 100,
+                    total_steps: int = 10_000,
+                    data_axes=("data",)):
+    model = build_model(cfg)
+
+    def train_step(state: TrainState, batch):
+        step_key = jax.random.fold_in(state.key, state.step)
+        ctx = Ctx(step_key, cfg.quant, mesh=mesh, data_axes=data_axes)
+        loss, grads = jax.value_and_grad(
+            lambda p: model.loss(p, batch, ctx))(state.params)
+        lr = warmup_cosine(state.step, max_lr=max_lr, warmup=warmup,
+                           total=total_steps)
+        new_params, new_opt, gnorm = adamw_update(
+            opt, state.params, state.opt, grads, lr)
+        new_state = TrainState(new_params, new_opt, state.step + 1, state.key)
+        metrics = {"loss": loss, "grad_norm": gnorm, "lr": lr}
+        return new_state, metrics
+
+    return model, train_step
+
+
+def make_init_state(model, cfg: ArchConfig, seed: int = 0):
+    params, specs = model.init(jax.random.PRNGKey(seed))
+    state = TrainState(params, adamw_init(params),
+                       jnp.zeros((), jnp.int32), jax.random.PRNGKey(seed + 1))
+    return state, specs
+
+
+def make_prefill_step(cfg: ArchConfig, mesh=None, data_axes=("data",)):
+    model = build_model(cfg)
+
+    def prefill_step(params, batch, cache):
+        ctx = Ctx(jax.random.PRNGKey(0), cfg.quant, mesh=mesh,
+                  data_axes=data_axes)
+        return model.prefill(params, batch, ctx, cache)
+
+    return model, prefill_step
+
+
+def make_serve_step(cfg: ArchConfig, mesh=None, data_axes=("data",),
+                    *, greedy: bool = True):
+    model = build_model(cfg)
+
+    def serve_step(params, tokens, cache, cache_len):
+        """One decode step for the whole batch -> (next_tokens, cache)."""
+        ctx = Ctx(jax.random.PRNGKey(0), cfg.quant, mesh=mesh,
+                  data_axes=data_axes)
+        logits, new_cache = model.decode_step(params, tokens, ctx, cache,
+                                              cache_len)
+        nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return nxt, new_cache
+
+    return model, serve_step

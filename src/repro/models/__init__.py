@@ -1,0 +1,1 @@
+from repro.models.base import ArchConfig, build_model

@@ -1,0 +1,542 @@
+"""Model-zoo foundation: configs, parameter/spec pytrees, shared layers.
+
+Parameters are plain nested dicts whose leaves are ``Param(value, spec)``
+pairs built at init; ``unzip_params`` splits them into a value tree (what the
+optimizer/train step carry) and a PartitionSpec tree (what pjit shards).  The
+single source of truth for sharding is therefore the init code itself.
+
+Sharding convention on the production mesh (see launch/mesh.py):
+  "data"  — batch / tokens (+ "pod" prepended for multi-pod via spec rewrite)
+  "model" — TP: attention heads, FFN hidden, vocab; EP: experts
+
+GSPMD pads non-divisible dims (e.g. phi3's 40 heads on a 16-way model axis);
+we accept activation padding but never let it touch the large persistent
+buffers (KV caches shard over sequence instead — see serving/).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from dataclasses import dataclass, field
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.core.qgemm import QuantConfig, qgemm
+
+__all__ = [
+    "ArchConfig",
+    "Param",
+    "unzip_params",
+    "param_count",
+    "rms_norm",
+    "apply_rope",
+    "qlinear",
+    "linear_init",
+    "embed_init",
+    "attention",
+    "mlp",
+    "mlp_init",
+    "attn_init",
+    "build_model",
+    "shard",
+]
+
+
+# ---------------------------------------------------------------------------
+# Config
+# ---------------------------------------------------------------------------
+@dataclass(frozen=True)
+class ArchConfig:
+    name: str = "model"
+    family: str = "dense"        # dense|moe|ssm|hybrid|encdec|vlm
+    n_layers: int = 4
+    d_model: int = 256
+    n_heads: int = 4
+    n_kv_heads: int = 4
+    d_ff: int = 1024
+    vocab: int = 512
+    head_dim: int = 0            # 0 -> d_model // n_heads
+    mlp_type: str = "swiglu"     # swiglu|gelu|geglu
+    rope_theta: float = 10_000.0
+    qk_norm: bool = False
+    softcap_attn: float = 0.0
+    softcap_final: float = 0.0
+    window: int = 0              # sliding-window attention (0 = full)
+    local_global_period: int = 0 # gemma2: local except every p-th layer global
+    attn_chunk: int = 1024       # query-chunked attention block
+    # --- MoE ---
+    n_experts: int = 0
+    top_k: int = 0
+    d_ff_expert: int = 0
+    shared_expert_ff: int = 0
+    ep_mode: str = "expert"      # 'expert' (EP over model) | 'ffn' (TP over d_ff)
+    capacity_factor: float = 1.25
+    router_aux_coef: float = 0.01
+    # --- SSM ---
+    ssm_state: int = 0
+    ssm_conv: int = 4
+    ssm_expand: int = 2
+    ssm_version: int = 1         # 1 = Mamba-1, 2 = Mamba-2 (SSD)
+    ssm_head_dim: int = 64       # Mamba-2 P
+    ssm_chunk: int = 128
+    attn_period: int = 0         # hybrid (zamba2): shared attn every k layers
+    # --- encoder-decoder ---
+    n_dec_layers: int = 0        # >0 => enc-dec; n_layers = encoder depth
+    # --- modality stubs ---
+    n_prefix_embeds: int = 0     # VLM patches / audio frames prepended
+    frontend: str = ""           # 'vision'|'audio'|''
+    # --- numerics ---
+    quant: QuantConfig = field(default_factory=lambda: QuantConfig(method="mixfp4"))
+    norm_eps: float = 1e-5
+    emb_scale: bool = False      # gemma-style sqrt(d) embedding scaling
+
+    @property
+    def dh(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    def replace(self, **kw) -> "ArchConfig":
+        return dataclasses.replace(self, **kw)
+
+
+# ---------------------------------------------------------------------------
+# Param/spec machinery
+# ---------------------------------------------------------------------------
+class Param(NamedTuple):
+    value: jax.Array
+    spec: Any  # PartitionSpec
+
+
+def _is_param(x) -> bool:
+    return isinstance(x, Param)
+
+
+def unzip_params(tree):
+    """Param tree -> (value tree, spec tree)."""
+    values = jax.tree.map(lambda p: p.value, tree, is_leaf=_is_param)
+    specs = jax.tree.map(lambda p: p.spec, tree, is_leaf=_is_param)
+    return values, specs
+
+
+def param_count(values) -> int:
+    return sum(int(np.prod(v.shape)) for v in jax.tree.leaves(values))
+
+
+def _active_mesh():
+    """The mesh from the enclosing `with mesh:` context, or None."""
+    try:  # newer JAX
+        from jax._src import mesh as mesh_lib
+        m = mesh_lib.thread_resources.env.physical_mesh
+    except Exception:
+        try:  # deprecated alias
+            m = jax.interpreters.pxla.thread_resources.env.physical_mesh
+        except Exception:
+            return None
+    try:
+        return m if (m.axis_names and not m.empty) else None
+    except Exception:
+        return None
+
+
+# Global sharding regime.
+#  'fsdp' (train shapes): the logical 'data' axis spans data x model (x pod)
+#   — batch shards over every chip, weights stay model-sharded in HBM and
+#   are gathered per layer (ZeRO-3 pattern); 'model' constraints on
+#   activations are dropped (the axis is busy with batch).
+#  'sp' (prefill shapes): batch over data, SEQUENCE over model — projections
+#   are token-local (no row-parallel psums of (B, 32k, D) activations);
+#   attention gathers the (small, GQA) K/V per layer; weights model-sharded
+#   with FSDP-style gathers.
+#  default 'tp' (decode): 'data' = data (x pod), 'model' = TP.
+_STATE = {"fsdp": False, "sp": False}
+
+
+def set_fsdp(on: bool):
+    _STATE["fsdp"] = bool(on)
+
+
+def set_sp(on: bool):
+    _STATE["sp"] = bool(on)
+
+
+def batch_axes(mesh=None) -> tuple:
+    m = mesh or _active_mesh()
+    names = m.axis_names if m is not None else ("data",)
+    ax = (("pod",) if "pod" in names else ()) + ("data",)
+    if _STATE["fsdp"] and "model" in names:
+        ax = ax + ("model",)
+    return ax
+
+
+def shard(x: jax.Array, *spec) -> jax.Array:
+    """with_sharding_constraint against the ambient mesh; no-op without one.
+
+    The logical 'data' axis resolves per the active regime (see _STATE);
+    'model' activation constraints are dropped under FSDP."""
+    m = _active_mesh()
+    if m is None:
+        return x
+    names = m.axis_names
+    bax = batch_axes(m)
+    if _STATE["sp"]:
+        # sequence-parallel serving: (B, S, ...) -> batch over data,
+        # sequence over model; drop all other activation constraints
+        if len(spec) >= 2 and spec[0] == "data":
+            parts = [bax if len(bax) > 1 else "data", "model"] + \
+                [None] * (len(spec) - 2)
+            return jax.lax.with_sharding_constraint(x, P(*parts))
+        return x
+    parts = []
+    for p in spec:
+        if p == "data":
+            parts.append(bax if len(bax) > 1 else "data")
+        elif p == "model" and _STATE["fsdp"]:
+            parts.append(None)
+        elif p is None or isinstance(p, tuple) or p in names:
+            parts.append(p)
+        else:
+            return x  # unknown axis for this mesh: skip the constraint
+    return jax.lax.with_sharding_constraint(x, P(*parts))
+
+
+def linear_init(key, d_in: int, d_out: int, spec=P(None, "model"),
+                scale: float | None = None) -> Param:
+    s = scale if scale is not None else 1.0 / math.sqrt(d_in)
+    w = jax.random.normal(key, (d_in, d_out), jnp.float32) * s
+    return Param(w, spec)
+
+
+def padded_vocab(vocab: int, multiple: int = 256) -> int:
+    """Vocab rows padded for clean TP sharding (standard practice; the
+    logical vocab is unchanged — lm_logits slices back)."""
+    return ((vocab + multiple - 1) // multiple) * multiple
+
+
+def embed_init(key, vocab: int, d: int) -> Param:
+    w = jax.random.normal(key, (padded_vocab(vocab), d), jnp.float32) * 0.02
+    return Param(w, P("model", None))
+
+
+def norm_init(d: int) -> Param:
+    return Param(jnp.ones((d,), jnp.float32), P(None))
+
+
+# ---------------------------------------------------------------------------
+# Elementwise / norm / rope
+# ---------------------------------------------------------------------------
+def rms_norm(x: jax.Array, g: jax.Array, eps: float = 1e-5) -> jax.Array:
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    return ((x32 * jax.lax.rsqrt(var + eps)) * g).astype(x.dtype)
+
+
+def _rope_freqs(dh: int, theta: float):
+    return 1.0 / (theta ** (jnp.arange(0, dh, 2, dtype=jnp.float32) / dh))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (B, S, H, dh); positions: (B, S) or (S,)."""
+    dh = x.shape[-1]
+    freqs = _rope_freqs(dh, theta)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (B,S,dh/2)
+    cos = jnp.cos(ang)[..., None, :]
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Quantized linear (the paper's GEMM boundary)
+# ---------------------------------------------------------------------------
+def qlinear(x: jax.Array, w: jax.Array, ctx: "Ctx", tag: int) -> jax.Array:
+    """All projection GEMMs route through the Fig. 7 quantized boundary."""
+    return qgemm(ctx.quant, x, w, jax.random.fold_in(ctx.key, tag))
+
+
+@dataclass(frozen=True)
+class Ctx:
+    """Per-call context: PRNG key for SR/RHT, quant config, and the active
+    mesh (None = single-device; MoE then skips its collectives)."""
+    key: jax.Array
+    quant: QuantConfig
+    mesh: Any = None
+    data_axes: tuple = ("data",)      # ("pod","data") on the multi-pod mesh
+    model_axis: str = "model"
+
+    def fold(self, i: int) -> "Ctx":
+        return dataclasses.replace(self, key=jax.random.fold_in(self.key, i))
+
+    def with_key(self, key: jax.Array) -> "Ctx":
+        return dataclasses.replace(self, key=key)
+
+    @property
+    def model_size(self) -> int:
+        return 1 if self.mesh is None else self.mesh.shape[self.model_axis]
+
+    @property
+    def data_size(self) -> int:
+        if self.mesh is None:
+            return 1
+        n = 1
+        for a in self.data_axes:
+            n *= self.mesh.shape[a]
+        return n
+
+
+# ---------------------------------------------------------------------------
+# Attention (GQA + RoPE + SWA + softcap + qk-norm), query-chunked
+# ---------------------------------------------------------------------------
+def attn_init(key, cfg: ArchConfig, d_in: int | None = None) -> dict:
+    d = d_in or cfg.d_model
+    dh = cfg.dh
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": linear_init(ks[0], d, cfg.n_heads * dh),
+        "wk": linear_init(ks[1], d, cfg.n_kv_heads * dh),
+        "wv": linear_init(ks[2], d, cfg.n_kv_heads * dh),
+        "wo": linear_init(ks[3], cfg.n_heads * dh, cfg.d_model,
+                          spec=P("model", None)),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = norm_init(dh)
+        p["k_norm"] = norm_init(dh)
+    return p
+
+
+def _attn_scores_block(q, k, scale, softcap):
+    # q: (B,C,Hkv,G,dh)  k: (B,S,Hkv,dh) -> (B,Hkv,G,C,S)
+    s = jnp.einsum("bchgd,bshd->bhgcs", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    if softcap:
+        s = softcap * jnp.tanh(s / softcap)
+    return s
+
+
+def attention(
+    q: jax.Array,                # (B, Sq, H, dh)
+    k: jax.Array,                # (B, Sk, Hkv, dh)
+    v: jax.Array,                # (B, Sk, Hkv, dh)
+    *,
+    causal_offset: jax.Array | int = 0,   # absolute position of q[0]
+    window: jax.Array | int = 0,          # 0 => full causal
+    softcap: float = 0.0,
+    chunk: int = 1024,
+    kv_valid_len: jax.Array | None = None,  # for decode with preallocated cache
+    causal: bool = True,                    # False: bidirectional / cross-attn
+) -> jax.Array:
+    b, sq, h, dh = q.shape
+    sk = k.shape[1]
+    hkv = k.shape[2]
+    g = h // hkv
+    scale = dh ** -0.5
+    qr = q.reshape(b, sq, hkv, g, dh)
+    kpos = jnp.arange(sk)
+    window = jnp.asarray(window)
+    kv_limit = sk if kv_valid_len is None else kv_valid_len
+
+    def block(qc, qpos):
+        s = _attn_scores_block(qc, k, scale, softcap)      # (B,Hkv,G,C,Sk)
+        if causal:
+            cmask = kpos[None, :] <= qpos[:, None]
+            in_window = jnp.where(window > 0,
+                                  kpos[None, :] > qpos[:, None] - window, True)
+        else:
+            cmask = jnp.ones((qpos.shape[0], sk), bool)
+            in_window = True
+        valid = kpos[None, :] < kv_limit
+        mask = cmask & in_window & valid                   # (C, Sk)
+        s = jnp.where(mask[None, None, None], s, -1e30)
+        p = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("bhgcs,bshd->bchgd", p, v.astype(jnp.float32))
+        return o.reshape(b, -1, h, dh).astype(q.dtype)
+
+    if sq <= chunk:
+        return block(qr, causal_offset + jnp.arange(sq))
+
+    assert sq % chunk == 0, f"Sq={sq} not divisible by attn chunk {chunk}"
+    nc = sq // chunk
+
+    def chunk_fn(i):
+        qc = jax.lax.dynamic_slice_in_dim(qr, i * chunk, chunk, axis=1)
+        qpos = causal_offset + i * chunk + jnp.arange(chunk)
+        return block(qc, qpos)
+
+    out = jax.lax.map(chunk_fn, jnp.arange(nc))            # (nc,B,C,H,dh)
+    return jnp.moveaxis(out, 0, 1).reshape(b, sq, h, dh)
+
+
+def attn_apply(p: dict, x: jax.Array, ctx: Ctx, cfg: ArchConfig, *,
+               positions: jax.Array, window, kv_cache=None,
+               cache_len=None, causal: bool = True,
+               ) -> tuple[jax.Array, tuple | None]:
+    """Full attention sub-layer.  When ``kv_cache=(K, V)`` is given, new K/V
+    are written at ``cache_len`` and attention runs over the cache (decode)."""
+    b, s, _ = x.shape
+    dh = cfg.dh
+    q = qlinear(x, p["wq"], ctx, 0).reshape(b, s, cfg.n_heads, dh)
+    knew = qlinear(x, p["wk"], ctx, 1).reshape(b, s, cfg.n_kv_heads, dh)
+    vnew = qlinear(x, p["wv"], ctx, 2).reshape(b, s, cfg.n_kv_heads, dh)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        knew = rms_norm(knew, p["k_norm"], cfg.norm_eps)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    knew = apply_rope(knew, positions, cfg.rope_theta)
+
+    # TP layout for attention: shard heads over 'model' when divisible;
+    # otherwise shard K/V over the *key sequence* (flash-decoding style:
+    # every chip scores a key slice, softmax reductions psum over model).
+    # Indivisible explicit constraints would trigger involuntary full
+    # rematerialisation in SPMD, so never emit those.
+    m = _active_mesh()
+    msize = m.shape["model"] if (m is not None and "model" in m.axis_names) else 1
+    heads_div = cfg.n_heads % msize == 0 and cfg.n_kv_heads % msize == 0
+    if heads_div:
+        q = shard(q, "data", None, "model", None)
+        knew = shard(knew, "data", None, "model", None)
+        vnew = shard(vnew, "data", None, "model", None)
+    else:
+        q = shard(q, "data", None, None, None)
+        if knew.shape[1] % msize == 0:
+            knew = shard(knew, "data", "model", None, None)
+            vnew = shard(vnew, "data", "model", None, None)
+
+    new_cache = None
+    if kv_cache is None:
+        k, v = knew, vnew
+        causal_offset = 0
+        kv_valid = None
+    else:
+        ck, cv = kv_cache
+        ck = jax.lax.dynamic_update_slice_in_dim(
+            ck, knew.astype(ck.dtype), cache_len, axis=1)
+        cv = jax.lax.dynamic_update_slice_in_dim(
+            cv, vnew.astype(cv.dtype), cache_len, axis=1)
+        k, v = ck, cv
+        causal_offset = cache_len
+        kv_valid = cache_len + s
+        new_cache = (ck, cv)
+
+    o = attention(q, k, v, causal_offset=causal_offset, window=window,
+                  softcap=cfg.softcap_attn, chunk=cfg.attn_chunk,
+                  kv_valid_len=kv_valid, causal=causal)
+    out = qlinear(o.reshape(b, s, cfg.n_heads * dh), p["wo"], ctx, 3)
+    return out, new_cache
+
+
+# ---------------------------------------------------------------------------
+# MLP (SwiGLU / GeLU / GeGLU)
+# ---------------------------------------------------------------------------
+def mlp_init(key, cfg: ArchConfig, d_ff: int | None = None,
+             d_in: int | None = None) -> dict:
+    d = d_in or cfg.d_model
+    f = d_ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    p = {"w_up": linear_init(ks[0], d, f),
+         "w_down": linear_init(ks[1], f, cfg.d_model, spec=P("model", None))}
+    if cfg.mlp_type in ("swiglu", "geglu"):
+        p["w_gate"] = linear_init(ks[2], d, f)
+    return p
+
+
+def mlp(p: dict, x: jax.Array, ctx: Ctx, cfg: ArchConfig) -> jax.Array:
+    mid = (None,) * (x.ndim - 2)  # rank-adaptive: (B,S,D) or (T,D) inputs
+    up = qlinear(x, p["w_up"], ctx, 4)
+    up = shard(up, "data", *mid, "model")
+    if cfg.mlp_type == "swiglu":
+        gate = jax.nn.silu(qlinear(x, p["w_gate"], ctx, 5))
+        h = shard(gate, "data", *mid, "model") * up
+    elif cfg.mlp_type == "geglu":
+        gate = jax.nn.gelu(qlinear(x, p["w_gate"], ctx, 5))
+        h = shard(gate, "data", *mid, "model") * up
+    else:  # gelu
+        h = jax.nn.gelu(up)
+    return qlinear(h, p["w_down"], ctx, 6)
+
+
+# ---------------------------------------------------------------------------
+# Shared LM head / loss
+# ---------------------------------------------------------------------------
+def lm_logits(x: jax.Array, embed: jax.Array, softcap: float = 0.0,
+              vocab: int | None = None) -> jax.Array:
+    """Tied-embedding LM head (bf16 inputs, f32 logits), optional softcap.
+    ``vocab`` slices off the TP padding rows of the embedding."""
+    logits = jnp.einsum("...d,vd->...v", x.astype(jnp.float32),
+                        embed.astype(jnp.float32))
+    if softcap:
+        logits = softcap * jnp.tanh(logits / softcap)
+    if vocab is not None and logits.shape[-1] != vocab:
+        logits = logits[..., :vocab]
+    return logits
+
+
+def xent_loss(logits: jax.Array, labels: jax.Array,
+              valid_vocab: int | None = None) -> jax.Array:
+    """Mean next-token cross entropy; labels < 0 are masked.
+
+    ``valid_vocab`` masks TP-padding columns out of the logsumexp so the
+    loss over a padded-vocab logits tensor is exact — logits stay
+    vocab-sharded all the way into the reduction (no all-gather)."""
+    if valid_vocab is not None and logits.shape[-1] != valid_vocab:
+        col = jnp.arange(logits.shape[-1])
+        logits = jnp.where(col < valid_vocab, logits, -1e30)
+    mask = (labels >= 0).astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(
+        logits, jnp.maximum(labels, 0)[..., None], axis=-1)[..., 0]
+    return jnp.sum((lse - gold) * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+def fused_lm_loss(x: jax.Array, embed: jax.Array, labels: jax.Array,
+                  softcap: float, valid_vocab: int,
+                  chunk: int = 1024) -> jax.Array:
+    """Sequence-chunked LM head + cross entropy (never materialises the full
+    (B, S, V) logits — the dominant temp of big-vocab training).  The scan
+    body is rematerialised in the backward pass, bounding live logits to one
+    chunk."""
+    b, s, d = x.shape
+    chunk = min(chunk, s)
+    if s % chunk:
+        chunk = s  # fall back (smoke shapes)
+    nc = s // chunk
+
+    def body(acc, i):
+        xc = jax.lax.dynamic_slice_in_dim(x, i * chunk, chunk, axis=1)
+        lc = jax.lax.dynamic_slice_in_dim(labels, i * chunk, chunk, axis=1)
+        logits = lm_logits(xc, embed, softcap)
+        logits = shard(logits, "data", None, "model")
+        if logits.shape[-1] != valid_vocab:
+            col = jnp.arange(logits.shape[-1])
+            logits = jnp.where(col < valid_vocab, logits, -1e30)
+        mask = (lc >= 0).astype(jnp.float32)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(
+            logits, jnp.maximum(lc, 0)[..., None], axis=-1)[..., 0]
+        nll, cnt = acc
+        return (nll + jnp.sum((lse - gold) * mask),
+                cnt + jnp.sum(mask)), None
+
+    body_fn = jax.checkpoint(body) if nc > 1 else body
+    (nll, cnt), _ = jax.lax.scan(
+        body_fn, (jnp.float32(0.0), jnp.float32(0.0)), jnp.arange(nc))
+    return nll / jnp.maximum(cnt, 1.0)
+
+
+# ---------------------------------------------------------------------------
+# Model registry
+# ---------------------------------------------------------------------------
+def build_model(cfg: ArchConfig):
+    """Return the module implementing ``cfg.family``; each module exposes
+    init / forward / loss / init_cache / prefill / decode_step."""
+    from repro.models import encdec, mamba, transformer
+
+    if cfg.family in ("dense", "moe", "vlm"):
+        return transformer.TransformerLM(cfg)
+    if cfg.family in ("ssm", "hybrid"):
+        return mamba.MambaLM(cfg)
+    if cfg.family == "encdec":
+        return encdec.EncDecLM(cfg)
+    raise ValueError(f"unknown family {cfg.family!r}")

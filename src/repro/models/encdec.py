@@ -1,0 +1,206 @@
+"""Encoder-decoder backbone (seamless-m4t-medium).
+
+The audio frontend is a STUB per the brief: ``input_specs()`` provides
+precomputed frame embeddings (B, S_src, D) as the encoder input.  The decoder
+is a standard causal transformer with cross-attention into the encoder
+memory.  All projections (self-attn, cross-attn, FFN, both sides) run through
+the MixFP4 GEMM boundary.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models import base
+from repro.models.base import (ArchConfig, Ctx, attention, qlinear, rms_norm,
+                               shard, unzip_params)
+
+
+class EncDecLM:
+    def __init__(self, cfg: ArchConfig):
+        assert cfg.n_dec_layers > 0
+        self.cfg = cfg
+
+    # ------------------------------------------------------------------
+    def _enc_layer_init(self, key):
+        cfg = self.cfg
+        k1, k2 = jax.random.split(key)
+        return {
+            "ln_attn": base.norm_init(cfg.d_model),
+            "attn": base.attn_init(k1, cfg),
+            "ln_mlp": base.norm_init(cfg.d_model),
+            "mlp": base.mlp_init(k2, cfg),
+        }
+
+    def _dec_layer_init(self, key):
+        cfg = self.cfg
+        k1, k2, k3 = jax.random.split(key, 3)
+        return {
+            "ln_self": base.norm_init(cfg.d_model),
+            "self_attn": base.attn_init(k1, cfg),
+            "ln_cross": base.norm_init(cfg.d_model),
+            "cross_attn": base.attn_init(k2, cfg),
+            "ln_mlp": base.norm_init(cfg.d_model),
+            "mlp": base.mlp_init(k3, cfg),
+        }
+
+    def init(self, key):
+        cfg = self.cfg
+        ke, k1, k2 = jax.random.split(key, 3)
+        _, esp = unzip_params(self._enc_layer_init(k1))
+        _, dsp = unzip_params(self._dec_layer_init(k2))
+        enc_specs = jax.tree.map(lambda s: P(None, *s), esp)
+        dec_specs = jax.tree.map(lambda s: P(None, *s), dsp)
+        ekeys = jax.random.split(k1, cfg.n_layers)
+        dkeys = jax.random.split(k2, cfg.n_dec_layers)
+        values = {
+            "embed": jax.random.normal(ke, (base.padded_vocab(cfg.vocab), cfg.d_model),
+                                       jnp.float32) * 0.02,
+            "enc_layers": jax.vmap(
+                lambda k: unzip_params(self._enc_layer_init(k))[0])(ekeys),
+            "dec_layers": jax.vmap(
+                lambda k: unzip_params(self._dec_layer_init(k))[0])(dkeys),
+            "ln_enc": jnp.ones((cfg.d_model,), jnp.float32),
+            "ln_dec": jnp.ones((cfg.d_model,), jnp.float32),
+        }
+        specs = {
+            "embed": P("model", None),
+            "enc_layers": enc_specs,
+            "dec_layers": dec_specs,
+            "ln_enc": P(None),
+            "ln_dec": P(None),
+        }
+        return values, specs
+
+    # ------------------------------------------------------------------
+    def encode(self, params, src_embeds, ctx: Ctx):
+        """src_embeds: (B, S_src, D) precomputed frame embeddings (stub)."""
+        cfg = self.cfg
+        x = shard(src_embeds.astype(jnp.bfloat16), "data", None, None)
+        positions = jnp.arange(x.shape[1])[None, :]
+        lkeys = jax.random.split(jax.random.fold_in(ctx.key, 1), cfg.n_layers)
+
+        def body(x, xs):
+            lp, lk = xs
+            lctx = ctx.with_key(lk)
+            h = rms_norm(x, lp["ln_attn"], cfg.norm_eps)
+            a, _ = base.attn_apply(lp["attn"], h, lctx.fold(1), cfg,
+                                   positions=positions, window=0,
+                                   causal=False)
+            x = x + a
+            h = rms_norm(x, lp["ln_mlp"], cfg.norm_eps)
+            x = x + base.mlp(lp["mlp"], h, lctx.fold(2), cfg)
+            return shard(x, "data", None, "model"), None
+
+        body_fn = jax.checkpoint(body)
+        x, _ = jax.lax.scan(body_fn, x, (params["enc_layers"], lkeys))
+        return rms_norm(x, params["ln_enc"], cfg.norm_eps)
+
+    def _cross_attn(self, p, x, memory, ctx: Ctx, cfg):
+        b, s, _ = x.shape
+        dh = cfg.dh
+        q = qlinear(x, p["wq"], ctx, 0).reshape(b, s, cfg.n_heads, dh)
+        k = qlinear(memory, p["wk"], ctx, 1).reshape(
+            b, memory.shape[1], cfg.n_kv_heads, dh)
+        v = qlinear(memory, p["wv"], ctx, 2).reshape(
+            b, memory.shape[1], cfg.n_kv_heads, dh)
+        o = attention(q, k, v, causal=False, chunk=cfg.attn_chunk)
+        return qlinear(o.reshape(b, s, -1), p["wo"], ctx, 3)
+
+    def _decoder(self, params, tokens, memory, ctx: Ctx, *,
+                 kv_cache=None, cache_len=None, positions=None):
+        cfg = self.cfg
+        x = params["embed"][tokens].astype(jnp.bfloat16)
+        x = shard(x, "data", None, None)
+        if positions is None:
+            positions = jnp.arange(x.shape[1])[None, :]
+        lkeys = jax.random.split(jax.random.fold_in(ctx.key, 2),
+                                 cfg.n_dec_layers)
+        use_cache = kv_cache is not None
+
+        def body(carry, xs):
+            x = carry
+            if use_cache:
+                lp, lk, ck, cv = xs
+            else:
+                lp, lk = xs
+                ck = cv = None
+            lctx = ctx.with_key(lk)
+            h = rms_norm(x, lp["ln_self"], cfg.norm_eps)
+            a, ncache = base.attn_apply(
+                lp["self_attn"], h, lctx.fold(1), cfg, positions=positions,
+                window=0, kv_cache=(ck, cv) if use_cache else None,
+                cache_len=cache_len)
+            x = x + a
+            h = rms_norm(x, lp["ln_cross"], cfg.norm_eps)
+            x = x + self._cross_attn(lp["cross_attn"], h, memory,
+                                     lctx.fold(2), cfg)
+            h = rms_norm(x, lp["ln_mlp"], cfg.norm_eps)
+            x = x + base.mlp(lp["mlp"], h, lctx.fold(3), cfg)
+            x = shard(x, "data", None, "model")
+            return x, ncache if use_cache else None
+
+        body_fn = jax.checkpoint(body)
+        xs = ((params["dec_layers"], lkeys, kv_cache[0], kv_cache[1])
+              if use_cache else (params["dec_layers"], lkeys))
+        x, caches = jax.lax.scan(body_fn, x, xs)
+        x = rms_norm(x, params["ln_dec"], cfg.norm_eps)
+        return x, caches
+
+    # ------------------------------------------------------------------
+    def hidden(self, params, batch, ctx: Ctx):
+        memory = self.encode(params, batch["src_embeds"], ctx)
+        x, _ = self._decoder(params, batch["tokens"], memory, ctx)
+        return x, 0.0
+
+    def forward(self, params, batch, ctx: Ctx):
+        """batch: src_embeds (B,S,D), tokens (B,T), labels (B,T)."""
+        x, aux = self.hidden(params, batch, ctx)
+        logits = base.lm_logits(x, params["embed"], self.cfg.softcap_final)
+        return base.shard(logits, "data", None, "model"), aux
+
+    def loss(self, params, batch, ctx: Ctx):
+        x, aux = self.hidden(params, batch, ctx)
+        return base.fused_lm_loss(x, params["embed"], batch["labels"],
+                                  self.cfg.softcap_final,
+                                  self.cfg.vocab) + aux
+
+    # ------------------------------------------------------------------
+    def init_cache(self, batch_size: int, max_len: int, dtype=jnp.bfloat16):
+        cfg = self.cfg
+        shape = (cfg.n_dec_layers, batch_size, max_len, cfg.n_kv_heads,
+                 cfg.dh)
+        return {
+            "k": jnp.zeros(shape, dtype),
+            "v": jnp.zeros(shape, dtype),
+            "memory": jnp.zeros((batch_size, max_len, cfg.d_model), dtype),
+        }
+
+    def cache_specs(self):
+        spec = P(None, "data", "model", None, None)
+        return {"k": spec, "v": spec,
+                "memory": P("data", "model", None)}
+
+    def prefill(self, params, batch, ctx: Ctx, cache):
+        """Encode source; prefill decoder on the target prefix."""
+        cfg = self.cfg
+        memory = self.encode(params, batch["src_embeds"], ctx)
+        mem_len = memory.shape[1]
+        mem_buf = jax.lax.dynamic_update_slice_in_dim(
+            cache["memory"], memory.astype(cache["memory"].dtype), 0, axis=1)
+        x, (nk, nv) = self._decoder(
+            params, batch["tokens"], memory, ctx,
+            kv_cache=(cache["k"], cache["v"]), cache_len=0)
+        logits = base.lm_logits(x[:, -1], params["embed"], cfg.softcap_final, vocab=cfg.vocab)
+        return logits, {"k": nk, "v": nv, "memory": mem_buf}
+
+    def decode_step(self, params, tokens, ctx: Ctx, cache, cache_len):
+        cfg = self.cfg
+        positions = cache_len + jnp.zeros((tokens.shape[0], 1), jnp.int32)
+        x, (nk, nv) = self._decoder(
+            params, tokens[:, None], cache["memory"].astype(jnp.bfloat16),
+            ctx, kv_cache=(cache["k"], cache["v"]), cache_len=cache_len,
+            positions=positions)
+        logits = base.lm_logits(x[:, 0], params["embed"], cfg.softcap_final, vocab=cfg.vocab)
+        return logits, {"k": nk, "v": nv, "memory": cache["memory"]}

@@ -1,0 +1,221 @@
+"""Mixture-of-Experts layer with real expert parallelism.
+
+Dispatch is sort-based (MegaBlocks-style), NOT the GShard dense-dispatch
+einsum — at qwen3-moe scale the (T,E,C) one-hot einsum costs ~100x the expert
+FFN FLOPs, so it would poison the roofline.  Layout:
+
+  1. route (outside shard_map, f32): top-k over router logits; gates
+     renormalised; Switch-style load-balance aux loss,
+  2. EP mode ('expert', experts sharded over the model axis): tokens are
+     re-sharded over (data x model) so every chip dispatches a distinct
+     token slice.  Choices are sorted by expert; rank-within-expert gives a
+     slot in a per-(source, expert) capacity buffer (cap =
+     ceil(T_loc*k*cf/E); overflow drops — GShard policy).  ONE expert-major
+     all_to_all ships (E, cap+1, D) -> (E_loc, M*(cap+1), D): each chip
+     receives exactly its experts' tokens from every source, runs the
+     quantized expert FFNs, and the reverse all_to_all returns outputs.
+  3. FFN-TP mode ('ffn', for expert counts not divisible by the mesh, e.g.
+     qwen2-moe's 60): tokens stay on their data shard (replicated over
+     model); expert weights are sharded on d_ff and the down-projection
+     psums over the model axis.  Dispatch work is duplicated M-fold but is
+     O(T log T) sort + gathers — negligible next to the FFN.
+  4. combine: gather outputs per choice, weight by gates, segment-sum over k.
+
+Without a mesh (CPU smoke tests) the identical local math runs directly.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models import base
+from repro.models.base import ArchConfig, Ctx, Param, qlinear
+
+__all__ = ["moe_init", "moe_apply"]
+
+
+def stored_experts(cfg: ArchConfig) -> int:
+    """Expert rows as stored: padded to a multiple of 16 so the EP dim is
+    always shardable on the production mesh (qwen2: 60 -> 64; dummy experts
+    are zero-init and receive no tokens)."""
+    if cfg.ep_mode != "expert":
+        return cfg.n_experts
+    return -(-cfg.n_experts // 16) * 16
+
+
+def moe_init(key, cfg: ArchConfig) -> dict:
+    e, d, f = cfg.n_experts, cfg.d_model, cfg.d_ff_expert
+    e_store = stored_experts(cfg)
+    ks = jax.random.split(key, 5)
+    s = 1.0 / math.sqrt(d)
+    if cfg.ep_mode == "expert":
+        wspec_in = P("model", None, None)
+        wspec_out = P("model", None, None)
+    else:  # ffn-TP
+        wspec_in = P(None, None, "model")
+        wspec_out = P(None, "model", None)
+
+    def w(k, shape, scale):
+        arr = jax.random.normal(k, shape, jnp.float32) * scale
+        if e_store != e:
+            arr = arr.at[e:].set(0.0)
+        return arr
+
+    p = {
+        "router": Param(
+            jax.random.normal(ks[0], (d, e), jnp.float32) * s, P(None, None)),
+        "w_up": Param(w(ks[1], (e_store, d, f), s), wspec_in),
+        "w_gate": Param(w(ks[2], (e_store, d, f), s), wspec_in),
+        "w_down": Param(w(ks[3], (e_store, f, d), 1 / math.sqrt(f)),
+                        wspec_out),
+    }
+    if cfg.shared_expert_ff:
+        p["shared"] = base.mlp_init(ks[4], cfg, d_ff=cfg.shared_expert_ff)
+    return p
+
+
+def _route(x, wr, cfg: ArchConfig):
+    """Router in f32: top-k gates (renormalised), indices, aux loss."""
+    logits = jnp.einsum("td,de->te", x.astype(jnp.float32), wr)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, idx = jax.lax.top_k(probs, cfg.top_k)            # (T,k)
+    gates = gates / jnp.sum(gates, axis=-1, keepdims=True)
+    e = cfg.n_experts
+    ohot = jax.nn.one_hot(idx[:, 0], e, dtype=jnp.float32)  # primary choice
+    aux = e * jnp.sum(jnp.mean(ohot, axis=0) * jnp.mean(probs, axis=0))
+    return gates, idx, aux
+
+
+def _dispatch_indices(idx, e: int, cap: int):
+    """Sort choices by expert; rank-within-expert -> capacity slot.
+
+    Returns flat arrays of length T*k; slot==cap marks a dropped choice
+    (writes land in the discard slot of an (E, cap+1, D) buffer)."""
+    t, k = idx.shape
+    e_f = idx.reshape(-1)
+    tok_f = jnp.repeat(jnp.arange(t), k)
+    order = jnp.argsort(e_f, stable=True)
+    e_s = e_f[order]
+    tok_s = tok_f[order]
+    starts = jnp.searchsorted(e_s, jnp.arange(e), side="left")
+    pos = jnp.arange(t * k) - starts[e_s]
+    keep = pos < cap
+    slot = jnp.where(keep, pos, cap)
+    return tok_s, e_s, slot, keep, order
+
+
+def _expert_ffn(wu, wg, wd, h, key, cfg: ArchConfig, psum_axis=None):
+    """Quantized per-expert FFN over (E_loc, C, D) buffers (vmapped)."""
+
+    def one(i, wu_i, wg_i, wd_i, h_i):
+        c = Ctx(jax.random.fold_in(key, 1000 + i), cfg.quant)
+        up = qlinear(h_i, wu_i, c, 4)
+        gate = jax.nn.silu(qlinear(h_i, wg_i, c, 5))
+        return qlinear(gate * up, wd_i, c, 6)
+
+    out = jax.vmap(one)(jnp.arange(wu.shape[0]), wu, wg, wd, h)
+    if psum_axis is not None:
+        out = jax.lax.psum(out, psum_axis)
+    return out
+
+
+def _moe_local(x, gates, idx, key, wu, wg, wd, *, cfg: ArchConfig,
+               m: int, ep: bool, model_axis: str, has_mesh: bool,
+               e_pad: int | None = None):
+    """Per-shard MoE body.  x: (T_loc, D).  ``e_pad`` >= n_experts rounds the
+    buffer's expert dim up to a multiple of the model axis (dummy experts
+    receive no tokens; qwen2-moe pads 60 -> 64)."""
+    t, d = x.shape
+    e = cfg.n_experts
+    e_pad = e_pad or e
+    cap = max(int(math.ceil(t * cfg.top_k * cfg.capacity_factor / e)), 4)
+
+    tok_s, e_s, slot, keep, order = _dispatch_indices(idx, e, cap)
+    gate_f = gates.reshape(-1)[order]
+
+    buf = jnp.zeros((e_pad, cap + 1, d), x.dtype)
+    buf = buf.at[e_s, slot].set(x[tok_s] * keep[:, None].astype(x.dtype))
+
+    if ep and m > 1:
+        recv = jax.lax.all_to_all(
+            buf, model_axis, split_axis=0, concat_axis=1, tiled=True)
+        out = _expert_ffn(wu, wg, wd, recv, key, cfg)
+        back = jax.lax.all_to_all(
+            out, model_axis, split_axis=1, concat_axis=0, tiled=True)
+    else:
+        psum_axis = model_axis if (not ep and has_mesh) else None
+        back = _expert_ffn(wu, wg, wd, buf, key, cfg, psum_axis=psum_axis)
+
+    per_choice = back[e_s, slot] * (gate_f * keep)[:, None].astype(x.dtype)
+    return jnp.zeros_like(x).at[tok_s].add(per_choice)
+
+
+def moe_apply(p: dict, x: jax.Array, ctx: Ctx, cfg: ArchConfig):
+    """x: (B, S, D) -> (out, aux_loss)."""
+    b, s, d = x.shape
+    xt = x.reshape(b * s, d)
+    gates, idx, aux = _route(xt, p["router"], cfg)
+    ep = cfg.ep_mode == "expert"
+    t = b * s
+
+    if ctx.mesh is None:
+        out = _moe_local(xt, gates.astype(x.dtype), idx, ctx.key,
+                         p["w_up"], p["w_gate"], p["w_down"],
+                         cfg=cfg, m=1, ep=ep, model_axis=ctx.model_axis,
+                         has_mesh=False, e_pad=p["w_up"].shape[0])
+    else:
+        dta, mdl = ctx.data_axes, ctx.model_axis
+        msize = ctx.model_size
+        wu, wg, wd = p["w_up"], p["w_gate"], p["w_down"]
+        e_pad = None
+        if ep:
+            # weights are stored pre-padded to a multiple of 16 (moe_init);
+            # pad further only if the mesh demands it
+            e_pad = -(-wu.shape[0] // msize) * msize
+            if e_pad != wu.shape[0]:
+                padn = e_pad - wu.shape[0]
+                wu = jnp.pad(wu, ((0, padn), (0, 0), (0, 0)))
+                wg = jnp.pad(wg, ((0, padn), (0, 0), (0, 0)))
+                wd = jnp.pad(wd, ((0, padn), (0, 0), (0, 0)))
+            # tokens re-shard over every chip: each dispatches a distinct
+            # slice; pad T to the shard count (pads route to expert 0 with
+            # zero gate).
+            tok_axes = tuple(dict.fromkeys([*dta, mdl]))
+            shards = 1
+            for a in tok_axes:
+                shards *= ctx.mesh.shape[a]
+            pad = (-t) % shards
+            if pad:
+                xt = jnp.pad(xt, ((0, pad), (0, 0)))
+                gates = jnp.pad(gates, ((0, pad), (0, 0)))
+                idx = jnp.pad(idx, ((0, pad), (0, 0)))
+            tok_spec = P(tok_axes, None)
+            wspec = P(mdl, None, None)
+            in_specs = (tok_spec, tok_spec, tok_spec, P(),
+                        wspec, wspec, wspec)
+            out_spec = tok_spec
+        else:
+            # ffn-TP: tokens stay on their data shard, replicated over model
+            # (the model axis carries d_ff; exclude it from the token axes)
+            dta = tuple(a for a in dta if a != mdl) or ("data",)
+            tok_spec = P(dta, None)
+            in_specs = (tok_spec, tok_spec, tok_spec, P(),
+                        P(None, None, mdl), P(None, None, mdl),
+                        P(None, mdl, None))
+            out_spec = tok_spec
+
+        body = partial(_moe_local, cfg=cfg, m=msize, ep=ep,
+                       model_axis=mdl, has_mesh=True, e_pad=e_pad)
+        out = jax.shard_map(
+            body, mesh=ctx.mesh, in_specs=in_specs, out_specs=out_spec,
+            check_vma=False,
+        )(xt, gates.astype(x.dtype), idx, ctx.key, wu, wg, wd)
+        out = out[:t]
+
+    if "shared" in p:
+        out = out + base.mlp(p["shared"], xt[:t], ctx, cfg)
+    return out.reshape(b, s, d), aux * cfg.router_aux_coef

@@ -1,0 +1,101 @@
+"""AdamW with FP32 master weights (paper Fig. 7 blue path).
+
+The params tree IS the FP32 master copy: the bf16 cast happens inside the
+quantized GEMM boundary (core/qgemm), which is exactly the paper's dataflow
+(master weights FP32, GEMM operands quantized per step).  Optimizer moments
+can be sharded over the data axis on top of the model sharding (ZeRO-1) via
+``zero1_specs`` — divides optimizer memory by the DP degree.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+__all__ = ["AdamWConfig", "AdamWState", "adamw_init", "adamw_update",
+           "zero1_specs", "global_norm", "clip_by_global_norm"]
+
+
+@dataclass(frozen=True)
+class AdamWConfig:
+    b1: float = 0.9
+    b2: float = 0.95           # paper §4.2
+    eps: float = 1e-8
+    weight_decay: float = 0.1  # paper §4.2
+    clip_norm: float = 1.0     # paper §4.2
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    mu: Any
+    nu: Any
+
+
+def adamw_init(params) -> AdamWState:
+    zeros = lambda t: jax.tree.map(lambda x: jnp.zeros_like(x, jnp.float32), t)
+    return AdamWState(jnp.zeros((), jnp.int32), zeros(params), zeros(params))
+
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                        for g in jax.tree.leaves(tree)))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-9))
+    return jax.tree.map(lambda g: g * scale, grads), norm
+
+
+def adamw_update(cfg: AdamWConfig, params, state: AdamWState, grads, lr):
+    """One AdamW step on the FP32 master params.
+
+    Returns (new_params, new_state, grad_norm)."""
+    grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+    if cfg.clip_norm:
+        grads, gnorm = clip_by_global_norm(grads, cfg.clip_norm)
+    else:
+        gnorm = global_norm(grads)
+    step = state.step + 1
+    b1c = 1 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1 - cfg.b2 ** step.astype(jnp.float32)
+
+    mu = jax.tree.map(lambda m, g: cfg.b1 * m + (1 - cfg.b1) * g,
+                      state.mu, grads)
+    nu = jax.tree.map(lambda v, g: cfg.b2 * v + (1 - cfg.b2) * g * g,
+                      state.nu, grads)
+
+    def upd(w, m, v):
+        w32 = w.astype(jnp.float32)
+        mhat = m / b1c
+        vhat = v / b2c
+        return (w32 - lr * (mhat / (jnp.sqrt(vhat) + cfg.eps)
+                            + cfg.weight_decay * w32)).astype(w.dtype)
+
+    new_params = jax.tree.map(upd, params, mu, nu)
+    return new_params, AdamWState(step, mu, nu), gnorm
+
+
+def zero1_specs(param_specs, data_axes=("data",)):
+    """ZeRO-1: shard optimizer-moment leaves additionally over the data axis
+    on their first unsharded dimension (falls back to the param spec when no
+    free dim exists)."""
+    def reshard(spec):
+        if spec is None:
+            return None  # replicated leaves (scalars etc.) stay replicated
+        parts = list(spec)
+        used = {a for p in parts if p is not None
+                for a in (p if isinstance(p, tuple) else (p,))}
+        axes = tuple(a for a in data_axes if a not in used)
+        if not axes:
+            return spec
+        for i, p in enumerate(parts):
+            if p is None:
+                parts[i] = axes
+                return P(*parts)
+        return spec
+    return jax.tree.map(reshard, param_specs,
+                        is_leaf=lambda x: isinstance(x, P) or x is None)

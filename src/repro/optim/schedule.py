@@ -1,0 +1,14 @@
+"""LR schedules: warmup + cosine to a minimum ratio (paper §4.2 uses
+max 1e-3 -> min 1e-4 for the 114M run, i.e. min ratio 0.1)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def warmup_cosine(step, *, max_lr: float, warmup: int, total: int,
+                  min_ratio: float = 0.1):
+    step = jnp.asarray(step, jnp.float32)
+    warm = max_lr * step / jnp.maximum(warmup, 1)
+    t = jnp.clip((step - warmup) / jnp.maximum(total - warmup, 1), 0.0, 1.0)
+    cos = max_lr * (min_ratio + (1 - min_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * t)))
+    return jnp.where(step < warmup, warm, cos)

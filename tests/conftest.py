@@ -1,0 +1,9 @@
+import os
+
+# Tests run on the single real CPU device.  The 512-device override belongs
+# ONLY to launch/dryrun.py (see system design); never set it here.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import jax
+
+jax.config.update("jax_enable_x64", False)

@@ -1,0 +1,48 @@
+"""Appendix A reproduction + crest/QSNR utilities."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import analysis
+
+
+def test_appendix_a_crossover_exact():
+    """Eq. 31-33: kappa* = 2.224277301764024, R* = 0.007888089150418761,
+    QSNR* = 21.03028189684982 dB."""
+    kstar, rstar, qstar = analysis.qsnr_crossover()
+    assert kstar == pytest.approx(2.224277301764024, abs=1e-12)
+    assert rstar == pytest.approx(0.007888089150418761, rel=1e-10)
+    assert qstar == pytest.approx(21.03028189684982, abs=1e-8)
+
+
+def test_crossover_direction():
+    """Below kappa*: NVINT4 better (lower R); above: NVFP4 better (App. A)."""
+    kstar, _, _ = analysis.qsnr_crossover()
+    assert analysis.r_nvint4(kstar - 0.5) < analysis.r_nvfp4(kstar - 0.5)
+    assert analysis.r_nvint4(kstar + 0.5) > analysis.r_nvfp4(kstar + 0.5)
+
+
+def test_crest_factor_basics():
+    # constant-magnitude block: peak == rms -> kappa = 1
+    x = jnp.ones((1, 16))
+    assert float(analysis.crest_factor(x).squeeze()) == pytest.approx(1.0)
+    # single spike: peak / rms = sqrt(16)
+    y = jnp.zeros((1, 16)).at[0, 0].set(4.0)
+    assert float(analysis.crest_factor(y).squeeze()) == pytest.approx(4.0)
+
+
+def test_qsnr_scale_invariant():
+    import jax
+    x = jax.random.normal(jax.random.PRNGKey(0), (128,))
+    noise = jax.random.normal(jax.random.PRNGKey(1), (128,)) * 0.01
+    a = float(analysis.qsnr(x, x + noise))
+    b = float(analysis.qsnr(10 * x, 10 * (x + noise)))
+    assert a == pytest.approx(b, abs=1e-4)
+
+
+def test_selection_fractions_sum_to_one():
+    import jax
+    x = jax.random.normal(jax.random.PRNGKey(2), (64, 128))
+    f = analysis.selection_fractions(x, "mixfp4_e3")
+    assert f.shape == (3,)
+    assert f.sum() == pytest.approx(1.0)

@@ -1,0 +1,125 @@
+"""Bit-level format tests: Table 1 codebooks, encode/decode, type-in-scale."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import formats, scaling
+
+
+def test_table1_codebooks():
+    # Table 1 exact values
+    assert formats.E2M1.levels == (0.0, 0.5, 1.0, 1.5, 2.0, 3.0, 4.0, 6.0)
+    # stored E1M2 magnitudes x2-remapped -> exact INT4 lattice (Fig. 6)
+    assert formats.E1M2.levels == tuple(float(i) for i in range(8))
+    assert formats.INT4.levels == tuple(float(i) for i in range(8))
+    assert formats.E3M0.levels == (0.0, 0.25, 0.5, 1.0, 2.0, 4.0, 8.0, 16.0)
+    # Table 1 numeric anchors
+    assert formats.E2M1.max_level == 6.0      # S.11.1 = 1.5 * 2^2
+    assert formats.E1M2.max_level == 7.0      # S.1.11 = 1.75 * 2 -> x2 = 7
+    assert formats.PER_TENSOR_DENOM == 6 * 448 == 7 * 384
+
+
+def test_e2m1_bit_layout():
+    # payload index == [e1 e0 m]; decode must match Table 1 exactly
+    nibbles = jnp.arange(16, dtype=jnp.uint8)
+    vals = formats.e2m1_decode(nibbles)
+    expect = np.array([0.0, 0.5, 1.0, 1.5, 2.0, 3.0, 4.0, 6.0] * 2)
+    expect[8:] *= -1
+    np.testing.assert_array_equal(np.asarray(vals), expect)
+
+
+def test_e1m2_bit_layout():
+    nibbles = jnp.arange(16, dtype=jnp.uint8)
+    vals = formats.e1m2_decode(nibbles)
+    expect = np.array([float(i) for i in range(8)] * 2)
+    expect[8:] *= -1
+    np.testing.assert_array_equal(np.asarray(vals), expect)
+
+
+def test_encode_decode_roundtrip():
+    for enc, dec, fmt in [
+        (formats.e2m1_encode, formats.e2m1_decode, formats.E2M1),
+        (formats.e1m2_encode, formats.e1m2_decode, formats.E1M2),
+    ]:
+        lv = np.array(fmt.levels)
+        signed = np.concatenate([lv, -lv[1:]])
+        out = dec(enc(jnp.asarray(signed)))
+        np.testing.assert_array_equal(np.asarray(out), signed)
+
+
+def test_decode_to_e2m2_unification():
+    """Fig. 9: one decoder, two paths, selected by block-shared T."""
+    nib = jnp.arange(16, dtype=jnp.uint8)
+    v0 = formats.decode_to_e2m2(nib, jnp.zeros((), jnp.uint8))
+    v1 = formats.decode_to_e2m2(nib, jnp.ones((), jnp.uint8))
+    np.testing.assert_array_equal(np.asarray(v0), np.asarray(formats.e2m1_decode(nib)))
+    np.testing.assert_array_equal(np.asarray(v1), np.asarray(formats.e1m2_decode(nib)))
+
+
+def test_rne_ties_to_even():
+    # E2M1 ties: 2.5 -> 2 (even mantissa), 1.75 -> 2, 5.0 -> 4
+    x = jnp.array([2.5, -2.5, 1.75, 5.0, 0.25, 0.75])
+    q = formats.quantize_to_codebook(x, formats.E2M1)
+    np.testing.assert_array_equal(np.asarray(q), [2.0, -2.0, 2.0, 4.0, 0.0, 1.0])
+    # INT lattice ties to even integer
+    xi = jnp.array([0.5, 1.5, 2.5, 6.5])
+    qi = formats.quantize_to_codebook(xi, formats.INT4)
+    np.testing.assert_array_equal(np.asarray(qi), [0.0, 2.0, 2.0, 6.0])
+
+
+def test_saturation():
+    x = jnp.array([100.0, -100.0, 7.5, 16.5])
+    assert float(formats.quantize_to_codebook(x, formats.E2M1)[0]) == 6.0
+    assert float(formats.quantize_to_codebook(x, formats.INT4)[2]) == 7.0
+    assert float(formats.quantize_to_codebook(x, formats.E3M0)[3]) == 16.0
+
+
+def test_e4m3_bits_roundtrip():
+    # every positive finite e4m3 pattern (0..0x7E) must round-trip via pack
+    bits = jnp.arange(0x7F, dtype=jnp.uint8)
+    vals = formats.bits_to_e4m3(bits)
+    back = formats.e4m3_to_bits(vals)
+    np.testing.assert_array_equal(np.asarray(back), np.asarray(bits))
+    assert float(vals.max()) == 448.0
+
+
+@pytest.mark.parametrize("t", [0, 1])
+def test_scale_type_packing(t):
+    scales = formats.bits_to_e4m3(jnp.arange(1, 0x7F, dtype=jnp.uint8))
+    tb = jnp.full(scales.shape, t, jnp.uint8)
+    packed = scaling.pack_scale_with_type(scales, tb)
+    s2, t2 = scaling.unpack_scale_and_type(packed)
+    np.testing.assert_array_equal(np.asarray(s2), np.asarray(scales))
+    assert np.all(np.asarray(t2) == t)
+    # zero extra storage: the packed scale is exactly one byte
+    assert packed.dtype == jnp.uint8
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.floats(min_value=-440.0, max_value=440.0, allow_nan=False))
+def test_e4m3_rounding_is_nearest(v):
+    """Property: round_to_e4m3 returns one of the two bracketing E4M3 values
+    and never the farther one."""
+    all_vals = np.asarray(
+        formats.bits_to_e4m3(jnp.arange(0x7F, dtype=jnp.uint8))
+    ).astype(np.float64)
+    all_vals = np.sort(np.unique(np.concatenate([all_vals, -all_vals])))
+    r = float(formats.round_to_e4m3(jnp.float32(v)))
+    err = abs(r - v)
+    best = np.min(np.abs(all_vals - v))
+    assert err <= best + 1e-7
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(min_value=0, max_value=2**31 - 1))
+def test_sr_stays_on_lattice(seed):
+    key = jax.random.PRNGKey(seed)
+    x = jax.random.normal(key, (64,)) * 3
+    q = formats.stochastic_round_to_codebook(x, formats.E2M1, key)
+    lv = np.array(formats.E2M1.levels)
+    lattice = np.concatenate([lv, -lv])
+    assert np.all(np.isin(np.asarray(jnp.abs(q)), lv))
+    # SR never moves past the bracketing levels
+    assert np.all(np.abs(np.asarray(q)) <= 6.0)

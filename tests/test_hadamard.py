@@ -1,0 +1,64 @@
+"""RHT properties: orthogonality, GEMM exactness, kernel parity."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import hadamard
+
+
+@pytest.mark.parametrize("n", [2, 8, 16, 64, 128])
+def test_fwht_involution(n):
+    x = jax.random.normal(jax.random.PRNGKey(0), (4, n))
+    y = hadamard.fwht(hadamard.fwht(x))
+    np.testing.assert_allclose(np.asarray(y), np.asarray(x), atol=1e-4)
+
+
+def test_fwht_energy_preserving():
+    x = jax.random.normal(jax.random.PRNGKey(1), (8, 64))
+    y = hadamard.fwht(x)
+    np.testing.assert_allclose(float(jnp.sum(y * y)), float(jnp.sum(x * x)),
+                               rtol=1e-5)
+
+
+def test_fwht_matches_matrix():
+    n = 16
+    import scipy.linalg
+    H = scipy.linalg.hadamard(n) / np.sqrt(n)
+    x = np.random.RandomState(0).randn(3, n).astype(np.float32)
+    np.testing.assert_allclose(np.asarray(hadamard.fwht(jnp.asarray(x))),
+                               x @ H.T, atol=1e-5)
+
+
+def test_rht_gemm_exactness():
+    """(HDx)^T (HDy) == x^T y — Fig. 7's WGRAD transform is exact pre-quant."""
+    k = jax.random.PRNGKey(2)
+    s = hadamard.rht_signs(k, 128)
+    a = jax.random.normal(jax.random.PRNGKey(3), (128, 16))
+    b = jax.random.normal(jax.random.PRNGKey(4), (128, 24))
+    ra = hadamard.rht(a, s, axis=0)
+    rb = hadamard.rht(b, s, axis=0)
+    np.testing.assert_allclose(np.asarray(ra.T @ rb), np.asarray(a.T @ b),
+                               atol=2e-4)
+
+
+def test_rht_reduces_crest_of_spiky_blocks():
+    """Paper §2.3: Hadamard mixing spreads outliers, lowering crest factors."""
+    from repro.core import analysis
+    x = jnp.zeros((256, 16)).at[:, 3].set(8.0)  # max-crest blocks
+    s = hadamard.rht_signs(jax.random.PRNGKey(5), 16)
+    xr = hadamard.rht(x.reshape(256, 16), s, axis=-1, group=16)
+    c0 = float(analysis.crest_factor(x).mean())
+    c1 = float(analysis.crest_factor(xr).mean())
+    assert c1 < c0 * 0.5
+
+
+def test_fwht_kernel_matches_ref():
+    from repro.kernels import ops, ref
+    for m, k, g in [(8, 64, 16), (16, 128, 16), (4, 256, 64), (32, 32, 32)]:
+        x = jax.random.normal(jax.random.PRNGKey(m * k), (m, k), jnp.float32)
+        s = hadamard.rht_signs(jax.random.PRNGKey(g), k)
+        out_k = ops.rht_rows(x, s, group=g, bm=min(8, m))
+        out_r = ref.ref_fwht_rows(x, s, group=g)
+        np.testing.assert_allclose(np.asarray(out_k), np.asarray(out_r),
+                                   atol=1e-5)

@@ -1,0 +1,96 @@
+"""Quantized GEMM boundary (Fig. 7) forward/backward tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import quantize as Q
+from repro.core.qgemm import QuantConfig, qgemm
+
+
+KEY = jax.random.PRNGKey(0)
+X = jax.random.normal(jax.random.PRNGKey(1), (2, 24, 64), jnp.float32)
+W = jax.random.normal(jax.random.PRNGKey(2), (64, 48), jnp.float32) * 0.2
+
+
+def test_bf16_path_is_plain_matmul():
+    cfg = QuantConfig(method="bf16")
+    y = qgemm(cfg, X, W, KEY)
+    ref = (X.astype(jnp.bfloat16) @ W.astype(jnp.bfloat16)).astype(jnp.float32)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(ref), rtol=1e-2,
+                               atol=1e-2)
+
+
+def test_fprop_matches_qdq_composition():
+    """FPROP must equal Q(X) @ Q_2D(bf16(W)) exactly (same quantizers; the
+    boundary casts the f32 master to bf16 before quantizing so FSDP gathers
+    move bf16 — see qgemm._fwd_quantize)."""
+    cfg = QuantConfig(method="mixfp4")
+    y = qgemm(cfg, X, W, KEY)
+    xq = Q.qdq(X, "mixfp4")
+    wq = Q.qdq_2d(W.astype(jnp.bfloat16), "mixfp4")
+    ref = jax.lax.dot_general(
+        xq.astype(jnp.bfloat16), wq.astype(jnp.bfloat16),
+        (((2,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(ref), rtol=1e-6,
+                               atol=1e-6)
+
+
+@pytest.mark.parametrize("method", ["mixfp4", "nvfp4", "four_six", "nvint4"])
+def test_grad_close_to_bf16(method):
+    loss = lambda cfg: (lambda x, w: jnp.sum(qgemm(cfg, x, w, KEY) ** 2))
+    gq = jax.grad(loss(QuantConfig(method=method)), argnums=1)(X, W)
+    gb = jax.grad(loss(QuantConfig(method="bf16")), argnums=1)(X, W)
+    cos = float(jnp.sum(gq * gb) /
+                (jnp.linalg.norm(gq) * jnp.linalg.norm(gb)))
+    assert cos > 0.97, f"{method}: grad cosine {cos}"
+
+
+def test_grads_deterministic_given_key():
+    cfg = QuantConfig(method="mixfp4")
+    f = jax.grad(lambda x, w, k: jnp.sum(qgemm(cfg, x, w, k)), argnums=(0, 1))
+    g1 = f(X, W, KEY)
+    g2 = f(X, W, KEY)
+    for a, b in zip(g1, g2):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_sr_varies_with_key():
+    cfg = QuantConfig(method="mixfp4", grad_rounding="sr")
+    f = jax.grad(lambda x, w, k: jnp.sum(qgemm(cfg, x, w, k) ** 2), argnums=1)
+    g1 = f(X, W, jax.random.PRNGKey(10))
+    g2 = f(X, W, jax.random.PRNGKey(11))
+    assert not np.allclose(np.asarray(g1), np.asarray(g2))
+
+
+def test_rht_wgrad_consistency():
+    """With RHT off vs on, WGRAD should agree to quantization noise (exact in
+    infinite precision)."""
+    f = lambda cfg: jax.grad(
+        lambda x, w, k: jnp.sum(qgemm(cfg, x, w, k) ** 2), argnums=1)
+    g_rht = f(QuantConfig(method="mixfp4", wgrad_rht=True,
+                          grad_rounding="rne"))(X, W, KEY)
+    g_no = f(QuantConfig(method="mixfp4", wgrad_rht=False,
+                         grad_rounding="rne"))(X, W, KEY)
+    cos = float(jnp.sum(g_rht * g_no) /
+                (jnp.linalg.norm(g_rht) * jnp.linalg.norm(g_no)))
+    assert cos > 0.99
+
+
+def test_jit_and_vmap():
+    cfg = QuantConfig(method="mixfp4")
+    y = jax.jit(lambda x, w, k: qgemm(cfg, x, w, k))(X, W, KEY)
+    assert y.shape == (2, 24, 48)
+    # vmap over an expert dimension (MoE pattern)
+    we = jnp.stack([W, W * 0.5, W * 2.0])
+    ye = jax.vmap(lambda w: qgemm(cfg, X[0], w, KEY))(we)
+    assert ye.shape == (3, 24, 48)
+    assert np.isfinite(np.asarray(ye)).all()
+
+
+def test_non_divisible_token_count():
+    """WGRAD RHT pads the token axis to the Hadamard group."""
+    x = jax.random.normal(jax.random.PRNGKey(5), (1, 13, 64))
+    cfg = QuantConfig(method="mixfp4")
+    g = jax.grad(lambda w: jnp.sum(qgemm(cfg, x, w, KEY) ** 2))(W)
+    assert np.isfinite(np.asarray(g)).all()

@@ -1,0 +1,156 @@
+"""Algorithm 1 behaviour + block machinery properties."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import analysis, pack, quantize as Q, scaling
+
+
+def _rand(shape, seed=0, scale=1.0):
+    return jax.random.normal(jax.random.PRNGKey(seed), shape) * scale
+
+
+def test_mixfp4_never_worse_than_either_branch():
+    """Per-block MSE argmin => tensor MSE <= each single-format tensor MSE."""
+    x = _rand((128, 256), 1, 2.0)
+    e_mix = float(jnp.mean((Q.qdq(x, "mixfp4") - x) ** 2))
+    e_fp = float(jnp.mean((Q.qdq(x, "nvfp4") - x) ** 2))
+    e_int = float(jnp.mean((Q.qdq(x, "nvint4") - x) ** 2))
+    assert e_mix <= e_fp + 1e-12
+    assert e_mix <= e_int + 1e-12
+
+
+def test_format_ordering_matches_paper():
+    """Fig. 4 qualitative ordering on Gaussian data: mixfp4 <= four_six <= nvfp4
+    (adding E1M2 helps more than adaptive max-scale alone)."""
+    x = _rand((256, 512), 3, 1.7)
+    errs = {m: float(jnp.mean((Q.qdq(x, m) - x) ** 2))
+            for m in ["nvfp4", "four_six", "mixfp4", "mixfp4_e3"]}
+    assert errs["mixfp4"] <= errs["four_six"] <= errs["nvfp4"]
+    # E3M0 adds only marginal gains (paper §2.4)
+    assert errs["mixfp4_e3"] <= errs["mixfp4"] + 1e-12
+    rel_gain_e3 = (errs["mixfp4"] - errs["mixfp4_e3"]) / errs["mixfp4"]
+    rel_gain_e1 = (errs["nvfp4"] - errs["mixfp4"]) / errs["nvfp4"]
+    assert rel_gain_e3 < 0.5 * rel_gain_e1
+
+
+def test_selection_follows_crest_factor():
+    """Blocks with low crest factor should prefer E1M2 (INT-like), high crest
+    blocks E2M1 — the Appendix-A crossover at kappa* ~ 2.224."""
+    key = jax.random.PRNGKey(0)
+    flat = jax.random.uniform(key, (512, 16), minval=-1.0, maxval=1.0)  # low crest
+    spiky = jax.random.normal(key, (512, 16)) ** 3                      # heavy tails
+    bq_flat, _, _ = Q.block_quantize_1d(flat, "mixfp4")
+    bq_spiky, _, _ = Q.block_quantize_1d(spiky, "mixfp4")
+    frac_flat = float(bq_flat.type_bits.mean())
+    frac_spiky = float(bq_spiky.type_bits.mean())
+    assert frac_flat > 0.85      # uniform blocks -> INT-like
+    assert frac_spiky < frac_flat - 0.3
+
+
+def test_empirical_crossover_near_kappa_star():
+    """Generate Gaussian blocks, bucket by crest factor, and check the
+    empirical NVFP4-vs-NVINT4 preference flips near kappa* = 2.224 (App. A)."""
+    kstar, _, _ = analysis.qsnr_crossover()
+    x = _rand((4096, 16), 7)
+    kappa = np.asarray(analysis.crest_factor(x).ravel())
+    bq, _, _ = Q.block_quantize_1d(x, "mixfp4")
+    t = np.asarray(bq.type_bits).ravel()  # 1 = INT-like chosen
+    lo = t[kappa < kstar - 0.35]
+    hi = t[kappa > kstar + 0.35]
+    assert lo.mean() > 0.5 > hi.mean()
+
+
+def test_type_bit_packing_zero_overhead():
+    x = _rand((64, 128), 2)
+    bq, n, ax = Q.block_quantize_1d(x, "mixfp4")
+    p = pack.pack_blocks(bq)
+    # 4 bits/value + 8 bits/block of 16 = 4.5 bits/value (+4B tensor scale)
+    bits = (pack.packed_nbytes(p) - 4) * 8
+    assert bits == x.size * 4 + (x.size // 16) * 8
+    np.testing.assert_allclose(np.asarray(pack.unpack_blocks(p)),
+                               np.asarray(bq.dequantize()), rtol=0, atol=0)
+
+
+def test_dequant_respects_scale_hierarchy():
+    """Alg.1 line 4: the per-tensor scale maps max|X| to 2688; block scales
+    to the format max."""
+    x = _rand((4, 160), 5, 100.0)
+    bq, n, ax = Q.block_quantize_1d(x, "nvfp4")
+    assert float(bq.scale32) == pytest.approx(float(jnp.abs(x).max()) / 2688.0)
+    # every |quantized level| <= 6 on the E2M1 branch
+    assert float(jnp.abs(bq.values).max()) <= 6.0
+
+
+def test_2d_tiles_shared_by_transpose():
+    """Fig. 7: 2-D weight tiles => Q(W)^T == Q(W^T) (with transposed tiling)."""
+    w = _rand((64, 96), 6)
+    a = Q.qdq_2d(w, "mixfp4")
+    b = Q.qdq_2d(w.T, "mixfp4").T
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=0, rtol=0)
+
+
+def test_padding_roundtrip():
+    x = _rand((3, 37), 8)  # 37 not divisible by 16
+    out = Q.qdq(x, "mixfp4")
+    assert out.shape == x.shape
+    assert np.isfinite(np.asarray(out)).all()
+
+
+def test_axis_handling():
+    x = _rand((32, 48), 9)
+    a = Q.qdq(x, "mixfp4", axis=0)
+    b = Q.qdq(x.T, "mixfp4", axis=-1).T
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=0, atol=0)
+
+
+def test_all_zero_tensor():
+    x = jnp.zeros((8, 32))
+    out = Q.qdq(x, "mixfp4")
+    np.testing.assert_array_equal(np.asarray(out), 0.0)
+
+
+def test_zero_block_within_tensor():
+    x = jnp.concatenate([jnp.zeros((1, 16)), jnp.full((1, 16), 5.0)], axis=1)
+    out = Q.qdq(x, "mixfp4")
+    assert np.isfinite(np.asarray(out)).all()
+    np.testing.assert_array_equal(np.asarray(out[:, :16]), 0.0)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 10_000), st.sampled_from(["nvfp4", "nvint4", "mixfp4", "four_six"]))
+def test_property_bounded_error(seed, method):
+    """Block error is bounded by half the largest lattice step times the block
+    scale (RNE, no saturation beyond absmax by construction)."""
+    x = jax.random.normal(jax.random.PRNGKey(seed), (16, 64)) * (
+        10.0 ** jax.random.uniform(jax.random.PRNGKey(seed + 1), (), minval=-3, maxval=3))
+    bq, n, ax = Q.block_quantize_1d(x, method)
+    deq = Q.dequantize_1d(bq, n, ax)
+    err = jnp.abs(deq - x)
+    # bound: (max step on any candidate lattice)/2 * s8 * s32, plus the e4m3
+    # scale rounding slack (<= 2^-3 relative)
+    step = 2.0  # largest E2M1 gap
+    bound = (step / 2) * bq.scale8[..., None] * bq.scale32 * (1 + 2.0**-3) + 1e-6
+    assert bool(jnp.all(err.reshape(bq.values.shape) <= bound))
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 10_000))
+def test_property_idempotent(seed):
+    """qdq(qdq(x)) == qdq(x): quantized points are fixed points."""
+    x = jax.random.normal(jax.random.PRNGKey(seed), (8, 48))
+    once = Q.qdq(x, "mixfp4")
+    twice = Q.qdq(once, "mixfp4")
+    np.testing.assert_allclose(np.asarray(twice), np.asarray(once),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_sr_unbiased():
+    g = jnp.full((64, 64), 0.3)
+    est = np.mean([
+        float(Q.qdq(g, "nvint4", rounding="sr", key=jax.random.PRNGKey(i)).mean())
+        for i in range(100)
+    ])
+    assert abs(est - 0.3) < 0.01
