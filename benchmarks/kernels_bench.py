@@ -7,35 +7,34 @@ import jax
 import jax.numpy as jnp
 
 from benchmarks import common
-from repro.core import quantize as Q
-from repro.kernels import ops, ref
+from repro.core import qtensor
+from repro.core.quantize import qdq as _qdq
+from repro.kernels import ref
 
 
 def bench_quant_kernel():
     x = jax.random.normal(jax.random.PRNGKey(0), (256, 512), jnp.float32)
-    fused = jax.jit(lambda a: ops.quantize_rows(a, interpret=True))
+    fused = jax.jit(lambda a: qtensor.quantize_rows(a, interpret=True))
     naive = jax.jit(lambda a: ref.ref_quant_pack_rows(a, "mixfp4"))
     us_f = common.time_fn(fused, x)
     us_n = common.time_fn(naive, x)
     common.emit("kernel_quant_fused", us_f, f"naive_us={us_n:.1f}")
-    # wire-size check: 4.5 bits/value
-    p, s, _ = ops.quantize_rows(x, interpret=True)
-    bits = (p.size + s.size) * 8 / x.size
-    common.emit("kernel_quant_wire_bits", 0.0, f"bits_per_value={bits}")
+    # wire-size check: 4.5 bits/value for 1-D g=16 blocks
+    qt = qtensor.quantize_rows(x, interpret=True)
+    common.emit("kernel_quant_wire_bits", 0.0,
+                f"bits_per_value={qt.bits_per_value}")
     return {"fused_us": us_f, "naive_us": us_n}
 
 
 def bench_gemm_w4a16():
     x = jax.random.normal(jax.random.PRNGKey(1), (32, 256), jnp.float32)
     w = jax.random.normal(jax.random.PRNGKey(2), (256, 256)) * 0.2
-    payload, scales, s32 = ops.pack_weight_kn(w)
-    fn = jax.jit(lambda a: ops.gemm_w4a16(a, payload, scales, s32,
-                                          bm=32, bn=128, bk=128,
-                                          interpret=True))
+    qt = qtensor.quantize(
+        w, qtensor.QuantSpec("mixfp4", qtensor.BlockLayout2D()))
+    fn = jax.jit(lambda a: qtensor.qmm(a, qt, interpret=True))
     us = common.time_fn(fn, x)
-    packed = payload.size + scales.size + 4
     common.emit("kernel_gemm_w4a16", us,
-                f"weight_compression={w.size * 2 / packed:.2f}x_vs_bf16")
+                f"weight_compression={w.size * 2 / qt.nbytes:.2f}x_vs_bf16")
     return {"us": us}
 
 
@@ -44,8 +43,8 @@ def bench_qdq_cost_vs_single_format():
     format (shared absmax, one read) — count jaxpr flops as the proxy."""
     from repro.launch.flops import entry_flops
     x = jax.ShapeDtypeStruct((4096, 4096), jnp.float32)
-    f_mix = entry_flops(lambda a: Q.qdq(a, "mixfp4"), x)
-    f_one = entry_flops(lambda a: Q.qdq(a, "nvfp4"), x)
+    f_mix = entry_flops(lambda a: _qdq(a, "mixfp4"), x)
+    f_one = entry_flops(lambda a: _qdq(a, "nvfp4"), x)
     common.emit("quant_flops_mixfp4_vs_nvfp4", 0.0,
                 f"ratio={f_mix / f_one:.2f} (dual-candidate overhead)")
     return {"ratio": f_mix / f_one}

@@ -11,9 +11,8 @@ Run:  PYTHONPATH=src python examples/quickstart.py
 import jax
 import jax.numpy as jnp
 
-from repro.core import analysis, pack, quantize as Q
+from repro.core import analysis, quantize as Q, qtensor
 from repro.core.qgemm import QuantConfig, qgemm
-from repro.kernels import ops
 
 
 def main():
@@ -21,20 +20,19 @@ def main():
 
     # --- 1. Algorithm 1: adaptive per-block E2M1 / E1M2 selection --------
     x = jax.random.normal(key, (64, 256)) * 2.0
-    bq, n, ax = Q.block_quantize_1d(x, "mixfp4")
-    frac_int = float(bq.type_bits.mean())
-    print(f"blocks choosing INT-like E1M2: {frac_int:.1%}")
+    frac = analysis.selection_fractions(x, "mixfp4")
+    print(f"blocks choosing INT-like E1M2: {frac[1]:.1%}")
     for m in ["nvfp4", "nvint4", "four_six", "mixfp4"]:
         q = float(analysis.qsnr(x, Q.qdq(x, m)))
         print(f"  {m:10s} QSNR = {q:6.2f} dB")
 
-    # --- 2. bit-exact packing: 4.5 bits/value, type bit in the scale sign -
-    p = pack.pack_blocks(bq)
-    bits = (pack.packed_nbytes(p) - 4) * 8 / x.size
-    assert float(jnp.max(jnp.abs(pack.unpack_blocks(p)
-                                 - bq.dequantize()))) == 0.0
-    print(f"wire format: {bits:.3f} bits/value (payload+scales), "
-          f"decode bit-exact")
+    # --- 2. the QTensor wire format: 4.5 bits/value, type in the scale sign
+    qt = qtensor.quantize(x, qtensor.QuantSpec("mixfp4",
+                                               qtensor.BlockLayout1D(-1)))
+    err = float(jnp.max(jnp.abs(qt.dequantize() - Q.qdq(x, "mixfp4"))))
+    assert err == 0.0, "packed round trip must be bit-exact vs simulated qdq"
+    print(f"QTensor wire format: {qt.bits_per_value:.3f} bits/value "
+          f"({qt.nbytes} B), decode bit-exact")
 
     # --- 3. training GEMM boundary (FPROP/DGRAD/WGRAD of Fig. 7) ---------
     cfg = QuantConfig(method="mixfp4")
@@ -43,11 +41,12 @@ def main():
     g = jax.grad(loss)(w)
     print(f"quantized GEMM loss={loss(w):.2f}, |dW|={float(jnp.abs(g).mean()):.4f}")
 
-    # --- 4. Pallas kernels ------------------------------------------------
-    payload, scales, s32 = ops.pack_weight_kn(w)
-    y = ops.gemm_w4a16(x, payload, scales, s32, bm=64, bn=128, bk=128)
+    # --- 4. Pallas kernels through the qmm dispatcher ---------------------
+    qw = qtensor.quantize(w, qtensor.QuantSpec("mixfp4",
+                                               qtensor.BlockLayout2D()))
+    y = qtensor.qmm(x, qw)
     print(f"packed W4A16 GEMM out: {y.shape}, "
-          f"weight bytes {payload.size + scales.size} vs bf16 {w.size * 2}")
+          f"weight bytes {qw.nbytes} vs bf16 {w.size * 2}")
 
 
 if __name__ == "__main__":

@@ -34,9 +34,10 @@ def main():
     print(f"model: {param_count(params)/1e6:.2f}M params")
 
     engine = ServeEngine(cfg, params, batch_size=args.batch, max_len=64)
-    print(f"packed MixFP4 weights: {engine.compression:.2f}x smaller than "
-          f"bf16 ({engine.packed_bytes/1024:.0f} KiB vs "
-          f"{engine.dense_bytes/1024:.0f} KiB)")
+    del params  # projections now live ONLY as packed QTensors in the engine
+    print(f"packed MixFP4 QTensor weights: {engine.compression:.2f}x smaller "
+          f"than bf16 ({engine.packed_bytes/1024:.0f} KiB vs "
+          f"{engine.dense_bytes/1024:.0f} KiB), decode via qmm -> W4A16")
 
     rng = np.random.RandomState(0)
     pending = [Request(uid=i,
@@ -51,14 +52,16 @@ def main():
         while pending and engine.add_request(pending[0]):
             print(f"  admitted request {pending[0].uid}")
             pending.pop(0)
-            active += 1
         out = engine.step()
         done_tokens += len(out)
-        finished = [u for u, _ in out
-                    if all(s is None or s.uid != u for s in engine.slots)]
-        for u in finished:
+        # a fresh slot's first step can emit two tokens for one uid (the
+        # prefill token + a decode token), so dedupe before reporting and
+        # recompute occupancy from the slots themselves
+        finished = {u for u, _ in out
+                    if all(s is None or s.uid != u for s in engine.slots)}
+        for u in sorted(finished):
             print(f"  request {u} finished")
-            active -= 1
+        active = sum(s is not None for s in engine.slots)
         if not out and not pending:
             break
     dt = time.time() - t0

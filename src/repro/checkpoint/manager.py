@@ -155,3 +155,36 @@ class CheckpointManager:
             return None, None, None
         tree, extra = self.restore(step, like_tree, **kw)
         return step, tree, extra
+
+    # ------------------------------------------------------------------
+    # Packed-weight checkpoints.  A QTensor is an ordinary pytree, so its
+    # payload/scales/scale32 children flow through save/restore like any
+    # other leaves; what `restore` cannot invent is the *structure* (layout
+    # metadata, dict nesting).  `save_packed` persists that structure as a
+    # JSON spec in the manifest, so `restore_packed` rebuilds the full
+    # QTensor tree with no caller-provided template — a cold serving
+    # process loads 4.5-bit weights straight from disk.
+    # ------------------------------------------------------------------
+    def save_packed(self, step: int, tree, *, extra: dict | None = None,
+                    blocking: bool = True):
+        from repro.core import qtensor
+        extra = dict(extra or {})
+        extra["pytree_spec"] = qtensor.tree_spec(tree)
+        self.save(step, tree, extra=extra, blocking=blocking)
+
+    def restore_packed(self, step: int | None = None, **kw):
+        from repro.core import qtensor
+        if step is None:
+            step = self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint in {self.dir}")
+        d = self._step_dir(step)
+        with open(os.path.join(d, "manifest.json")) as f:
+            spec = json.load(f)["extra"].get("pytree_spec")
+        if spec is None:
+            raise ValueError(f"step {step} was not written by save_packed "
+                             "(no pytree_spec in manifest)")
+        like = qtensor.tree_like(spec)
+        tree, extra = self.restore(step, like, **kw)
+        extra.pop("pytree_spec", None)
+        return tree, extra

@@ -97,8 +97,19 @@ def selection_fractions(
     axis: int = -1,
 ) -> np.ndarray:
     """Quantize ``x`` and return the fraction of blocks selecting each
-    candidate format (in METHODS[method] order)."""
-    bq, _, _ = Q.block_quantize_1d(x, method, block=block, axis=axis)
+    candidate format (in METHODS[method] order).
+
+    Wire-packable methods read the type bits straight out of the packed
+    scale bytes of a :class:`~repro.core.qtensor.QTensor` (the paper's
+    zero-metadata claim, exercised end-to-end); methods with >2 candidates
+    or non-encodable lattices fall back to the unpacked engine."""
+    from repro.core import qtensor
     ncand = len(Q.method_candidates(method))
-    sel = np.asarray(bq.type_bits).ravel()
+    if method in qtensor.PACKABLE_METHODS:
+        qt = qtensor.quantize(
+            x, qtensor.QuantSpec(method, qtensor.BlockLayout1D(axis, block)))
+        sel = (np.asarray(qt.scales) >> 7).ravel()
+    else:
+        bq, _, _ = Q.block_quantize_1d(x, method, block=block, axis=axis)
+        sel = np.asarray(bq.type_bits).ravel()
     return np.bincount(sel, minlength=ncand) / sel.size

@@ -8,6 +8,11 @@ Storage layout per 1-D block of g=16 values:
 Total: 4.5 bits/value + 4 bytes/tensor — identical to NVFP4, proving the
 paper's zero-metadata claim at the bit level.  ``unpack`` runs the paper's
 Fig. 9 decoder (E2M1 shift path vs E1M2 LUT path selected by T).
+
+DEPRECATED as a public surface: ``core.qtensor.QTensor`` carries the same
+wire format with layout metadata attached and is what new code should hold;
+``pack_blocks``/``unpack_blocks`` remain as the low-level encoder the
+QTensor 1-D path is built on (and for external compatibility).
 """
 from __future__ import annotations
 

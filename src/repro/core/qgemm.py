@@ -154,5 +154,12 @@ qgemm.defvjp(_qgemm_fwd, _qgemm_bwd)
 
 
 def quantized_matmul(x, w, key, cfg: QuantConfig):
-    """Convenience wrapper with arguments in data-first order."""
+    """Convenience wrapper with arguments in data-first order.
+
+    Accepts either a dense master weight (training: the Fig. 7 qdq boundary
+    above) or a packed :class:`~repro.core.qtensor.QTensor` (serving: routes
+    to ``qtensor.qmm`` and the W4A16/W4A4 Pallas kernels — forward only)."""
+    from repro.core import qtensor
+    if isinstance(w, qtensor.QTensor):
+        return qtensor.qmm(x, w)
     return qgemm(cfg, x, w, key)

@@ -1,0 +1,474 @@
+"""First-class quantized tensors: the one object every MixFP4 path speaks.
+
+``QTensor`` is a frozen dataclass registered as a JAX pytree that carries the
+paper's wire format (Fig. 1) directly:
+
+  payload  uint8 — two 4-bit codes per byte
+  scales   uint8 — {T | e4m3[6:0]}: per-block E4M3 scale with the type bit in
+                   the sign position (§B.3, zero metadata overhead)
+  scale32  f32   — per-tensor scale (Alg. 1 line 4)
+
+plus *static* layout metadata (method, 1-D vs 2-D blocking, logical shape and
+dtype).  It subsumes the three historical representations — ``BlockQuantized``
+(+ positional ``(bq, n, axis)`` / ``(bq, shape, block)`` tuples),
+``PackedMixFP4``, and the loose ``(payload, scales, scale32)`` triples the
+Pallas kernels take — behind one API:
+
+  qt = quantize(x, QuantSpec("mixfp4", BlockLayout1D(axis=-1)))
+  x~ = qt.dequantize()
+  y  = qmm(x, qt)            # dispatches to the Pallas kernels or the
+                             # qdq-simulated fallback; padding/tiling inside
+
+Because the dynamic children are exactly the packed arrays, a ``QTensor``
+costs 4.5 bits/value in HBM wherever it flows — jit, scan (stacked per-layer
+weights slice layer-by-layer through the pytree machinery), checkpoints, and
+the serving engine all carry the wire format, never a dense copy.
+
+Array layouts (match the kernels in ``kernels/mixfp4_gemm.py``):
+
+  1-D (activations/grads, blocks of ``g`` along ``axis``):
+      payload (*lead, Kp//2)  scales (*lead, Kp//g)      Kp = pad16(K)
+      (``lead`` = logical shape with ``axis`` moved last, then dropped)
+  2-D (weights, (bm x bn) tiles on a (K, N) matrix):
+      payload (Kp//2, Np)     scales (Kp//bm, Np//bn)
+      two K-consecutive nibbles per byte — the W4A16/W4A4 operand layout.
+
+Methods whose candidate set is wider than {E2M1, E1M2} (``mixfp4_e3``,
+``nvfp4_e3``) or whose lattice is not nibble-encodable under the two Fig. 9
+decode paths (``four_six``'s max-4 branch, bare ``nvint4``) cannot be
+expressed in the wire format; ``quantize`` rejects them — use
+``core.quantize.qdq`` for those simulation-only ablations.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from dataclasses import dataclass
+from typing import Any, Sequence, Union
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import formats, pack as pack_lib, quantize as Q, scaling
+
+__all__ = [
+    "BlockLayout1D",
+    "BlockLayout2D",
+    "QuantSpec",
+    "QTensor",
+    "PACKABLE_METHODS",
+    "quantize",
+    "quantize_rows",
+    "qmm",
+    "stack",
+    "packed_nbytes_for_shape",
+    "tree_spec",
+    "tree_like",
+]
+
+_G = 16  # paper block size g
+
+# Methods expressible in the 2-path wire format (type bit selects E2M1/E1M2).
+PACKABLE_METHODS = ("nvfp4", "mixfp4")
+
+
+def _pad_to(n: int, m: int) -> int:
+    return ((n + m - 1) // m) * m
+
+
+# ---------------------------------------------------------------------------
+# Layout metadata (static / hashable — lives in the pytree aux data)
+# ---------------------------------------------------------------------------
+@dataclass(frozen=True)
+class BlockLayout1D:
+    """1-D blocks of ``block`` values along ``axis`` of the logical tensor
+    (activations and gradients: blocks lie along the GEMM reduction axis)."""
+
+    axis: int = -1
+    block: int = _G
+
+
+@dataclass(frozen=True)
+class BlockLayout2D:
+    """(bm x bn) tiles sharing one scale + type bit (weights, Fig. 7): W and
+    W^T quantize identically, so FPROP and DGRAD see the same weight."""
+
+    bm: int = _G
+    bn: int = _G
+
+
+BlockLayout = Union[BlockLayout1D, BlockLayout2D]
+
+
+@dataclass(frozen=True)
+class QuantSpec:
+    """Static description of a quantization: what ``quantize`` needs beyond
+    the data itself."""
+
+    method: str = "mixfp4"
+    layout: BlockLayout = BlockLayout1D()
+    rounding: str = "rne"
+
+
+# ---------------------------------------------------------------------------
+# QTensor
+# ---------------------------------------------------------------------------
+@jax.tree_util.register_pytree_node_class
+@dataclass(frozen=True)
+class QTensor:
+    """A packed block-quantized tensor (see module docstring for layouts).
+
+    Extra *leading* batch dimensions on the children (ahead of the layout's
+    own dims) are allowed and broadcast through ``dequantize`` — that is what
+    makes a stack of per-layer weights a single QTensor that ``lax.scan``
+    slices layer-by-layer.
+    """
+
+    payload: jax.Array
+    scales: jax.Array
+    scale32: jax.Array
+    method: str = "mixfp4"
+    layout: BlockLayout = dataclasses.field(default_factory=BlockLayout1D)
+    shape: tuple = ()           # logical (unpadded) shape
+    dtype: str = "float32"      # dequantize output dtype
+
+    # -- pytree protocol ------------------------------------------------
+    def tree_flatten(self):
+        return ((self.payload, self.scales, self.scale32),
+                (self.method, self.layout, self.shape, self.dtype))
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        payload, scales, scale32 = children
+        method, layout, shape, dtype = aux
+        return cls(payload, scales, scale32, method, layout, shape, dtype)
+
+    # -- storage accounting ---------------------------------------------
+    @property
+    def nbytes(self) -> int:
+        """Wire bytes: payload + block-scale bytes + 4B/tensor scale."""
+        return (int(self.payload.size) + int(self.scales.size)
+                + 4 * max(int(self.scale32.size), 1))
+
+    @property
+    def bits_per_value(self) -> float:
+        n = max(int(math.prod(self.shape)), 1) * self._batch_size()
+        return 8.0 * self.nbytes / n
+
+    def _batch_size(self) -> int:
+        nb = self._n_batch_dims()
+        return int(math.prod(self.payload.shape[:nb])) if nb else 1
+
+    def _n_batch_dims(self) -> int:
+        expected = (len(self.shape) if isinstance(self.layout, BlockLayout1D)
+                    else 2)
+        return self.payload.ndim - expected
+
+    # -- decode ----------------------------------------------------------
+    def dequantize(self, dtype=None) -> jax.Array:
+        """Fig. 9 decode + two-level scaling back to the logical tensor
+        (bit-identical to the historical ``unpack_blocks`` path)."""
+        out_dtype = jnp.dtype(dtype or self.dtype)
+        if isinstance(self.layout, BlockLayout2D):
+            x = self._dequantize_2d()
+        else:
+            x = self._dequantize_1d()
+        return x.astype(out_dtype)
+
+    def _scale32_bcast(self, ndim: int) -> jax.Array:
+        s = jnp.asarray(self.scale32, jnp.float32)
+        return s.reshape(s.shape + (1,) * (ndim - s.ndim))
+
+    def _dequantize_2d(self) -> jax.Array:
+        bm, bn = self.layout.bm, self.layout.bn
+        lo = self.payload & 0xF
+        hi = (self.payload >> 4) & 0xF
+        k2, n = self.payload.shape[-2:]
+        nib = jnp.stack([lo, hi], axis=-2).reshape(
+            *self.payload.shape[:-2], 2 * k2, n)
+        s8, t = scaling.unpack_scale_and_type(self.scales)
+        s_full = jnp.repeat(jnp.repeat(s8, bm, axis=-2), bn, axis=-1)
+        t_full = jnp.repeat(jnp.repeat(t, bm, axis=-2), bn, axis=-1)
+        vals = formats.decode_to_e2m2(nib, t_full)
+        x = vals * s_full * self._scale32_bcast(nib.ndim)
+        m, nn = self.shape
+        return x[..., :m, :nn]
+
+    def _dequantize_1d(self) -> jax.Array:
+        g = self.layout.block
+        lo = self.payload & 0xF
+        hi = (self.payload >> 4) & 0xF
+        nib = jnp.stack([lo, hi], axis=-1).reshape(
+            *self.payload.shape[:-1], 2 * self.payload.shape[-1])
+        s8, t = scaling.unpack_scale_and_type(self.scales)
+        vals = formats.decode_to_e2m2(nib, jnp.repeat(t, g, axis=-1))
+        x = vals * jnp.repeat(s8, g, axis=-1) * self._scale32_bcast(nib.ndim)
+        axis = self.layout.axis
+        n = self.shape[axis]
+        x = x[..., :n]
+        # restore the blocked axis to its logical position (negative index so
+        # leading batch dims pass through untouched)
+        dest = axis if axis < 0 else axis - len(self.shape)
+        return jnp.moveaxis(x, -1, dest)
+
+
+# ---------------------------------------------------------------------------
+# quantize: the single entry point
+# ---------------------------------------------------------------------------
+def _check_packable(method: str):
+    if method not in PACKABLE_METHODS:
+        raise ValueError(
+            f"method {method!r} is not expressible in the MixFP4 wire format "
+            f"(packable: {PACKABLE_METHODS}); use core.quantize.qdq for "
+            f"simulation-only ablations")
+
+
+def quantize(x: jax.Array, spec: QuantSpec = QuantSpec(), *,
+             key: jax.Array | None = None) -> QTensor:
+    """Quantize ``x`` per ``spec`` into the packed wire format.
+
+    Replaces the ``block_quantize_1d/2d`` + ``pack_blocks`` round trips:
+    handles padding internally and records the logical shape, so
+    ``quantize(x, spec).dequantize()`` is total.
+    """
+    _check_packable(spec.method)
+    if isinstance(spec.layout, BlockLayout2D):
+        return _quantize_2d(x, spec, key)
+    return _quantize_1d(x, spec, key)
+
+
+def _quantize_1d(x: jax.Array, spec: QuantSpec, key) -> QTensor:
+    lay = spec.layout
+    bq, n, axis = Q.block_quantize_1d(
+        x, spec.method, block=lay.block, axis=lay.axis,
+        rounding=spec.rounding, key=key)
+    p = pack_lib.pack_blocks(bq)
+    lead = p.scales.shape[:-1]
+    nb = p.scales.shape[-1]
+    payload = p.payload.reshape(*lead, nb * lay.block // 2)
+    axis_neg = lay.axis if lay.axis < 0 else lay.axis - x.ndim
+    return QTensor(payload, p.scales, p.scale32,
+                   method=spec.method,
+                   layout=BlockLayout1D(axis_neg, lay.block),
+                   shape=tuple(x.shape), dtype=str(x.dtype))
+
+
+def _quantize_2d(w: jax.Array, spec: QuantSpec, key) -> QTensor:
+    assert w.ndim == 2, "BlockLayout2D expects a (K, N) matrix"
+    lay = spec.layout
+    bm, bn = lay.bm, lay.bn
+    bq, shape, _ = Q.block_quantize_2d(
+        w, spec.method, block=(bm, bn), rounding=spec.rounding, key=key)
+    gm, gn = bq.type_bits.shape
+    # values back on the PADDED (Kp, Np) grid, nibbles packed along K
+    vals = bq.values.reshape(gm, gn, bm, bn).transpose(0, 2, 1, 3)
+    vals = vals.reshape(gm * bm, gn * bn)
+    t_full = jnp.repeat(jnp.repeat(bq.type_bits, bm, axis=0), bn, axis=1)
+    nib_e2m1 = formats.e2m1_encode(vals)
+    nib_e1m2 = formats.e1m2_encode(vals)
+    nib = jnp.where(t_full.astype(bool), nib_e1m2, nib_e2m1)
+    payload = (nib[0::2, :] | (nib[1::2, :] << 4)).astype(jnp.uint8)
+    scales = scaling.pack_scale_with_type(bq.scale8, bq.type_bits)
+    return QTensor(payload, scales, bq.scale32,
+                   method=spec.method, layout=BlockLayout2D(bm, bn),
+                   shape=tuple(shape), dtype=str(w.dtype))
+
+
+def quantize_rows(x: jax.Array, *, interpret: bool | None = None) -> QTensor:
+    """Fused-kernel 1-D row quantizer (mixfp4/RNE, blocks along the last
+    axis of a (M, K) matrix) returning a QTensor — the W4A4 activation
+    producer for ``qmm``."""
+    from repro.kernels import ops  # deferred: kernels import core
+
+    assert x.ndim == 2, "quantize_rows expects (M, K)"
+    kw = {} if interpret is None else {"interpret": interpret}
+    payload, scales, s32 = ops.quantize_rows(x.astype(jnp.float32), **kw)
+    return QTensor(payload, scales, s32, method="mixfp4",
+                   layout=BlockLayout1D(-1, _G),
+                   shape=tuple(x.shape), dtype=str(x.dtype))
+
+
+def stack(qts: Sequence[QTensor]) -> QTensor:
+    """Stack same-layout QTensors along a new leading batch dimension
+    (per-layer weights -> one scan-sliceable pytree)."""
+    first = qts[0]
+    for qt in qts[1:]:
+        if (qt.method, qt.layout, qt.shape, qt.dtype) != \
+           (first.method, first.layout, first.shape, first.dtype):
+            raise ValueError("stack() requires identical QTensor metadata")
+    return QTensor(jnp.stack([qt.payload for qt in qts]),
+                   jnp.stack([qt.scales for qt in qts]),
+                   jnp.stack([jnp.asarray(qt.scale32) for qt in qts]),
+                   first.method, first.layout, first.shape, first.dtype)
+
+
+# ---------------------------------------------------------------------------
+# qmm: dispatching quantized matmul
+# ---------------------------------------------------------------------------
+def _pick_tile(dim: int, cap: int, mult: int) -> int:
+    """Largest tile <= cap that divides ``dim`` and is a multiple of
+    ``mult`` (``dim`` is always a multiple of ``mult`` here)."""
+    t = min(cap, dim)
+    t -= t % mult
+    while t > mult and dim % t:
+        t -= mult
+    return max(t, mult) if dim % mult == 0 else 1
+
+
+def _mm_bf16(a: jax.Array, b: jax.Array) -> jax.Array:
+    return jax.lax.dot_general(
+        a.astype(jnp.bfloat16), b.astype(jnp.bfloat16),
+        (((a.ndim - 1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+
+def qmm(x: Union[jax.Array, QTensor], w: Union[jax.Array, QTensor], *,
+        interpret: bool | None = None, allow_fallback: bool = True
+        ) -> jax.Array:
+    """y = x @ w with quantized operands, f32 output.
+
+    Dispatch rules (docs/qtensor.md):
+      * ``x`` dense, ``w`` 2-D QTensor  -> Pallas W4A16 kernel (serving
+        decode: weight HBM traffic is 4.5 bits/value).
+      * ``x`` 1-D QTensor (last axis), ``w`` 2-D QTensor -> Pallas W4A4.
+      * anything else (1-D weights, stacked batch dims, K mismatch) ->
+        qdq-simulated fallback: dequantize + bf16 matmul w/ f32 accum.
+
+    Padding to the packed (Kp, Np) grid and kernel tile selection happen
+    here — callers never pad.  ``interpret`` defaults to the backend rule
+    (native on TPU, interpret elsewhere).
+    """
+    from repro.kernels import ops  # deferred: kernels import core
+
+    if interpret is None:
+        interpret = ops.default_interpret()
+
+    w_is_qt = isinstance(w, QTensor)
+    x_is_qt = isinstance(x, QTensor)
+    w_kernel_ok = (w_is_qt and isinstance(w.layout, BlockLayout2D)
+                   and w.payload.ndim == 2)
+
+    def fallback():
+        if not allow_fallback:
+            raise ValueError("qmm: operands not kernel-dispatchable and "
+                             "allow_fallback=False")
+        xd = x.dequantize() if x_is_qt else x
+        wd = w.dequantize() if w_is_qt else w
+        if wd.ndim != 2:
+            raise ValueError(f"qmm: weight must be 2-D, got {wd.shape}")
+        return _mm_bf16(xd, wd)
+
+    if not w_kernel_ok:
+        return fallback()
+
+    kp2, np_ = w.payload.shape
+    kp = 2 * kp2
+    k_logical, n_logical = w.shape
+
+    if x_is_qt:
+        if x.shape[-1] != k_logical:
+            raise ValueError(
+                f"qmm: x K={x.shape[-1]} vs weight K={k_logical}")
+        ok = (isinstance(x.layout, BlockLayout1D)
+              and x.layout.axis in (-1, len(x.shape) - 1)
+              and x.layout.block == _G
+              and x.payload.ndim == 2
+              and x.payload.shape[1] * 2 == kp)
+        if not ok:
+            return fallback()
+        m = x.payload.shape[0]
+        bm = min(128, m)
+        mp = -(-m // bm) * bm   # pad M like K/N: padded rows decode to zero
+        xp, xs = x.payload, x.scales
+        if mp != m:
+            xp = jnp.pad(xp, ((0, mp - m), (0, 0)))
+            xs = jnp.pad(xs, ((0, mp - m), (0, 0)))
+        bn = _pick_tile(np_, 256, _G)
+        bk = _pick_tile(kp, 256, _G)
+        y = ops.gemm_w4a4(xp, xs, x.scale32,
+                          w.payload, w.scales, w.scale32,
+                          bm=bm, bn=bn, bk=bk, interpret=interpret)
+        return y[:m, :n_logical]
+
+    if x.shape[-1] != k_logical:
+        raise ValueError(f"qmm: x K={x.shape[-1]} vs weight K={k_logical}")
+    lead = x.shape[:-1]
+    m = int(math.prod(lead)) if lead else 1
+    x2 = x.reshape(m, k_logical)
+    if kp != k_logical:  # padded weight K: zero-pad x (padded W rows decode
+        x2 = jnp.pad(x2, ((0, 0), (0, kp - k_logical)))  # to exact zeros)
+    bm = min(128, m)
+    mp = -(-m // bm) * bm   # pad M to a tile multiple rather than letting a
+    if mp != m:             # prime M degrade to 1-row grid tiles
+        x2 = jnp.pad(x2, ((0, mp - m), (0, 0)))
+    bn = _pick_tile(np_, 256, _G)
+    bk = _pick_tile(kp, 256, _G)
+    y = ops.gemm_w4a16(x2, w.payload, w.scales, w.scale32,
+                       bm=bm, bn=bn, bk=bk, interpret=interpret)
+    return y[:m, :n_logical].reshape(*lead, n_logical)
+
+
+# ---------------------------------------------------------------------------
+# Storage math (abstract — no arrays needed; used by dryrun reports)
+# ---------------------------------------------------------------------------
+def packed_nbytes_for_shape(shape: Sequence[int],
+                            layout: BlockLayout = BlockLayout2D()) -> int:
+    """Wire bytes a QTensor of logical ``shape`` would occupy."""
+    if isinstance(layout, BlockLayout2D):
+        k, n = shape
+        kp, np_ = _pad_to(k, layout.bm), _pad_to(n, layout.bn)
+        return kp * np_ // 2 + (kp // layout.bm) * (np_ // layout.bn) + 4
+    n = shape[layout.axis]
+    lead = int(math.prod(shape)) // n
+    npad = _pad_to(n, layout.block)
+    return lead * (npad // 2 + npad // layout.block) + 4
+
+
+# ---------------------------------------------------------------------------
+# JSON-able pytree specs (checkpointing: rebuild structure without arrays)
+# ---------------------------------------------------------------------------
+def _layout_to_json(layout: BlockLayout) -> dict:
+    if isinstance(layout, BlockLayout2D):
+        return {"kind": "2d", "bm": layout.bm, "bn": layout.bn}
+    return {"kind": "1d", "axis": layout.axis, "block": layout.block}
+
+
+def _layout_from_json(d: dict) -> BlockLayout:
+    if d["kind"] == "2d":
+        return BlockLayout2D(d["bm"], d["bn"])
+    return BlockLayout1D(d["axis"], d["block"])
+
+
+def tree_spec(tree) -> Any:
+    """JSON-able structural spec of a (nested dict/list) tree whose leaves
+    are arrays or QTensors — enough to rebuild a restore skeleton."""
+    if isinstance(tree, QTensor):
+        return {"__qtensor__": {
+            "method": tree.method,
+            "layout": _layout_to_json(tree.layout),
+            "shape": list(tree.shape),
+            "dtype": tree.dtype,
+        }}
+    if isinstance(tree, dict):
+        return {"__dict__": {k: tree_spec(v) for k, v in tree.items()}}
+    if isinstance(tree, (list, tuple)):
+        return {"__list__": [tree_spec(v) for v in tree],
+                "tuple": isinstance(tree, tuple)}
+    return {"__leaf__": None}
+
+
+def tree_like(spec: Any):
+    """Inverse of :func:`tree_spec`: a placeholder tree with the same pytree
+    structure (leaf *values* are dummies; checkpoint restore only needs the
+    structure and fills real arrays from the manifest)."""
+    if "__qtensor__" in spec:
+        m = spec["__qtensor__"]
+        return QTensor(0, 0, 0, method=m["method"],
+                       layout=_layout_from_json(m["layout"]),
+                       shape=tuple(m["shape"]), dtype=m["dtype"])
+    if "__dict__" in spec:
+        return {k: tree_like(v) for k, v in spec["__dict__"].items()}
+    if "__list__" in spec:
+        seq = [tree_like(v) for v in spec["__list__"]]
+        return tuple(seq) if spec.get("tuple") else seq
+    return 0

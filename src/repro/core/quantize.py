@@ -19,6 +19,12 @@ Blocks are laid along the *reduction* dimension of the consuming GEMM so that
 the block scale factors out of the dot product (Eq. 35): activations/grads are
 blocked 1-D along their contraction axis; weights are blocked 2-D (16x16,
 Fig. 7) so W and W^T share tiles.
+
+NOTE: the tuple-returning ``block_quantize_1d/2d`` + ``core.pack`` round
+trips are superseded by ``core.qtensor.quantize`` -> ``QTensor`` for any
+code that *holds* quantized tensors; this module remains the numeric engine
+underneath (and the home of ``qdq``/``qdq_2d``, the simulated training
+boundary that also covers the non-wire-encodable ablation methods).
 """
 from __future__ import annotations
 
@@ -107,13 +113,16 @@ def adaptive_block_quantize(
     xb = xb.astype(jnp.float32)
     if scale32 is None:
         scale32 = scaling.tensor_scale(xb)
-    xs = xb / scale32                     # Alg.1 line 5 ("X_FP8" range)
+    # scale applications are reciprocal multiplies, not divides: jit rewrites
+    # divides into rcp-multiplies, so divides would make this eager oracle
+    # disagree with the jitted Pallas quantizer by 1 ulp at tie boundaries.
+    xs = xb * (1.0 / scale32)             # Alg.1 line 5 ("X_FP8" range)
     absmax = jnp.max(jnp.abs(xs), axis=-1)
 
     qs, s8s, errs = [], [], []
     for i, fmt in enumerate(candidates):
         s8 = scaling.block_scale_e4m3(absmax, fmt.amax_target)
-        y = xs / s8[..., None]
+        y = xs * (1.0 / s8)[..., None]
         k = None if key is None else jax.random.fold_in(key, i)
         q = _quantize_values(y, fmt, rounding, k)
         deq = q * s8[..., None]

@@ -32,9 +32,14 @@ def tensor_scale(x: jax.Array, denom: float = formats.PER_TENSOR_DENOM) -> jax.A
     """Per-tensor FP32 scale s32 = max|X| / denom (Alg. 1 line 4).
 
     Guarded so an all-zero tensor yields scale 1 (quantizes to zeros).
+
+    Computed as a reciprocal multiply (not a divide): XLA rewrites
+    divisions into rcp-multiplies inside jit but not in eager mode, so a
+    divide here would make the jitted Pallas quantizer and the eager oracle
+    disagree by 1 ulp — the multiply form is identical under both.
     """
     amax = jnp.max(jnp.abs(x)).astype(jnp.float32)
-    return jnp.where(amax > 0, amax / denom, 1.0)
+    return jnp.where(amax > 0, amax * jnp.float32(1.0 / denom), 1.0)
 
 
 def block_scale_e4m3(block_absmax: jax.Array, amax_target: float) -> jax.Array:
@@ -45,7 +50,9 @@ def block_scale_e4m3(block_absmax: jax.Array, amax_target: float) -> jax.Array:
     subnormal so dequantization never divides by zero.  All-zero blocks get
     scale 1 (their payload is all zeros regardless).
     """
-    raw = block_absmax.astype(jnp.float32) / amax_target
+    # reciprocal multiply, not divide — keeps jit (rcp-rewritten) and eager
+    # execution bit-identical; see tensor_scale.
+    raw = block_absmax.astype(jnp.float32) * jnp.float32(1.0 / amax_target)
     # XLA's f8e4m3fn cast maps values beyond ~464 to NaN (no inf encoding);
     # saturate explicitly at the E4M3 max (matters for the 4/6 baseline whose
     # blockmax/4 scale can reach 672).

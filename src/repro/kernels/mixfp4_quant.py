@@ -62,19 +62,23 @@ def quant_block_kernel_math(xs: jax.Array):
     """
     absmax = jnp.max(jnp.abs(xs), axis=-1)                     # (bm, nb)
 
+    # Reciprocal multiplies (not divides) throughout, mirroring the
+    # core.quantize oracle exactly: XLA rewrites divides to rcp-multiplies
+    # inside jit but not eagerly, so divides would cost 1 ulp of
+    # kernel-vs-oracle disagreement at rounding-tie boundaries.
     # --- E2M1 branch (Alg.1 lines 7-10) --------------------------------
-    s_e2 = _e4m3_rne(absmax / 6.0)
+    s_e2 = _e4m3_rne(absmax * (1.0 / 6.0))
     s_e2 = jnp.where((absmax > 0) & (s_e2 <= 0), 2.0**-9, s_e2)
     s_e2 = jnp.where(absmax > 0, s_e2, 1.0)
-    y2 = xs / s_e2[..., None]
+    y2 = xs * (1.0 / s_e2)[..., None]
     q2 = jnp.sign(y2) * _rne_e2m1(jnp.abs(y2))
     err2 = jnp.mean(jnp.square(q2 * s_e2[..., None] - xs), axis=-1)
 
     # --- E1M2 branch (Alg.1 lines 12-15; effective INT lattice) --------
-    s_e1 = _e4m3_rne(absmax / 7.0)
+    s_e1 = _e4m3_rne(absmax * (1.0 / 7.0))
     s_e1 = jnp.where((absmax > 0) & (s_e1 <= 0), 2.0**-9, s_e1)
     s_e1 = jnp.where(absmax > 0, s_e1, 1.0)
-    y1 = xs / s_e1[..., None]
+    y1 = xs * (1.0 / s_e1)[..., None]
     q1 = jnp.sign(y1) * _rne_int(jnp.abs(y1), 7.0)
     err1 = jnp.mean(jnp.square(q1 * s_e1[..., None] - xs), axis=-1)
 
@@ -106,7 +110,7 @@ def _pack_scale(s8: jax.Array, t: jax.Array) -> jax.Array:
 
 def _quant_kernel(s32_ref, x_ref, payload_ref, scale_ref):
     s32 = s32_ref[0, 0]
-    x = x_ref[...].astype(jnp.float32) / s32
+    x = x_ref[...].astype(jnp.float32) * (1.0 / s32)
     bm, k = x.shape
     xs = x.reshape(bm, k // _G, _G)
     q, s8, t = quant_block_kernel_math(xs)
@@ -140,7 +144,8 @@ def mixfp4_quant_rows(
     m, k = x.shape
     assert k % _G == 0, f"K={k} must be a multiple of {_G}"
     amax = jnp.max(jnp.abs(x)).astype(jnp.float32)
-    s32 = jnp.where(amax > 0, amax / 2688.0, 1.0).reshape(1, 1)
+    # matches scaling.tensor_scale bit-for-bit (reciprocal multiply)
+    s32 = jnp.where(amax > 0, amax * (1.0 / 2688.0), 1.0).reshape(1, 1)
 
     if bm is None:
         bm = _pick_bm(m, k)

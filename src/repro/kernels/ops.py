@@ -21,6 +21,7 @@ __all__ = [
     "default_interpret",
     "quantize_rows",
     "pack_weight_kn",
+    "pack_weight_qt",
     "gemm_w4a16",
     "gemm_w4a4",
     "rht_rows",
@@ -40,8 +41,21 @@ def quantize_rows(x: jax.Array, **kw):
 def pack_weight_kn(w: jax.Array, method: str = "mixfp4",
                    block: tuple[int, int] = (16, 16)):
     """Quantize+pack a (K, N) weight for the GEMM kernels (oracle-produced;
-    packing is offline/per-checkpoint, not a hot path)."""
+    packing is offline/per-checkpoint, not a hot path).
+
+    Positional-triple shim; new code should use :func:`pack_weight_qt` /
+    ``repro.core.qtensor.quantize`` and route GEMMs through ``qtensor.qmm``.
+    """
     return ref.ref_pack_weight_kn(w, method, block)
+
+
+def pack_weight_qt(w: jax.Array, method: str = "mixfp4",
+                   block: tuple[int, int] = (16, 16)):
+    """Quantize+pack a (K, N) weight into a 2-D-tiled QTensor (the ``qmm``
+    weight operand)."""
+    from repro.core import qtensor
+    return qtensor.quantize(
+        w, qtensor.QuantSpec(method, qtensor.BlockLayout2D(*block)))
 
 
 def gemm_w4a16(x, payload, scales, scale32, **kw):

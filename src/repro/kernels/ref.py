@@ -9,7 +9,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.core import formats, hadamard, pack, quantize as Q, scaling
+from repro.core import hadamard, qtensor
+from repro.core.qtensor import BlockLayout1D, BlockLayout2D, QuantSpec
 
 __all__ = [
     "ref_quant_pack_rows",
@@ -24,54 +25,38 @@ __all__ = [
 def ref_quant_pack_rows(x: jax.Array, method: str = "mixfp4", block: int = 16):
     """Quantize (M, K) row-major with 1-D blocks along K and pack.
 
+    Thin shim over :func:`repro.core.qtensor.quantize` kept for the kernel
+    tests' positional-triple interface.
     Returns (payload (M, K//2) uint8, scales (M, K//block) uint8, scale32 f32).
     """
     assert x.ndim == 2 and x.shape[1] % block == 0
-    bq, _, _ = Q.block_quantize_1d(x, method, block=block, axis=-1)
-    p = pack.pack_blocks(bq)
-    m, k = x.shape
-    payload = p.payload.reshape(m, k // 2)
-    return payload, p.scales, p.scale32
+    qt = qtensor.quantize(x, QuantSpec(method, BlockLayout1D(-1, block)))
+    return qt.payload, qt.scales, qt.scale32
 
 
 def ref_pack_weight_kn(w: jax.Array, method: str = "mixfp4",
                        block: tuple[int, int] = (16, 16)):
     """Quantize a (K, N) weight with 2-D tiles and lay the payload out packed
     along K (two K-consecutive nibbles per byte), matching the GEMM kernel's
-    operand layout.
+    operand layout.  Thin shim over :func:`repro.core.qtensor.quantize`.
 
     Returns (payload (K//2, N) uint8, scales (K//bm, N//bn) uint8, scale32).
     """
     k, n = w.shape
     bm, bn = block
     assert k % bm == 0 and n % bn == 0 and k % 2 == 0
-    bq, shape, blk = Q.block_quantize_2d(w, method, block=block)
-    # values back on the (K, N) grid
-    vals = Q._from_blocks_2d(bq.values, shape, bm, bn)
-    # type/scale per tile on the (K//bm, N//bn) grid
-    t_grid = bq.type_bits
-    nib_e2m1 = formats.e2m1_encode(vals)
-    nib_e1m2 = formats.e1m2_encode(vals)
-    t_full = jnp.repeat(jnp.repeat(t_grid, bm, axis=0), bn, axis=1)
-    nib = jnp.where(t_full.astype(bool), nib_e1m2, nib_e2m1)
-    payload = (nib[0::2, :] | (nib[1::2, :] << 4)).astype(jnp.uint8)
-    scales = scaling.pack_scale_with_type(bq.scale8, t_grid)
-    return payload, scales, bq.scale32
+    qt = qtensor.quantize(w, QuantSpec(method, BlockLayout2D(bm, bn)))
+    return qt.payload, qt.scales, qt.scale32
 
 
 def ref_dequant_weight_kn(payload, scales, scale32,
                           block: tuple[int, int] = (16, 16)) -> jax.Array:
     """Decode the (K//2, N) packed weight back to f32 (Fig. 9 decode)."""
-    bm, bn = block
-    lo = payload & 0xF
-    hi = (payload >> 4) & 0xF
-    k2, n = payload.shape
-    nib = jnp.stack([lo, hi], axis=1).reshape(2 * k2, n)
-    s8, t = scaling.unpack_scale_and_type(scales)
-    t_full = jnp.repeat(jnp.repeat(t, bm, axis=0), bn, axis=1)
-    s_full = jnp.repeat(jnp.repeat(s8, bm, axis=0), bn, axis=1)
-    vals = formats.decode_to_e2m2(nib, t_full)
-    return vals * s_full * scale32
+    qt = qtensor.QTensor(
+        payload, scales, scale32, method="mixfp4",
+        layout=BlockLayout2D(*block),
+        shape=(payload.shape[0] * 2, payload.shape[1]), dtype="float32")
+    return qt.dequantize()
 
 
 def ref_gemm_w4a16(x, payload, scales, scale32,
@@ -89,13 +74,10 @@ def ref_gemm_w4a4(xp, xs, xs32, payload, scales, scale32,
     """W4A4 GEMM oracle: packed activations (rows) x packed weight."""
     m = xp.shape[0]
     k = xp.shape[1] * 2
-    lo = xp & 0xF
-    hi = (xp >> 4) & 0xF
-    nib = jnp.stack([lo, hi], axis=-1).reshape(m, k)
-    s8, t = scaling.unpack_scale_and_type(xs)
-    vals = formats.decode_to_e2m2(nib, jnp.repeat(t, act_block, axis=1))
-    x = vals * jnp.repeat(s8, act_block, axis=1) * xs32
-    return ref_gemm_w4a16(x, payload, scales, scale32, block)
+    qx = qtensor.QTensor(xp, xs, xs32, method="mixfp4",
+                         layout=BlockLayout1D(-1, act_block),
+                         shape=(m, k), dtype="float32")
+    return ref_gemm_w4a16(qx.dequantize(), payload, scales, scale32, block)
 
 
 def ref_fwht_rows(x: jax.Array, signs: jax.Array, group: int = 16) -> jax.Array:

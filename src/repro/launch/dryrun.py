@@ -22,6 +22,7 @@ Usage:
 """
 import argparse
 import json
+import math
 import time
 import traceback
 
@@ -37,6 +38,7 @@ from repro.launch import steps as steps_lib
 from repro.launch.flops import entry_flops
 from repro.launch.hlo_analysis import parse_collectives
 from repro.launch.mesh import make_production_mesh
+from repro.core import qtensor
 from repro.models import base as model_base
 from repro.models.base import build_model
 from repro.optim.adamw import AdamWState
@@ -78,6 +80,38 @@ def _batch_specs(batch_sds, data_axes, data_size: int):
 def _f32_like(sds_tree):
     return jax.tree.map(
         lambda x: jax.ShapeDtypeStruct(x.shape, jnp.float32), sds_tree)
+
+
+def packed_weight_report(arch: str, quant_method: str = "mixfp4",
+                         overrides: dict | None = None) -> dict:
+    """Abstract (no-allocation) HBM accounting for the serving weight path:
+    bytes for the projection weights dense at bf16 vs held as packed 2-D
+    QTensors (what ServeEngine actually stores)."""
+    cfg = configs.full_config(arch).replace(
+        quant=QuantConfig(method=quant_method))
+    if overrides:
+        cfg = cfg.replace(**overrides)
+    params_sds, _ = _abstract_init(build_model(cfg))
+    packed = dense = 0
+
+    def walk(node):
+        nonlocal packed, dense
+        if not isinstance(node, dict):
+            return
+        for k, v in node.items():
+            # selection shares pack_projections' predicate so the report
+            # counts exactly the leaves ServeEngine converts
+            if model_base.is_packable_projection(k, v):
+                n_mats = int(math.prod(v.shape[:-2]))
+                packed += n_mats * qtensor.packed_nbytes_for_shape(
+                    v.shape[-2:], qtensor.BlockLayout2D())
+                dense += int(math.prod(v.shape)) * 2
+            else:
+                walk(v)
+
+    walk(params_sds)
+    return {"proj_dense_bf16": dense, "proj_packed_qtensor": packed,
+            "compression": round(dense / packed, 3) if packed else 1.0}
 
 
 def build_cell(arch: str, shape_name: str, mesh, multi_pod: bool,
@@ -206,6 +240,7 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str,
             "bytes_by_groupsize": coll.bytes_by_groupsize,
             "total_bytes": coll.total_bytes,
         },
+        "weight_bytes": packed_weight_report(arch, quant_method, overrides),
     }
     _write(rec, out_dir)
     print(f"[dryrun] OK {arch} {shape_name} {mesh_kind} "

@@ -30,6 +30,12 @@ def main(argv=None):
     ap.add_argument("--requests", type=int, default=4)
     ap.add_argument("--new-tokens", type=int, default=8)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--no-pack", action="store_true",
+                    help="serve dense bf16 weights through the simulated "
+                         "qdq path instead of packed QTensors")
+    ap.add_argument("--save-weights", default=None, metavar="DIR",
+                    help="write the packed QTensor weight tree as a "
+                         "checkpoint and exit")
     args = ap.parse_args(argv)
 
     cfg = (configs.smoke_config(args.arch) if args.smoke
@@ -41,9 +47,22 @@ def main(argv=None):
           f"quant={args.quant}")
 
     engine = ServeEngine(cfg, params, batch_size=args.batch,
-                         max_len=args.max_len)
-    print(f"[serve] packed weights {engine.compression:.2f}x smaller than "
-          f"bf16")
+                         max_len=args.max_len,
+                         pack_weights=not args.no_pack)
+    del params  # projections now live ONLY as packed QTensors in the engine
+    if engine.packed_bytes:
+        print(f"[serve] projection weights held as packed QTensors: "
+              f"{engine.packed_bytes / 1024:.0f} KiB "
+              f"({engine.compression:.2f}x smaller than bf16), served "
+              f"through qmm -> W4A16 kernels")
+    if args.save_weights:
+        if args.no_pack:
+            ap.error("--save-weights requires packed weights; drop --no-pack "
+                     "(the checkpoint format is the packed QTensor tree)")
+        engine.save_weights(args.save_weights)
+        print(f"[serve] packed QTensor weights checkpointed to "
+              f"{args.save_weights}")
+        return
 
     rng = np.random.RandomState(args.seed)
     pending = [Request(uid=i,
@@ -54,12 +73,9 @@ def main(argv=None):
     while pending or active:
         while pending and engine.add_request(pending[0]):
             pending.pop(0)
-            active += 1
         out = engine.step()
         n_tok += len(out)
         active = sum(s is not None for s in engine.slots)
-        if not out and not pending and not active:
-            break
     dt = time.time() - t0
     print(f"[serve] {args.requests} requests, {n_tok} tokens, "
           f"{n_tok/max(dt,1e-9):.1f} tok/s")

@@ -25,6 +25,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
+from repro.core import qtensor
 from repro.core.qgemm import QuantConfig, qgemm
 
 __all__ = [
@@ -32,6 +33,10 @@ __all__ = [
     "Param",
     "unzip_params",
     "param_count",
+    "PROJECTION_KEYS",
+    "is_packable_projection",
+    "pack_projections",
+    "decode_positions",
     "rms_norm",
     "apply_rope",
     "qlinear",
@@ -252,9 +257,88 @@ def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
 # ---------------------------------------------------------------------------
 # Quantized linear (the paper's GEMM boundary)
 # ---------------------------------------------------------------------------
-def qlinear(x: jax.Array, w: jax.Array, ctx: "Ctx", tag: int) -> jax.Array:
-    """All projection GEMMs route through the Fig. 7 quantized boundary."""
+def qlinear(x: jax.Array, w, ctx: "Ctx", tag: int) -> jax.Array:
+    """All projection GEMMs route through the quantized boundary.
+
+    Dense ``w`` (training): the Fig. 7 qdq-simulated ``qgemm`` with SR/RHT
+    on the backward pass.  Packed ``QTensor`` ``w`` (serving): ``qmm``
+    serves straight from the 4.5-bit wire format through the W4A16 kernel —
+    no dense copy of the weight ever exists.
+    """
+    if isinstance(w, qtensor.QTensor):
+        return qtensor.qmm(x, w).astype(x.dtype)
     return qgemm(ctx.quant, x, w, jax.random.fold_in(ctx.key, tag))
+
+
+# Projection-weight leaves consumed through qlinear — exactly the GEMMs the
+# paper quantizes (embeddings, norms and the LM head stay high-precision per
+# the paper's exclusions).  attn/mlp names from attn_init/mlp_init below;
+# in/x/dt/out_proj from the Mamba blocks (models/mamba.py).
+PROJECTION_KEYS = frozenset(
+    {"wq", "wk", "wv", "wo", "w_up", "w_down", "w_gate",
+     "in_proj", "x_proj", "dt_proj", "out_proj"})
+
+
+def is_packable_projection(key: str, leaf) -> bool:
+    """One predicate for "does ServeEngine pack this leaf" — shared with the
+    dryrun HBM accounting so report and engine can't drift.  Matches any
+    projection-named leaf whose trailing (K, N) matrix fills at least one
+    16x16 tile; leading dims (scan layer stacking, MoE expert dims) ride
+    along as QTensor batch dimensions."""
+    return (key in PROJECTION_KEYS and getattr(leaf, "ndim", 0) >= 2
+            and min(leaf.shape[-2:]) >= 16)
+
+
+def pack_projections(params, method: str = "mixfp4",
+                     block: tuple[int, int] = (16, 16)):
+    """Replace every projection-weight leaf of a parameter value tree with a
+    packed 2-D-tiled :class:`~repro.core.qtensor.QTensor`.
+
+    Leaves with leading batch dims — ``(n_layers, K, N)`` from the
+    ``lax.scan`` layout, ``(n_layers, E, K, N)`` for scan-stacked MoE
+    experts — are quantized per trailing matrix under ``vmap``; the result is
+    one QTensor whose children carry the leading dims, which scan/``lax.map``
+    slice transparently.  Returns ``(packed_tree, packed_bytes, dense_bytes)``
+    where the byte counts cover the converted leaves (dense at bf16 rates).
+    """
+    spec = qtensor.QuantSpec(method, qtensor.BlockLayout2D(*block))
+    stats = {"packed": 0, "dense": 0}
+
+    def convert(w):
+        lead = w.shape[:-2]
+        if lead:
+            flat = w.reshape((-1,) + w.shape[-2:])
+            qt = jax.vmap(lambda m: qtensor.quantize(m, spec))(flat)
+            if len(lead) > 1:
+                qt = qtensor.QTensor(
+                    qt.payload.reshape(lead + qt.payload.shape[1:]),
+                    qt.scales.reshape(lead + qt.scales.shape[1:]),
+                    qt.scale32.reshape(lead + qt.scale32.shape[1:]),
+                    qt.method, qt.layout, qt.shape, qt.dtype)
+        else:
+            qt = qtensor.quantize(w, spec)
+        stats["packed"] += qt.nbytes
+        stats["dense"] += w.size * 2
+        return qt
+
+    def walk(node):
+        if isinstance(node, dict):
+            return {k: (convert(v) if is_packable_projection(k, v)
+                        else walk(v))
+                    for k, v in node.items()}
+        return node
+
+    packed = walk(params)
+    return packed, stats["packed"], stats["dense"]
+
+
+def decode_positions(cache_len, b: int) -> jax.Array:
+    """(B, 1) absolute positions for a single-token decode step from a
+    scalar or per-sequence ``(B,)`` cache length."""
+    cl = jnp.asarray(cache_len)
+    if cl.ndim:
+        cl = cl[:, None]
+    return cl + jnp.zeros((b, 1), jnp.int32)
 
 
 @dataclass(frozen=True)
@@ -321,11 +405,13 @@ def attention(
     k: jax.Array,                # (B, Sk, Hkv, dh)
     v: jax.Array,                # (B, Sk, Hkv, dh)
     *,
-    causal_offset: jax.Array | int = 0,   # absolute position of q[0]
+    causal_offset: jax.Array | int = 0,   # absolute position of q[0];
+                                          # (B,) => per-sequence (decode)
     window: jax.Array | int = 0,          # 0 => full causal
     softcap: float = 0.0,
     chunk: int = 1024,
-    kv_valid_len: jax.Array | None = None,  # for decode with preallocated cache
+    kv_valid_len: jax.Array | None = None,  # for decode with preallocated
+                                            # cache; (B,) => per-sequence
     causal: bool = True,                    # False: bidirectional / cross-attn
 ) -> jax.Array:
     b, sq, h, dh = q.shape
@@ -336,33 +422,38 @@ def attention(
     qr = q.reshape(b, sq, hkv, g, dh)
     kpos = jnp.arange(sk)
     window = jnp.asarray(window)
-    kv_limit = sk if kv_valid_len is None else kv_valid_len
+    kv_limit = sk if kv_valid_len is None else jnp.asarray(kv_valid_len)
+    offset = jnp.asarray(causal_offset)
 
     def block(qc, qpos):
+        # qpos: (C,) or, for per-sequence decode offsets, (B, C)
         s = _attn_scores_block(qc, k, scale, softcap)      # (B,Hkv,G,C,Sk)
         if causal:
-            cmask = kpos[None, :] <= qpos[:, None]
+            cmask = kpos <= qpos[..., None]
             in_window = jnp.where(window > 0,
-                                  kpos[None, :] > qpos[:, None] - window, True)
+                                  kpos > qpos[..., None] - window, True)
         else:
-            cmask = jnp.ones((qpos.shape[0], sk), bool)
+            cmask = jnp.ones(qpos.shape + (sk,), bool)
             in_window = True
-        valid = kpos[None, :] < kv_limit
-        mask = cmask & in_window & valid                   # (C, Sk)
-        s = jnp.where(mask[None, None, None], s, -1e30)
+        valid = (kpos[None, :] < kv_limit[:, None, None]
+                 if getattr(kv_limit, "ndim", 0) == 1 else kpos < kv_limit)
+        mask = cmask & in_window & valid            # (C, Sk) or (B, C, Sk)
+        if mask.ndim == 2:
+            mask = mask[None]
+        s = jnp.where(mask[:, None, None], s, -1e30)
         p = jax.nn.softmax(s, axis=-1)
         o = jnp.einsum("bhgcs,bshd->bchgd", p, v.astype(jnp.float32))
         return o.reshape(b, -1, h, dh).astype(q.dtype)
 
     if sq <= chunk:
-        return block(qr, causal_offset + jnp.arange(sq))
+        return block(qr, offset[..., None] + jnp.arange(sq))
 
     assert sq % chunk == 0, f"Sq={sq} not divisible by attn chunk {chunk}"
     nc = sq // chunk
 
     def chunk_fn(i):
         qc = jax.lax.dynamic_slice_in_dim(qr, i * chunk, chunk, axis=1)
-        qpos = causal_offset + i * chunk + jnp.arange(chunk)
+        qpos = offset[..., None] + i * chunk + jnp.arange(chunk)
         return block(qc, qpos)
 
     out = jax.lax.map(chunk_fn, jnp.arange(nc))            # (nc,B,C,H,dh)
@@ -411,13 +502,22 @@ def attn_apply(p: dict, x: jax.Array, ctx: Ctx, cfg: ArchConfig, *,
         kv_valid = None
     else:
         ck, cv = kv_cache
-        ck = jax.lax.dynamic_update_slice_in_dim(
-            ck, knew.astype(ck.dtype), cache_len, axis=1)
-        cv = jax.lax.dynamic_update_slice_in_dim(
-            cv, vnew.astype(cv.dtype), cache_len, axis=1)
+        cl = jnp.asarray(cache_len)
+        if cl.ndim == 1:
+            # per-sequence cache positions (continuous batching: each slot
+            # decodes at its own length) — single-token scatter per row
+            assert s == 1, "per-sequence cache_len requires single-token steps"
+            rows = jnp.arange(b)
+            ck = ck.at[rows, cl].set(knew[:, 0].astype(ck.dtype))
+            cv = cv.at[rows, cl].set(vnew[:, 0].astype(cv.dtype))
+        else:
+            ck = jax.lax.dynamic_update_slice_in_dim(
+                ck, knew.astype(ck.dtype), cache_len, axis=1)
+            cv = jax.lax.dynamic_update_slice_in_dim(
+                cv, vnew.astype(cv.dtype), cache_len, axis=1)
         k, v = ck, cv
-        causal_offset = cache_len
-        kv_valid = cache_len + s
+        causal_offset = cl
+        kv_valid = cl + s
         new_cache = (ck, cv)
 
     o = attention(q, k, v, causal_offset=causal_offset, window=window,

@@ -195,9 +195,28 @@ class EncDecLM:
         logits = base.lm_logits(x[:, -1], params["embed"], cfg.softcap_final, vocab=cfg.vocab)
         return logits, {"k": nk, "v": nv, "memory": mem_buf}
 
+    def reset_slot(self, cache, i: int):
+        """Zero slot ``i``'s decoder K/V rows and encoder memory.  NOTE:
+        ServeEngine has no source-encoding path (requests carry tokens
+        only), so serving an encdec model through it cross-attends a zero
+        memory; callers must run ``prefill`` with ``src_embeds`` themselves
+        before decode makes sense."""
+        return {"k": cache["k"].at[:, i].set(0),
+                "v": cache["v"].at[:, i].set(0),
+                "memory": cache["memory"].at[i].set(0)}
+
+    def slot_state(self, cache, i: int):
+        return {"k": cache["k"][:, i], "v": cache["v"][:, i],
+                "memory": cache["memory"][i]}
+
+    def write_slot(self, cache, i: int, state):
+        return {"k": cache["k"].at[:, i].set(state["k"]),
+                "v": cache["v"].at[:, i].set(state["v"]),
+                "memory": cache["memory"].at[i].set(state["memory"])}
+
     def decode_step(self, params, tokens, ctx: Ctx, cache, cache_len):
         cfg = self.cfg
-        positions = cache_len + jnp.zeros((tokens.shape[0], 1), jnp.int32)
+        positions = base.decode_positions(cache_len, tokens.shape[0])
         x, (nk, nv) = self._decoder(
             params, tokens[:, None], cache["memory"].astype(jnp.bfloat16),
             ctx, kv_cache=(cache["k"], cache["v"]), cache_len=cache_len,

@@ -409,10 +409,25 @@ class MambaLM:
             new_cache["k"], new_cache["v"] = kvT
         return logits, new_cache
 
+    def reset_slot(self, cache, i: int):
+        """Zero slot ``i``'s recurrent SSM state, conv window and (hybrid)
+        K/V rows — for the SSM a zeroed state IS the fresh-request state."""
+        return jax.tree.map(lambda a: a.at[:, i].set(0), cache)
+
+    def slot_state(self, cache, i: int):
+        """Snapshot slot ``i``'s rows.  Unlike KV rows, the recurrent
+        h/conv state advances for EVERY batch row each decode step, so the
+        engine must restore other active slots after a prefill — a dummy
+        step is irreversible for an SSM."""
+        return jax.tree.map(lambda a: a[:, i], cache)
+
+    def write_slot(self, cache, i: int, state):
+        return jax.tree.map(lambda a, s: a.at[:, i].set(s), cache, state)
+
     def decode_step(self, params, tokens, ctx: Ctx, cache, cache_len):
         cfg = self.cfg
         x = params["embed"][tokens[:, None]].astype(jnp.bfloat16)
-        positions = cache_len + jnp.zeros((x.shape[0], 1), jnp.int32)
+        positions = base.decode_positions(cache_len, x.shape[0])
         kv = (cache["k"], cache["v"]) if cfg.attn_period else None
         x, hTs, convTs, kvT = self._run_layers(
             params, x, ctx, cache["h"], cache["conv"],

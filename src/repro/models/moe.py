@@ -32,6 +32,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.core import qtensor
 from repro.models import base
 from repro.models.base import ArchConfig, Ctx, Param, qlinear
 
@@ -108,8 +109,20 @@ def _dispatch_indices(idx, e: int, cap: int):
     return tok_s, e_s, slot, keep, order
 
 
+def _n_experts(w) -> int:
+    """Stored expert count of a dense (E, K, N) stack or a packed QTensor
+    whose children carry the expert dim ahead of the tile grid."""
+    return (w.payload.shape[0] if isinstance(w, qtensor.QTensor)
+            else w.shape[0])
+
+
 def _expert_ffn(wu, wg, wd, h, key, cfg: ArchConfig, psum_axis=None):
-    """Quantized per-expert FFN over (E_loc, C, D) buffers (vmapped)."""
+    """Quantized per-expert FFN over (E_loc, C, D) buffers.
+
+    Dense expert stacks vmap; packed QTensor stacks go through ``lax.map``
+    instead — the map slices each expert's payload/scales out of the pytree
+    so ``qmm`` sees concrete 2-D operands for the Pallas kernels (vmap would
+    hand the kernels batched tracers)."""
 
     def one(i, wu_i, wg_i, wd_i, h_i):
         c = Ctx(jax.random.fold_in(key, 1000 + i), cfg.quant)
@@ -117,7 +130,11 @@ def _expert_ffn(wu, wg, wd, h, key, cfg: ArchConfig, psum_axis=None):
         gate = jax.nn.silu(qlinear(h_i, wg_i, c, 5))
         return qlinear(gate * up, wd_i, c, 6)
 
-    out = jax.vmap(one)(jnp.arange(wu.shape[0]), wu, wg, wd, h)
+    if isinstance(wu, qtensor.QTensor):
+        out = jax.lax.map(lambda a: one(*a),
+                          (jnp.arange(_n_experts(wu)), wu, wg, wd, h))
+    else:
+        out = jax.vmap(one)(jnp.arange(wu.shape[0]), wu, wg, wd, h)
     if psum_axis is not None:
         out = jax.lax.psum(out, psum_axis)
     return out
@@ -166,11 +183,16 @@ def moe_apply(p: dict, x: jax.Array, ctx: Ctx, cfg: ArchConfig):
         out = _moe_local(xt, gates.astype(x.dtype), idx, ctx.key,
                          p["w_up"], p["w_gate"], p["w_down"],
                          cfg=cfg, m=1, ep=ep, model_axis=ctx.model_axis,
-                         has_mesh=False, e_pad=p["w_up"].shape[0])
+                         has_mesh=False, e_pad=_n_experts(p["w_up"]))
     else:
         dta, mdl = ctx.data_axes, ctx.model_axis
         msize = ctx.model_size
         wu, wg, wd = p["w_up"], p["w_gate"], p["w_down"]
+        if isinstance(wu, qtensor.QTensor):
+            # sharded packed experts are a ROADMAP follow-on (PartitionSpec
+            # story for QTensor children); under a mesh, decode through the
+            # dense path for now
+            wu, wg, wd = wu.dequantize(), wg.dequantize(), wd.dequantize()
         e_pad = None
         if ep:
             # weights are stored pre-padded to a multiple of 16 (moe_init);

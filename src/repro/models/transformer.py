@@ -195,17 +195,32 @@ class TransformerLM:
                                 vocab=cfg.vocab)
         return logits, {"k": nk, "v": nv}
 
+    def reset_slot(self, cache, i: int):
+        """Zero slot ``i``'s cache rows so a freshly admitted request starts
+        from position 0 with no stale K/V (continuous batching)."""
+        return jax.tree.map(lambda a: a.at[:, i].set(0), cache)
+
+    def slot_state(self, cache, i: int):
+        """Snapshot slot ``i``'s cache rows (see ServeEngine._prefill_slot:
+        other active slots are restored after a prefill so the dummy steps
+        they observe never leak into their state)."""
+        return jax.tree.map(lambda a: a[:, i], cache)
+
+    def write_slot(self, cache, i: int, state):
+        return jax.tree.map(lambda a, s: a.at[:, i].set(s), cache, state)
+
     def decode_step(self, params, tokens, ctx: Ctx, cache, cache_len):
         """One token for every sequence in the batch.
 
-        tokens: (B,) int32; cache_len: () int32 current length.
-        Returns (logits (B, V), updated cache arrays).
+        tokens: (B,) int32; cache_len: () int32 shared length, or (B,) int32
+        per-sequence lengths (continuous batching: each slot decodes at its
+        own cache position).  Returns (logits (B, V), updated cache arrays).
         """
         cfg = self.cfg
         x = params["embed"][tokens[:, None]].astype(jnp.bfloat16)
         if cfg.emb_scale:
             x = x * math.sqrt(cfg.d_model)
-        positions = cache_len + jnp.zeros((x.shape[0], 1), jnp.int32)
+        positions = base.decode_positions(cache_len, x.shape[0])
         x, nk, nv = self._run_layers_cached(
             params, x, ctx, cache["k"], cache["v"], cache_len, positions)
         logits = base.lm_logits(x[:, 0], params["embed"], cfg.softcap_final,

@@ -1,14 +1,16 @@
 """Batched serving engine over packed MixFP4 weights.
 
-Production-shaped serving loop: requests join a continuous batch; weights
-are stored in the paper's wire format (4-bit payloads + type-in-sign E4M3
-scale bytes = 4.5 bits/value in HBM, a ~3.55x weight-memory and bandwidth
-saving over bf16 for the decode-bound regime); the KV cache can optionally
-be MixFP4-quantized per (head, 16-value block) as well.
+Production-shaped serving loop: requests join a continuous batch and the
+projection weights are held ONLY as packed :class:`~repro.core.qtensor.QTensor`
+pytrees — the paper's wire format (4-bit payloads + type-in-sign E4M3 scale
+bytes = 4.5 bits/value in HBM, a ~3.55x weight-memory and bandwidth saving
+over bf16 in the decode-bound regime).  Every decode step runs through
+``qmm`` -> the W4A16 Pallas kernel (interpret mode on CPU, native on TPU),
+decoding tiles in VMEM; no dense bf16 copy of a projection weight is
+retained anywhere in the engine.
 
-On CPU the packed path runs through the interpret-mode Pallas kernels; on
-TPU the same `kernels/ops.py` entry points compile natively.  The engine is
-what examples/serve.py drives and what the decode dry-run shapes model.
+The KV cache can optionally be MixFP4-quantized per (head, 16-value block)
+as well (``quantize_kv``/``dequantize_kv`` below).
 """
 from __future__ import annotations
 
@@ -19,9 +21,22 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import pack as pack_lib, quantize as Q
+from repro.checkpoint.manager import CheckpointManager
+from repro.core import qtensor
 from repro.kernels import ops
-from repro.models.base import ArchConfig, Ctx, build_model
+from repro.models.base import ArchConfig, Ctx, build_model, pack_projections
+
+
+def _packed_stats(tree) -> tuple[int, int]:
+    """(wire bytes, bf16-equivalent bytes) over the QTensor leaves of a
+    parameter tree — same accounting as models.base.pack_projections."""
+    packed = dense = 0
+    for leaf in jax.tree.leaves(
+            tree, is_leaf=lambda x: isinstance(x, qtensor.QTensor)):
+        if isinstance(leaf, qtensor.QTensor):
+            packed += leaf.nbytes
+            dense += int(np.prod(leaf.shape)) * leaf._batch_size() * 2
+    return packed, dense
 
 
 @dataclasses.dataclass
@@ -37,17 +52,30 @@ class ServeEngine:
     """Greedy continuous-batching decoder for the transformer families."""
 
     def __init__(self, cfg: ArchConfig, params, *, batch_size: int = 8,
-                 max_len: int = 512, pack_weights: bool = True):
+                 max_len: int = 512, pack_weights: bool = True,
+                 method: str = "mixfp4"):
+        if cfg.family == "encdec":
+            raise ValueError(
+                "ServeEngine has no source-encoding path (requests carry "
+                "tokens only); an encdec model would cross-attend an "
+                "all-zero memory. Drive encdec decoding through "
+                "model.prefill(src_embeds)/decode_step directly.")
         self.cfg = cfg
         self.model = build_model(cfg)
-        self.params = params
         self.batch_size = batch_size
         self.max_len = max_len
         self.ctx = Ctx(jax.random.PRNGKey(0), cfg.quant)
-        self.packed_bytes = 0
-        self.dense_bytes = 0
         if pack_weights:
-            self._pack_report()
+            # Projection weights become packed QTensors; the dense leaves
+            # are dropped from this tree (callers should release their own
+            # reference if they want the full HBM saving).
+            self.params, self.packed_bytes, self.dense_bytes = \
+                pack_projections(params, method=method)
+        else:
+            self.params = params
+            self.packed_bytes = self.dense_bytes = 0
+        self.compression = (self.dense_bytes / self.packed_bytes
+                            if self.packed_bytes else 1.0)
         self.cache = self.model.init_cache(batch_size, max_len)
         self.lengths = np.zeros((batch_size,), np.int32)
         self.slots: list[Request | None] = [None] * batch_size
@@ -55,27 +83,45 @@ class ServeEngine:
             lambda p, t, c, l: self.model.decode_step(p, t, self.ctx, c, l))
 
     # ------------------------------------------------------------------
-    def _pack_report(self):
-        """Pack every projection weight into the MixFP4 wire format and
-        record the storage saving (weights are kept dequantized for the
-        simulated path; the packed tensors are what HBM would hold)."""
-        leaves = jax.tree.leaves(self.params)
-        for w in leaves:
-            if w.ndim == 2 and w.shape[0] % 16 == 0 and w.shape[1] % 16 == 0:
-                bq, shape, blk = Q.block_quantize_2d(np.asarray(w), "mixfp4")
-                p = pack_lib.pack_blocks(bq)
-                self.packed_bytes += pack_lib.packed_nbytes(p)
-                self.dense_bytes += w.size * 2  # bf16 baseline
-        if self.dense_bytes:
-            self.compression = self.dense_bytes / self.packed_bytes
-        else:
-            self.compression = 1.0
+    # packed-weight checkpointing: the QTensor pytree round-trips through
+    # CheckpointManager (payload/scales/scale32 are ordinary leaves; the
+    # static layout metadata travels in the manifest spec).
+    # ------------------------------------------------------------------
+    def save_weights(self, directory: str, step: int = 0):
+        CheckpointManager(directory).save_packed(step, self.params,
+                                                blocking=True)
+
+    def load_weights(self, directory: str, step: int | None = None):
+        restored, _ = CheckpointManager(directory).restore_packed(step)
+        self.params = restored
+        # recompute storage stats from what was actually restored (a cold
+        # engine built with pack_weights=False would otherwise keep 0/1.0)
+        self.packed_bytes, self.dense_bytes = _packed_stats(restored)
+        self.compression = (self.dense_bytes / self.packed_bytes
+                            if self.packed_bytes else 1.0)
 
     # ------------------------------------------------------------------
     def add_request(self, req: Request) -> bool:
+        if len(req.prompt) == 0:
+            raise ValueError("empty prompt: a request must carry at least "
+                             "one prompt token")
+        if req.max_new_tokens < 1:
+            raise ValueError("max_new_tokens must be >= 1 (the prefill "
+                             "itself produces the first token)")
+        # the final generated token is emitted but never fed back, so the
+        # highest cache position written is prompt + max_new - 2
+        if len(req.prompt) + req.max_new_tokens - 1 > self.max_len:
+            raise ValueError(
+                f"request {req.uid} needs {len(req.prompt)} prompt + "
+                f"{req.max_new_tokens} new tokens but the cache holds "
+                f"max_len={self.max_len}")
         for i, slot in enumerate(self.slots):
             if slot is None:
                 self.slots[i] = req
+                # a reused slot starts over at position 0 with zeroed cache
+                # rows — no KV / SSM state leaks from the previous occupant
+                self.lengths[i] = 0
+                self.cache = self.model.reset_slot(self.cache, i)
                 self._prefill_slot(i, req)
                 return True
         return False
@@ -83,33 +129,61 @@ class ServeEngine:
     def _prefill_slot(self, i: int, req: Request):
         """Single-slot prefill: run the prompt through decode steps (slot-
         level prefill keeps the engine simple; batch prefill is the
-        prefill_32k dry-run path)."""
-        toks = np.zeros((self.batch_size,), np.int32)
-        for t, tok in enumerate(req.prompt):
+        prefill_32k dry-run path).
+
+        Other ACTIVE slots observe dummy token-0 steps during this loop.
+        Positional KV rows would be overwritten at their next real step,
+        but recurrent SSM state advances irreversibly for every batch row —
+        so snapshot every other active slot and restore it afterwards; an
+        admission is bitwise-invisible to its batchmates for all families."""
+        others = [j for j, s in enumerate(self.slots)
+                  if s is not None and j != i]
+        saved = {j: self.model.slot_state(self.cache, j) for j in others}
+        logits = None
+        for tok in req.prompt:
+            # fresh host buffers per dispatch: the decode runs async and may
+            # alias numpy memory — never hand it a buffer we later mutate
+            toks = np.zeros((self.batch_size,), np.int32)
             toks[i] = tok
             logits, self.cache = self._decode(
                 self.params, jnp.asarray(toks), self.cache,
-                jnp.int32(int(self.lengths[i])))
+                jnp.asarray(self.lengths.copy()))
             self.lengths[i] += 1
         req._next = int(jnp.argmax(logits[i]))
+        for j, state in saved.items():
+            self.cache = self.model.write_slot(self.cache, j, state)
 
     def step(self) -> list[tuple[int, int]]:
-        """One decode step for all active slots; returns (uid, token)."""
+        """One decode step for all active slots (each at its own cache
+        position); returns (uid, token).
+
+        A freshly prefilled slot first emits ``_next`` — the prefill's own
+        argmax IS the first generated token (it used to be fed back but
+        never emitted, shifting the stream by one) — then decodes."""
         toks = np.zeros((self.batch_size,), np.int32)
+        out = []
         active = []
         for i, req in enumerate(self.slots):
             if req is None or req.done:
                 continue
-            toks[i] = req._next if not req.generated else req.generated[-1]
+            if not req.generated:
+                req.generated.append(req._next)
+                out.append((req.uid, req._next))
+                if len(req.generated) >= req.max_new_tokens:
+                    req.done = True
+                    self.slots[i] = None
+                    continue
+            toks[i] = req.generated[-1]
             active.append(i)
         if not active:
-            return []
-        cache_len = int(self.lengths[active[0]])
+            return out
         logits, self.cache = self._decode(
-            self.params, jnp.asarray(toks), self.cache, jnp.int32(cache_len))
-        out = []
+            self.params, jnp.asarray(toks), self.cache,
+            jnp.asarray(self.lengths.copy()))
+        # one vectorized argmax + host transfer per step, not one per slot
+        next_toks = np.asarray(jnp.argmax(logits, axis=-1))
         for i in active:
-            tok = int(jnp.argmax(logits[i]))
+            tok = int(next_toks[i])
             req = self.slots[i]
             req.generated.append(tok)
             self.lengths[i] += 1
@@ -124,6 +198,8 @@ class ServeEngine:
 # MixFP4-quantized KV cache (beyond-paper, DESIGN.md §9.3): stores K/V as
 # packed payload + scale bytes per (token, head, 16-lane block).  Decode
 # memory traffic drops ~3.5x on the cache — the dominant term of decode_32k.
+# (Follow-on: carry these as 1-D QTensors so the cache flows through the
+# same pytree machinery as the weights.)
 # ---------------------------------------------------------------------------
 def quantize_kv(kv: jax.Array):
     """kv: (..., dh) bf16 -> (payload (..., dh//2) u8, scales (..., dh//16) u8,
@@ -136,14 +212,8 @@ def quantize_kv(kv: jax.Array):
 
 
 def dequantize_kv(payload, scales, s32, dtype=jnp.bfloat16):
-    from repro.core import formats, scaling
-    lo = payload & 0xF
-    hi = (payload >> 4) & 0xF
-    nib = jnp.stack([lo, hi], axis=-1).reshape(*payload.shape[:-1],
-                                               payload.shape[-1] * 2)
-    s8, t = scaling.unpack_scale_and_type(scales)
-    g = 16
-    vals = formats.decode_to_e2m2(
-        nib, jnp.repeat(t, g, axis=-1), dtype=jnp.float32)
-    full_s = jnp.repeat(s8, g, axis=-1)
-    return (vals * full_s * s32).astype(dtype)
+    qt = qtensor.QTensor(
+        payload, scales, s32, method="mixfp4",
+        layout=qtensor.BlockLayout1D(-1, 16),
+        shape=(*payload.shape[:-1], payload.shape[-1] * 2), dtype="float32")
+    return qt.dequantize(dtype)

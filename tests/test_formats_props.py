@@ -1,0 +1,39 @@
+"""Property-based format tests (hypothesis).  Gated behind importorskip so a
+bare environment still collects and runs the deterministic suite in
+test_formats.py."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.core import formats  # noqa: E402
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.floats(min_value=-440.0, max_value=440.0, allow_nan=False))
+def test_e4m3_rounding_is_nearest(v):
+    """Property: round_to_e4m3 returns one of the two bracketing E4M3 values
+    and never the farther one."""
+    all_vals = np.asarray(
+        formats.bits_to_e4m3(jnp.arange(0x7F, dtype=jnp.uint8))
+    ).astype(np.float64)
+    all_vals = np.sort(np.unique(np.concatenate([all_vals, -all_vals])))
+    r = float(formats.round_to_e4m3(jnp.float32(v)))
+    err = abs(r - v)
+    best = np.min(np.abs(all_vals - v))
+    assert err <= best + 1e-7
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(min_value=0, max_value=2**31 - 1))
+def test_sr_stays_on_lattice(seed):
+    key = jax.random.PRNGKey(seed)
+    x = jax.random.normal(key, (64,)) * 3
+    q = formats.stochastic_round_to_codebook(x, formats.E2M1, key)
+    lv = np.array(formats.E2M1.levels)
+    assert np.all(np.isin(np.asarray(jnp.abs(q)), lv))
+    # SR never moves past the bracketing levels
+    assert np.all(np.abs(np.asarray(q)) <= 6.0)

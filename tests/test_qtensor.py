@@ -1,0 +1,263 @@
+"""QTensor API: wire-format equivalence vs the legacy paths, pytree/jit
+behaviour, and the qmm dispatcher."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import CheckpointManager
+from repro.core import formats, pack, quantize as Q, qtensor
+from repro.core.qtensor import (BlockLayout1D, BlockLayout2D, QTensor,
+                                QuantSpec, qmm, quantize)
+from repro.kernels import ref
+from repro.kernels.mixfp4_gemm import _decode_nibbles
+
+
+def _rand(shape, seed=0, scale=1.0):
+    return jax.random.normal(jax.random.PRNGKey(seed), shape) * scale
+
+
+# ---------------------------------------------------------------------------
+# wire-format equivalence: new API must be bit-identical to the old
+# block_quantize_* -> pack_blocks -> unpack_blocks round trips
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("shape,axis", [((8, 64), -1), ((8, 37), -1),
+                                        ((24, 16), 0), ((4, 5, 48), -1)])
+@pytest.mark.parametrize("method", ["mixfp4", "nvfp4"])
+def test_1d_roundtrip_matches_legacy_path(shape, axis, method):
+    x = _rand(shape, seed=sum(shape), scale=2.0)
+    qt = quantize(x, QuantSpec(method, BlockLayout1D(axis)))
+    bq, n, ax = Q.block_quantize_1d(x, method, axis=axis)
+    legacy = Q._from_blocks_1d(pack.unpack_blocks(pack.pack_blocks(bq)), n, ax)
+    np.testing.assert_array_equal(np.asarray(qt.dequantize()),
+                                  np.asarray(legacy))
+    assert qt.shape == tuple(x.shape)
+
+
+@pytest.mark.parametrize("shape", [(64, 48), (40, 24), (16, 16)])
+def test_2d_roundtrip_matches_qdq2d(shape):
+    w = _rand(shape, seed=shape[0], scale=0.5)
+    qt = quantize(w, QuantSpec("mixfp4", BlockLayout2D()))
+    np.testing.assert_array_equal(np.asarray(qt.dequantize()),
+                                  np.asarray(Q.qdq_2d(w, "mixfp4")))
+
+
+def test_2d_matches_ref_pack_weight_kn():
+    w = _rand((64, 48), 3, 0.4)
+    qt = quantize(w, QuantSpec("mixfp4", BlockLayout2D()))
+    p, s, s32 = ref.ref_pack_weight_kn(w)
+    np.testing.assert_array_equal(np.asarray(qt.payload), np.asarray(p))
+    np.testing.assert_array_equal(np.asarray(qt.scales), np.asarray(s))
+    np.testing.assert_allclose(float(qt.scale32), float(s32), rtol=0)
+
+
+def test_kernel_decoder_matches_fig9_reference():
+    """The Pallas in-VMEM decoder must match formats.decode_to_e2m2 for all
+    16 nibbles x both type bits (the Fig. 9 contract)."""
+    nib = jnp.arange(16, dtype=jnp.uint8)
+    for t in (0, 1):
+        t_full = jnp.full((16,), t, jnp.uint8)
+        got = _decode_nibbles(nib, t_full)
+        want = formats.decode_to_e2m2(nib, jnp.uint8(t))
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_wire_bits_and_nbytes():
+    x = _rand((64, 128), 2)
+    qt = quantize(x, QuantSpec("mixfp4", BlockLayout1D(-1)))
+    # 4 bits/value + 8 bits per 16-block (+4B tensor scale)
+    assert (qt.nbytes - 4) * 8 == x.size * 4 + (x.size // 16) * 8
+    assert qt.bits_per_value == pytest.approx(4.5, abs=0.01)
+
+
+def test_unpackable_methods_rejected():
+    x = _rand((8, 32))
+    for m in ["mixfp4_e3", "nvfp4_e3", "four_six", "nvint4"]:
+        with pytest.raises(ValueError):
+            quantize(x, QuantSpec(m, BlockLayout1D(-1)))
+
+
+# ---------------------------------------------------------------------------
+# pytree behaviour
+# ---------------------------------------------------------------------------
+def test_pytree_flatten_preserves_metadata():
+    qt = quantize(_rand((32, 48)), QuantSpec("mixfp4", BlockLayout2D()))
+    leaves, treedef = jax.tree.flatten(qt)
+    assert len(leaves) == 3
+    qt2 = jax.tree.unflatten(treedef, leaves)
+    assert (qt2.method, qt2.layout, qt2.shape, qt2.dtype) == \
+        (qt.method, qt.layout, qt.shape, qt.dtype)
+    np.testing.assert_array_equal(np.asarray(qt2.payload),
+                                  np.asarray(qt.payload))
+
+
+def test_jit_through_qtensor():
+    qt = quantize(_rand((32, 48), 1), QuantSpec("mixfp4", BlockLayout2D()))
+    f = jax.jit(lambda q: q.dequantize().sum())
+    a = float(f(qt))
+    b = float(qt.dequantize().sum())
+    assert a == pytest.approx(b, rel=1e-6)
+
+
+def test_scan_slices_stacked_qtensor():
+    """A vmap-quantized per-layer weight stack is one QTensor whose children
+    scan slices layer-by-layer (the serving params layout)."""
+    wstack = _rand((3, 32, 48), 7, 0.3)
+    spec = QuantSpec("mixfp4", BlockLayout2D())
+    qts = jax.vmap(lambda m: quantize(m, spec))(wstack)
+    x = _rand((4, 32), 8)
+
+    def body(c, qt_layer):
+        return c + qmm(x, qt_layer, interpret=True), None
+
+    tot, _ = jax.lax.scan(body, jnp.zeros((4, 48)), qts)
+    want = sum(qmm(x, quantize(wstack[i], spec), interpret=True)
+               for i in range(3))
+    np.testing.assert_allclose(np.asarray(tot), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# qmm dispatch
+# ---------------------------------------------------------------------------
+def test_qmm_w4a16_matches_dequant_matmul():
+    x = _rand((5, 40), 4)           # padded K path (40 -> 48)
+    w = _rand((40, 24), 5, 0.3)
+    qt = quantize(w, QuantSpec("mixfp4", BlockLayout2D()))
+    y = qmm(x, qt, interpret=True)
+    want = jax.lax.dot(x.astype(jnp.bfloat16),
+                       qt.dequantize().astype(jnp.bfloat16),
+                       preferred_element_type=jnp.float32)
+    scale = float(jnp.abs(want).max()) + 1e-6
+    np.testing.assert_allclose(np.asarray(y) / scale,
+                               np.asarray(want) / scale, atol=2e-2)
+    assert y.shape == (5, 24)
+
+
+def test_qmm_prime_m_pads_instead_of_degrading():
+    """M with no divisor near the tile cap (e.g. prime 131 > 128) must be
+    padded to a tile multiple, not served with 1-row grid tiles."""
+    x = _rand((131, 32), 18)
+    qt = quantize(_rand((32, 16), 19, 0.3), QuantSpec("mixfp4",
+                                                      BlockLayout2D()))
+    y = qmm(x, qt, interpret=True)
+    assert y.shape == (131, 16)
+    want = jax.lax.dot(x.astype(jnp.bfloat16),
+                       qt.dequantize().astype(jnp.bfloat16),
+                       preferred_element_type=jnp.float32)
+    scale = float(jnp.abs(want).max()) + 1e-6
+    np.testing.assert_allclose(np.asarray(y) / scale,
+                               np.asarray(want) / scale, atol=2e-2)
+
+
+def test_qmm_nd_activations():
+    x = _rand((2, 3, 32), 6)
+    qt = quantize(_rand((32, 48), 7, 0.3), QuantSpec("mixfp4",
+                                                     BlockLayout2D()))
+    y = qmm(x, qt, interpret=True)
+    assert y.shape == (2, 3, 48)
+    y2 = qmm(x.reshape(6, 32), qt, interpret=True).reshape(2, 3, 48)
+    np.testing.assert_array_equal(np.asarray(y), np.asarray(y2))
+
+
+def test_qmm_w4a4_matches_oracle():
+    x = _rand((8, 64), 8)
+    w = _rand((64, 32), 9, 0.3)
+    qx = qtensor.quantize_rows(x, interpret=True)
+    qw = quantize(w, QuantSpec("mixfp4", BlockLayout2D()))
+    y = qmm(qx, qw, interpret=True)
+    want = ref.ref_gemm_w4a4(qx.payload, qx.scales, qx.scale32,
+                             qw.payload, qw.scales, qw.scale32)
+    scale = float(jnp.abs(want).max()) + 1e-6
+    np.testing.assert_allclose(np.asarray(y) / scale,
+                               np.asarray(want) / scale, atol=2e-2)
+
+
+def test_stack_matches_vmap_quantize():
+    """qtensor.stack of per-layer QTensors == the vmap-quantized stack, and
+    mismatched metadata is rejected."""
+    wstack = _rand((3, 32, 48), 13, 0.3)
+    spec = QuantSpec("mixfp4", BlockLayout2D())
+    stacked = qtensor.stack([quantize(wstack[i], spec) for i in range(3)])
+    vmapped = jax.vmap(lambda m: quantize(m, spec))(wstack)
+    np.testing.assert_array_equal(np.asarray(stacked.payload),
+                                  np.asarray(vmapped.payload))
+    np.testing.assert_array_equal(np.asarray(stacked.scales),
+                                  np.asarray(vmapped.scales))
+    assert (stacked.method, stacked.layout, stacked.shape) == \
+        (vmapped.method, vmapped.layout, vmapped.shape)
+
+    def body(c, qt_layer):
+        return c + qt_layer.dequantize().sum(), None
+
+    tot, _ = jax.lax.scan(body, jnp.float32(0.0), stacked)
+    want = sum(float(quantize(wstack[i], spec).dequantize().sum())
+               for i in range(3))
+    assert float(tot) == pytest.approx(want, rel=1e-5)
+
+    other = quantize(_rand((16, 16), 14), spec)
+    with pytest.raises(ValueError, match="identical QTensor metadata"):
+        qtensor.stack([quantize(wstack[0], spec), other])
+
+
+def test_ops_pack_weight_qt_matches_quantize():
+    """The kernels-side producer shim must stay bit-identical to the real
+    path it fronts (docs migration table: pack_weight_kn -> pack_weight_qt)."""
+    from repro.kernels import ops
+    w = _rand((32, 48), 17, 0.3)
+    a = ops.pack_weight_qt(w)
+    b = quantize(w, QuantSpec("mixfp4", BlockLayout2D()))
+    np.testing.assert_array_equal(np.asarray(a.payload), np.asarray(b.payload))
+    np.testing.assert_array_equal(np.asarray(a.scales), np.asarray(b.scales))
+    assert (a.method, a.layout, a.shape, a.dtype) == \
+        (b.method, b.layout, b.shape, b.dtype)
+
+
+def test_qmm_w4a4_logical_k_mismatch_raises():
+    """Operands that pad to the same grid but disagree on logical K must
+    raise, not silently contract over the padded lanes."""
+    qx = qtensor.quantize_rows(_rand((4, 32), 15), interpret=True)  # Kp=32
+    qw = quantize(_rand((20, 16), 16, 0.3),                         # Kp=32
+                  QuantSpec("mixfp4", BlockLayout2D()))
+    with pytest.raises(ValueError, match="K="):
+        qmm(qx, qw, interpret=True)
+
+
+def test_qmm_fallback_for_1d_weight():
+    """1-D-blocked weights are not kernel-servable; qmm must fall back to
+    the qdq-simulated path rather than fail."""
+    x = _rand((4, 32), 10)
+    qw = quantize(_rand((32, 16), 11, 0.3), QuantSpec("mixfp4",
+                                                      BlockLayout1D(0)))
+    y = qmm(x, qw, interpret=True)
+    want = jax.lax.dot(x.astype(jnp.bfloat16),
+                       qw.dequantize().astype(jnp.bfloat16),
+                       preferred_element_type=jnp.float32)
+    np.testing.assert_array_equal(np.asarray(y), np.asarray(want))
+
+
+# ---------------------------------------------------------------------------
+# packed checkpointing
+# ---------------------------------------------------------------------------
+def test_checkpoint_roundtrip_packed_tree(tmp_path):
+    tree = {
+        "layers": {"wq": jax.vmap(
+            lambda m: quantize(m, QuantSpec("mixfp4", BlockLayout2D())))(
+                _rand((2, 32, 32), 12, 0.3))},
+        "ln": jnp.ones((32,)),
+    }
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save_packed(3, tree)
+    restored, extra = mgr.restore_packed()
+    qt, qt0 = restored["layers"]["wq"], tree["layers"]["wq"]
+    assert isinstance(qt, qtensor.QTensor)
+    assert (qt.method, qt.layout, qt.shape) == (qt0.method, qt0.layout,
+                                                qt0.shape)
+    np.testing.assert_array_equal(np.asarray(qt.payload),
+                                  np.asarray(qt0.payload))
+    np.testing.assert_array_equal(np.asarray(qt.scales),
+                                  np.asarray(qt0.scales))
+    np.testing.assert_array_equal(np.asarray(restored["ln"]),
+                                  np.asarray(tree["ln"]))
+    np.testing.assert_array_equal(
+        np.asarray(qt.dequantize()), np.asarray(qt0.dequantize()))

@@ -1,9 +1,12 @@
-"""Algorithm 1 behaviour + block machinery properties."""
+"""Algorithm 1 behaviour + block machinery properties.
+
+Property-based (hypothesis) companions live in test_quantize_props.py so
+this module collects on environments without hypothesis installed.
+"""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
 from repro.core import analysis, pack, quantize as Q, scaling
 
@@ -117,34 +120,6 @@ def test_zero_block_within_tensor():
     out = Q.qdq(x, "mixfp4")
     assert np.isfinite(np.asarray(out)).all()
     np.testing.assert_array_equal(np.asarray(out[:, :16]), 0.0)
-
-
-@settings(max_examples=25, deadline=None)
-@given(st.integers(0, 10_000), st.sampled_from(["nvfp4", "nvint4", "mixfp4", "four_six"]))
-def test_property_bounded_error(seed, method):
-    """Block error is bounded by half the largest lattice step times the block
-    scale (RNE, no saturation beyond absmax by construction)."""
-    x = jax.random.normal(jax.random.PRNGKey(seed), (16, 64)) * (
-        10.0 ** jax.random.uniform(jax.random.PRNGKey(seed + 1), (), minval=-3, maxval=3))
-    bq, n, ax = Q.block_quantize_1d(x, method)
-    deq = Q.dequantize_1d(bq, n, ax)
-    err = jnp.abs(deq - x)
-    # bound: (max step on any candidate lattice)/2 * s8 * s32, plus the e4m3
-    # scale rounding slack (<= 2^-3 relative)
-    step = 2.0  # largest E2M1 gap
-    bound = (step / 2) * bq.scale8[..., None] * bq.scale32 * (1 + 2.0**-3) + 1e-6
-    assert bool(jnp.all(err.reshape(bq.values.shape) <= bound))
-
-
-@settings(max_examples=20, deadline=None)
-@given(st.integers(0, 10_000))
-def test_property_idempotent(seed):
-    """qdq(qdq(x)) == qdq(x): quantized points are fixed points."""
-    x = jax.random.normal(jax.random.PRNGKey(seed), (8, 48))
-    once = Q.qdq(x, "mixfp4")
-    twice = Q.qdq(once, "mixfp4")
-    np.testing.assert_allclose(np.asarray(twice), np.asarray(once),
-                               rtol=1e-6, atol=1e-6)
 
 
 def test_sr_unbiased():

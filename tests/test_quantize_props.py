@@ -1,0 +1,42 @@
+"""Property-based quantizer tests (hypothesis).  Gated behind importorskip
+so a bare environment still collects and runs the deterministic suite in
+test_quantize.py."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.core import quantize as Q  # noqa: E402
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 10_000),
+       st.sampled_from(["nvfp4", "nvint4", "mixfp4", "four_six"]))
+def test_property_bounded_error(seed, method):
+    """Block error is bounded by half the largest lattice step times the block
+    scale (RNE, no saturation beyond absmax by construction)."""
+    x = jax.random.normal(jax.random.PRNGKey(seed), (16, 64)) * (
+        10.0 ** jax.random.uniform(jax.random.PRNGKey(seed + 1), (),
+                                   minval=-3, maxval=3))
+    bq, n, ax = Q.block_quantize_1d(x, method)
+    deq = Q.dequantize_1d(bq, n, ax)
+    err = jnp.abs(deq - x)
+    # bound: (max step on any candidate lattice)/2 * s8 * s32, plus the e4m3
+    # scale rounding slack (<= 2^-3 relative)
+    step = 2.0  # largest E2M1 gap
+    bound = (step / 2) * bq.scale8[..., None] * bq.scale32 * (1 + 2.0**-3) + 1e-6
+    assert bool(jnp.all(err.reshape(bq.values.shape) <= bound))
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 10_000))
+def test_property_idempotent(seed):
+    """qdq(qdq(x)) == qdq(x): quantized points are fixed points."""
+    x = jax.random.normal(jax.random.PRNGKey(seed), (8, 48))
+    once = Q.qdq(x, "mixfp4")
+    twice = Q.qdq(once, "mixfp4")
+    np.testing.assert_allclose(np.asarray(twice), np.asarray(once),
+                               rtol=1e-6, atol=1e-6)

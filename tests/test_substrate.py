@@ -125,6 +125,7 @@ def test_checkpoint_corruption_detected(tmp_path):
         mgr.restore(1, tree)
 
 
+@pytest.mark.slow
 def test_elastic_restore_different_mesh(tmp_path):
     """Save under a 4-way DP mesh, restore under 2-way — leaves identical."""
     script = f"""
