@@ -15,7 +15,7 @@ def main() -> None:
     print("name,us_per_call,derived")
 
     from benchmarks import (kernels_bench, paper_tables, pretrain_loss,
-                            ptq_pipelines, roofline)
+                            ptq_pipelines, roofline, serving_bench)
     sections = [
         ("appendixA", paper_tables.bench_appendix_a),
         ("fig2_crest", paper_tables.bench_fig2_crest_stats),
@@ -26,6 +26,7 @@ def main() -> None:
         ("kernel_quant", kernels_bench.bench_quant_kernel),
         ("kernel_gemm", kernels_bench.bench_gemm_w4a16),
         ("kernel_qdq_cost", kernels_bench.bench_qdq_cost_vs_single_format),
+        ("serving", serving_bench.bench_for_run),
         ("table3_rtn", paper_tables.bench_table3_rtn_formats),
         ("table4_pipelines", ptq_pipelines.bench_table4_pipelines),
         ("fig10_pretrain", pretrain_loss.bench_fig10_pretrain),

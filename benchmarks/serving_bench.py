@@ -1,0 +1,154 @@
+"""Serving-path benchmarks: packed-KV decode and batched prefill.
+
+Measures the two hot paths the packed-KV fast path converts onto the wire
+format, and emits ``BENCH_serving.json`` so the perf trajectory is recorded
+per commit:
+
+* decode step latency + KV-cache HBM bytes, bf16 cache vs packed MixFP4
+  QTensor cache (the fused ``mixfp4_attn`` kernel path) — on CPU the Pallas
+  kernels run in interpret mode, so latency numbers are relative structure,
+  not TPU wall time; the *bytes* column is exact and is the decode_32k
+  traffic term,
+* prefill throughput, historical token-by-token decode replay vs the
+  batched ``prefill_slot`` entry (one jit dispatch per admission), plus the
+  engine's dispatch counter.
+
+Run:  PYTHONPATH=src python -m benchmarks.serving_bench [--tiny] [--out F]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks import common
+from repro.core.qgemm import QuantConfig
+from repro.models.base import ArchConfig, build_model
+from repro.serving.engine import Request, ServeEngine
+
+
+def _bench_cfg(tiny: bool) -> ArchConfig:
+    if tiny:
+        return ArchConfig(name="serve-bench-tiny", family="dense",
+                          n_layers=2, d_model=64, n_heads=2, n_kv_heads=2,
+                          d_ff=128, vocab=64, attn_chunk=64,
+                          quant=QuantConfig(method="mixfp4"))
+    return ArchConfig(name="serve-bench", family="dense", n_layers=4,
+                      d_model=256, n_heads=4, n_kv_heads=2, d_ff=512,
+                      vocab=256, attn_chunk=256,
+                      quant=QuantConfig(method="mixfp4"))
+
+
+def _decode_us(eng: ServeEngine) -> float:
+    """Median wall time of one jitted decode step at the engine's batch."""
+    toks = jnp.zeros((eng.batch_size,), jnp.int32)
+    lens = jnp.asarray(eng.lengths.copy())
+    return common.time_fn(
+        lambda: eng._decode(eng.params, toks, eng.cache, lens),
+        iters=5, warmup=2)
+
+
+def _replay_prefill_us(eng: ServeEngine, prompt: np.ndarray) -> float:
+    """The historical admission path: one decode dispatch per prompt token
+    (other slots see dummy token-0 steps), timed end to end."""
+    def replay():
+        cache = eng.model.reset_slot(eng.cache, 0)
+        lengths = np.zeros((eng.batch_size,), np.int32)
+        logits = None
+        for tok in prompt:
+            toks = np.zeros((eng.batch_size,), np.int32)
+            toks[0] = tok
+            logits, cache = eng._decode(eng.params, jnp.asarray(toks), cache,
+                                        jnp.asarray(lengths.copy()))
+            lengths[0] += 1
+        return logits
+    return common.time_fn(replay, iters=3, warmup=1)
+
+
+def _batched_prefill_us(eng: ServeEngine, prompt: np.ndarray) -> float:
+    tokens = jnp.asarray(prompt[None, :])
+    slot = jnp.int32(0)
+    return common.time_fn(
+        lambda: eng._prefill(eng.params, tokens, eng.cache, slot),
+        iters=3, warmup=1)
+
+
+def bench_serving(out_path: str = "BENCH_serving.json", *,
+                  tiny: bool = False) -> dict:
+    cfg = _bench_cfg(tiny)
+    params, _ = build_model(cfg).init(jax.random.PRNGKey(0))
+    batch, max_len = (2, 64) if tiny else (4, 256)
+    prompt_len = 8 if tiny else 32
+    rng = np.random.RandomState(0)
+    prompt = rng.randint(0, cfg.vocab, prompt_len).astype(np.int32)
+
+    results: dict = {"config": {"name": cfg.name, "n_layers": cfg.n_layers,
+                                "d_model": cfg.d_model, "batch": batch,
+                                "max_len": max_len,
+                                "prompt_len": prompt_len}}
+    engines = {}
+    for kv in ("bf16", "mixfp4"):
+        eng = ServeEngine(cfg, params, batch_size=batch, max_len=max_len,
+                          kv_quant=kv)
+        eng.add_request(Request(uid=0, prompt=prompt, max_new_tokens=2))
+        eng.step()
+        engines[kv] = eng
+
+    cache_bytes = {kv: engines[kv].kv_cache_bytes()
+                   for kv in ("bf16", "mixfp4")}
+    results["cache_bytes"] = dict(
+        cache_bytes, ratio=cache_bytes["mixfp4"] / cache_bytes["bf16"])
+    common.emit("serving_kv_cache_bytes", 0.0,
+                f"bf16={cache_bytes['bf16']} mixfp4={cache_bytes['mixfp4']} "
+                f"ratio={results['cache_bytes']['ratio']:.3f}")
+
+    results["decode_step_us"] = {}
+    for kv in ("bf16", "mixfp4"):
+        us = _decode_us(engines[kv])
+        results["decode_step_us"][kv] = us
+        common.emit(f"serving_decode_step_{kv}", us,
+                    f"batch={batch} max_len={max_len}")
+
+    eng = engines["mixfp4"]
+    replay_us = _replay_prefill_us(eng, prompt)
+    batched_us = _batched_prefill_us(eng, prompt)
+    results["prefill"] = {
+        "replay_us": replay_us,
+        "batched_us": batched_us,
+        "speedup": replay_us / max(batched_us, 1e-9),
+        "dispatches_per_admission":
+            eng.prefill_dispatches / max(eng.admissions, 1),
+        "prompt_len": prompt_len,
+    }
+    common.emit("serving_prefill_batched", batched_us,
+                f"replay_us={replay_us:.1f} "
+                f"speedup={results['prefill']['speedup']:.2f}x "
+                f"dispatches_per_admission="
+                f"{results['prefill']['dispatches_per_admission']:.0f}")
+
+    with open(out_path, "w") as f:
+        json.dump(results, f, indent=2, sort_keys=True)
+    print(f"# wrote {out_path}")
+    return results
+
+
+def bench_for_run():
+    """benchmarks.run section entry (CSV rows + BENCH_serving.json)."""
+    return bench_serving(tiny=True)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tiny", action="store_true",
+                    help="smoke-sized config (CI benchmark leg)")
+    ap.add_argument("--out", default="BENCH_serving.json")
+    args = ap.parse_args(argv)
+    print("name,us_per_call,derived")
+    bench_serving(args.out, tiny=args.tiny)
+
+
+if __name__ == "__main__":
+    main()

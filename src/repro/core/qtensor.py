@@ -59,6 +59,7 @@ __all__ = [
     "PACKABLE_METHODS",
     "quantize",
     "quantize_rows",
+    "from_packed_rows",
     "qmm",
     "stack",
     "packed_nbytes_for_shape",
@@ -274,18 +275,37 @@ def _quantize_2d(w: jax.Array, spec: QuantSpec, key) -> QTensor:
                    shape=tuple(shape), dtype=str(w.dtype))
 
 
-def quantize_rows(x: jax.Array, *, interpret: bool | None = None) -> QTensor:
+def quantize_rows(x: jax.Array, *, interpret: bool | None = None,
+                  scale32: jax.Array | float | None = None) -> QTensor:
     """Fused-kernel 1-D row quantizer (mixfp4/RNE, blocks along the last
     axis of a (M, K) matrix) returning a QTensor — the W4A4 activation
-    producer for ``qmm``."""
+    producer for ``qmm``.  ``scale32`` pins the per-tensor scale (see
+    ``kernels.ops.quantize_rows``) for incremental producers like the
+    packed KV cache."""
     from repro.kernels import ops  # deferred: kernels import core
 
     assert x.ndim == 2, "quantize_rows expects (M, K)"
     kw = {} if interpret is None else {"interpret": interpret}
+    if scale32 is not None:
+        kw["scale32"] = scale32
     payload, scales, s32 = ops.quantize_rows(x.astype(jnp.float32), **kw)
     return QTensor(payload, scales, s32, method="mixfp4",
                    layout=BlockLayout1D(-1, _G),
                    shape=tuple(x.shape), dtype=str(x.dtype))
+
+
+def from_packed_rows(payload: jax.Array, scales: jax.Array,
+                     scale32: jax.Array | float = 1.0, *,
+                     dtype: str = "float32") -> QTensor:
+    """Wrap already-packed 1-D rows (g=16 blocks along the last axis) as a
+    QTensor: payload (..., K//2) u8 + scales (..., K//16) u8 + per-tensor
+    scale.  The one constructor for row-wise wire data produced outside
+    :func:`quantize` — e.g. the packed KV cache (models/base) and the kernel
+    references (kernels/ref) — so the layout cannot drift between them."""
+    return QTensor(
+        payload, scales, jnp.asarray(scale32, jnp.float32),
+        method="mixfp4", layout=BlockLayout1D(-1, _G),
+        shape=(*payload.shape[:-1], payload.shape[-1] * 2), dtype=dtype)
 
 
 def stack(qts: Sequence[QTensor]) -> QTensor:

@@ -1,0 +1,199 @@
+"""Pallas TPU kernel: fused decode attention over a packed MixFP4 KV cache.
+
+The serving engine's dominant decode traffic term is the KV cache read
+(ROADMAP "decode_32k").  Holding the cache in the paper's wire format
+(4-bit payload + type-in-sign E4M3 scale bytes, 4.5 bits/value) only pays
+off if the packed representation is consumed *directly* by the attention
+read — dequantizing the whole cache back to bf16 in HBM before every step
+would spend the saved bandwidth immediately.  This kernel streams the
+packed K/V blocks HBM->VMEM, runs the same branch-free Fig. 9 dual-codebook
+decode as ``mixfp4_gemm`` (shared ``_decode_scales``/``_decode_nibbles``)
+on 16-lane blocks in VMEM, and computes masked online-softmax attention
+(flash-decoding) for one query token per sequence.  No dense bf16 copy of
+the cache ever exists in HBM.
+
+Layout (matches the 1-D ``BlockLayout1D(-1, 16)`` QTensor KV cache built by
+``models.transformer.init_cache(kv_quant="mixfp4")``):
+
+  q          (B, H, dh)          bf16/f32 — the RoPE'd decode-step query
+  k/v payload(B, S, Hkv, dh//2)  uint8    — two dh-consecutive nibbles/byte
+  k/v scales (B, S, Hkv, dh//16) uint8    — {T | e4m3[6:0]} per 16-lane block
+  lengths    (B,)                int32    — valid rows per sequence
+                                           (the current token's row included)
+
+Grid: (B, S/bs) with the key-block loop innermost; the running
+(max, sum, acc) flash state lives in VMEM scratch across the key loop and
+the output row is emitted on the last block.  GQA queries reshape to
+(Hkv, group, dh) so each kv head's packed blocks are decoded exactly once
+per step.  Masking covers ragged per-slot lengths, sliding windows and the
+S padding the ``ops`` entry may add; ``softcap`` is a compile-time constant
+(it is an arch property, not a per-layer one).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.mixfp4_gemm import _decode_nibbles, _decode_scales
+
+__all__ = ["mixfp4_attn_decode"]
+
+_G = 16
+_NEG_INF = -1e30
+
+
+def _decode_kv_block(payload, scales, s32):
+    """(bs, Hkv, dh//2) packed + (bs, Hkv, dh//16) scale bytes -> f32
+    (bs, Hkv, dh) with block scales and the per-tensor scale fused."""
+    bs, hkv, dh2 = payload.shape
+    dh = 2 * dh2
+    nb = dh // _G
+    lo = payload & 0xF
+    hi = (payload >> 4) & 0xF
+    nib = jnp.stack([lo, hi], axis=-1).reshape(bs, hkv, dh)
+    s, t = _decode_scales(scales)
+    s_full = jnp.broadcast_to(
+        s[..., None], (bs, hkv, nb, _G)).reshape(bs, hkv, dh)
+    t_full = jnp.broadcast_to(
+        t[..., None], (bs, hkv, nb, _G)).reshape(bs, hkv, dh)
+    vals = _decode_nibbles(nib, t_full)
+    return vals * s_full * s32
+
+
+def _attn_decode_kernel(len_ref, win_ref, s32_ref,
+                        q_ref, kp_ref, ks_ref, vp_ref, vs_ref,
+                        o_ref, acc_ref, m_ref, l_ref, *, softcap: float):
+    s_idx = pl.program_id(1)
+    ns = pl.num_programs(1)
+
+    @pl.when(s_idx == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, _NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    kv_len = len_ref[0, 0]
+    win = win_ref[0, 0]
+
+    bs, hkv, dh2 = kp_ref.shape[1:]
+    dh = 2 * dh2
+    h = q_ref.shape[1]
+    g = h // hkv
+
+    k = _decode_kv_block(kp_ref[0], ks_ref[0], s32_ref[0, 0])  # (bs,Hkv,dh)
+    q = q_ref[0].astype(jnp.float32).reshape(hkv, g, dh)
+    # scores: per kv head, (g, dh) x (dh, bs) -> (Hkv, g, bs)
+    s = jax.lax.dot_general(
+        q, jnp.transpose(k, (1, 0, 2)),
+        dimension_numbers=(((2,), (2,)), ((0,), (0,))),
+        preferred_element_type=jnp.float32) * (dh ** -0.5)
+    if softcap:
+        s = softcap * jnp.tanh(s * (1.0 / softcap))
+
+    # decode-position masking: the query sits at position kv_len - 1
+    kpos = s_idx * bs + jax.lax.broadcasted_iota(jnp.int32, (1, 1, bs), 2)
+    mask = kpos < kv_len
+    mask &= jnp.where(win > 0, kpos > kv_len - 1 - win, True)
+    s = jnp.where(mask, s, _NEG_INF)
+
+    # online-softmax update (flash-decoding running state in scratch)
+    m_prev = m_ref[...].reshape(hkv, g, 1)
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.where(mask, jnp.exp(s - m_new), 0.0)
+    l_new = l_ref[...].reshape(hkv, g, 1) * alpha \
+        + jnp.sum(p, axis=-1, keepdims=True)
+
+    v = _decode_kv_block(vp_ref[0], vs_ref[0], s32_ref[0, 1])  # (bs,Hkv,dh)
+    # (Hkv, g, bs) x (bs, dh) batched over Hkv -> (Hkv, g, dh)
+    pv = jax.lax.dot_general(
+        p, jnp.transpose(v, (1, 0, 2)),
+        dimension_numbers=(((2,), (1,)), ((0,), (0,))),
+        preferred_element_type=jnp.float32)
+    acc_new = acc_ref[...].reshape(hkv, g, dh) * alpha + pv
+
+    m_ref[...] = m_new.reshape(h, 1)
+    l_ref[...] = l_new.reshape(h, 1)
+    acc_ref[...] = acc_new.reshape(h, dh)
+
+    @pl.when(s_idx == ns - 1)
+    def _emit():
+        l = l_ref[...]
+        o_ref[0] = acc_ref[...] / jnp.where(l > 0, l, 1.0)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("softcap", "bs", "interpret"))
+def mixfp4_attn_decode(
+    q: jax.Array,
+    k_payload: jax.Array,
+    k_scales: jax.Array,
+    v_payload: jax.Array,
+    v_scales: jax.Array,
+    lengths: jax.Array,
+    *,
+    window: jax.Array | int = 0,
+    k_scale32: jax.Array | float = 1.0,
+    v_scale32: jax.Array | float = 1.0,
+    softcap: float = 0.0,
+    bs: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    """One decode-attention step over the packed KV cache -> (B, H, dh) f32.
+
+    ``lengths`` counts the valid cache rows per sequence (including the
+    current token's just-written row); ``window`` (0 = full causal) and the
+    per-tensor scales are dynamic operands so the per-layer ``lax.scan`` in
+    the model can trace them.  S is padded to a multiple of the key-block
+    tile here; padded rows are masked, so callers never pad.
+    """
+    b, h, dh = q.shape
+    s, hkv, dh2 = k_payload.shape[1:]
+    assert dh == 2 * dh2, f"q dh={dh} vs packed payload dh={2 * dh2}"
+    assert dh % _G == 0, f"dh={dh} must be a multiple of {_G}"
+    assert h % hkv == 0, f"H={h} not a multiple of Hkv={hkv}"
+    assert k_scales.shape == (b, s, hkv, dh // _G)
+
+    bs = min(bs, max(s, 1))
+    sp = -(-s // bs) * bs
+    if sp != s:  # padded rows are masked by `kpos < lengths`
+        pad = ((0, 0), (0, sp - s), (0, 0), (0, 0))
+        k_payload = jnp.pad(k_payload, pad)
+        k_scales = jnp.pad(k_scales, pad)
+        v_payload = jnp.pad(v_payload, pad)
+        v_scales = jnp.pad(v_scales, pad)
+
+    lengths = jnp.broadcast_to(
+        jnp.asarray(lengths, jnp.int32), (b,)).reshape(b, 1)
+    win = jnp.asarray(window, jnp.int32).reshape(1, 1)
+    s32 = jnp.stack([jnp.asarray(k_scale32, jnp.float32).reshape(()),
+                     jnp.asarray(v_scale32, jnp.float32).reshape(())]
+                    ).reshape(1, 2)
+
+    grid = (b, sp // bs)
+    kv_spec = pl.BlockSpec((1, bs, hkv, dh2), lambda i, j: (i, j, 0, 0))
+    sc_spec = pl.BlockSpec((1, bs, hkv, dh // _G), lambda i, j: (i, j, 0, 0))
+
+    return pl.pallas_call(
+        functools.partial(_attn_decode_kernel, softcap=softcap),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda i, j: (i, 0)),      # lengths
+            pl.BlockSpec((1, 1), lambda i, j: (0, 0)),      # window
+            pl.BlockSpec((1, 2), lambda i, j: (0, 0)),      # scale32s
+            pl.BlockSpec((1, h, dh), lambda i, j: (i, 0, 0)),
+            kv_spec, sc_spec, kv_spec, sc_spec,
+        ],
+        out_specs=pl.BlockSpec((1, h, dh), lambda i, j: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, dh), jnp.float32),
+        scratch_shapes=[
+            pltpu.VMEM((h, dh), jnp.float32),   # acc
+            pltpu.VMEM((h, 1), jnp.float32),    # running max
+            pltpu.VMEM((h, 1), jnp.float32),    # running sum
+        ],
+        interpret=interpret,
+    )(lengths, win, s32, q, k_payload, k_scales, v_payload, v_scales)

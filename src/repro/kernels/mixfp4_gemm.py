@@ -13,7 +13,7 @@ Two entry points:
                       weight HBM traffic is 4.5 bits/value instead of 16)
   mixfp4_gemm_w4a4  : packed activations x packed weight (full FP4 MMA analog)
 
-Weight layout (from ``pack_weight_kn``): payload (K//2, N) uint8 with two
+Weight layout (from ``pack_weight_qt``): payload (K//2, N) uint8 with two
 K-consecutive nibbles per byte; scales (K//16, N//16) uint8 for the paper's
 2-D 16x16 weight tiles.  Activation layout (W4A4): payload (M, K//2), scales
 (M, K//16) — 1-D blocks along the contraction axis.

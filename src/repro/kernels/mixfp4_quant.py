@@ -134,18 +134,25 @@ def mixfp4_quant_rows(
     *,
     bm: int | None = None,
     interpret: bool = False,
+    scale32: jax.Array | float | None = None,
 ):
     """Quantize (M, K) with 1-D g=16 blocks along K (MixFP4, RNE).
 
     Returns (payload (M, K//2) uint8, scales (M, K//16) uint8, scale32 f32).
     The per-tensor scale is a global reduction, computed outside the kernel
     (a cheap fused max) and passed in SMEM-style as a (1,1) operand.
+    ``scale32`` pins it instead — incremental producers (the packed KV
+    cache writes rows at different decode steps) need every row quantized
+    under one shared per-tensor scale, not a per-call data-dependent one.
     """
     m, k = x.shape
     assert k % _G == 0, f"K={k} must be a multiple of {_G}"
-    amax = jnp.max(jnp.abs(x)).astype(jnp.float32)
-    # matches scaling.tensor_scale bit-for-bit (reciprocal multiply)
-    s32 = jnp.where(amax > 0, amax * (1.0 / 2688.0), 1.0).reshape(1, 1)
+    if scale32 is None:
+        amax = jnp.max(jnp.abs(x)).astype(jnp.float32)
+        # matches scaling.tensor_scale bit-for-bit (reciprocal multiply)
+        s32 = jnp.where(amax > 0, amax * (1.0 / 2688.0), 1.0).reshape(1, 1)
+    else:
+        s32 = jnp.asarray(scale32, jnp.float32).reshape(1, 1)
 
     if bm is None:
         bm = _pick_bm(m, k)

@@ -14,6 +14,7 @@ import jax.numpy as jnp
 
 from repro.kernels import ref
 from repro.kernels.fwht import fwht_rows
+from repro.kernels.mixfp4_attn import mixfp4_attn_decode
 from repro.kernels.mixfp4_gemm import mixfp4_gemm_w4a4, mixfp4_gemm_w4a16
 from repro.kernels.mixfp4_quant import mixfp4_quant_rows
 
@@ -24,6 +25,7 @@ __all__ = [
     "pack_weight_qt",
     "gemm_w4a16",
     "gemm_w4a4",
+    "attn_decode_packed",
     "rht_rows",
 ]
 
@@ -33,18 +35,25 @@ def default_interpret() -> bool:
 
 
 def quantize_rows(x: jax.Array, **kw):
-    """Fused MixFP4 row quantizer (payload, scales, scale32)."""
+    """Fused MixFP4 row quantizer (payload, scales, scale32).
+
+    Pass ``scale32=`` to pin the per-tensor scale instead of deriving it
+    from the data — required for incremental producers like the packed KV
+    cache, where rows quantized at different decode steps must share one
+    per-tensor scale.
+    """
     kw.setdefault("interpret", default_interpret())
     return mixfp4_quant_rows(x, **kw)
 
 
 def pack_weight_kn(w: jax.Array, method: str = "mixfp4",
                    block: tuple[int, int] = (16, 16)):
-    """Quantize+pack a (K, N) weight for the GEMM kernels (oracle-produced;
-    packing is offline/per-checkpoint, not a hot path).
+    """DEPRECATED positional-triple shim, kept only for external callers
+    pinned to the historical ``(payload, scales, scale32)`` interface.
 
-    Positional-triple shim; new code should use :func:`pack_weight_qt` /
-    ``repro.core.qtensor.quantize`` and route GEMMs through ``qtensor.qmm``.
+    Use :func:`pack_weight_qt` / ``repro.core.qtensor.quantize`` (and route
+    GEMMs through ``qtensor.qmm``) instead; all in-repo call sites have been
+    migrated (docs/qtensor.md migration table).
     """
     return ref.ref_pack_weight_kn(w, method, block)
 
@@ -66,6 +75,16 @@ def gemm_w4a16(x, payload, scales, scale32, **kw):
 def gemm_w4a4(xp, xs, xs32, payload, scales, scale32, **kw):
     kw.setdefault("interpret", default_interpret())
     return mixfp4_gemm_w4a4(xp, xs, xs32, payload, scales, scale32, **kw)
+
+
+def attn_decode_packed(q, k_payload, k_scales, v_payload, v_scales,
+                       lengths, **kw):
+    """Fused decode attention over the packed KV cache (flash-decoding with
+    in-VMEM Fig. 9 decode); see ``kernels.mixfp4_attn``.  Returns
+    (B, H, dh) f32 without materializing a dense bf16 cache in HBM."""
+    kw.setdefault("interpret", default_interpret())
+    return mixfp4_attn_decode(q, k_payload, k_scales, v_payload, v_scales,
+                              lengths, **kw)
 
 
 def rht_rows(x, signs, **kw):

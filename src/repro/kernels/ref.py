@@ -16,8 +16,10 @@ __all__ = [
     "ref_quant_pack_rows",
     "ref_pack_weight_kn",
     "ref_dequant_weight_kn",
+    "ref_dequant_kv",
     "ref_gemm_w4a16",
     "ref_gemm_w4a4",
+    "ref_attn_decode_packed",
     "ref_fwht_rows",
 ]
 
@@ -78,6 +80,54 @@ def ref_gemm_w4a4(xp, xs, xs32, payload, scales, scale32,
                          layout=BlockLayout1D(-1, act_block),
                          shape=(m, k), dtype="float32")
     return ref_gemm_w4a16(qx.dequantize(), payload, scales, scale32, block)
+
+
+def ref_dequant_kv(payload: jax.Array, scales: jax.Array,
+                   scale32=1.0) -> jax.Array:
+    """Decode packed KV rows (..., dh//2 payload + dh//16 scale bytes, 1-D
+    g=16 blocks along the head dim) back to f32 (..., dh)."""
+    return qtensor.from_packed_rows(payload, scales, scale32).dequantize()
+
+
+def ref_attn_decode_packed(
+    q: jax.Array,
+    k_payload: jax.Array,
+    k_scales: jax.Array,
+    v_payload: jax.Array,
+    v_scales: jax.Array,
+    lengths: jax.Array,
+    *,
+    window: jax.Array | int = 0,
+    k_scale32=1.0,
+    v_scale32=1.0,
+    softcap: float = 0.0,
+) -> jax.Array:
+    """Decode-attention oracle: dequantize the packed cache and run the
+    masked softmax.V in plain f32 jnp (mirrors ``models.base.attention``
+    decode semantics: the query sits at position ``lengths - 1``).
+
+    q (B, H, dh); packed K/V (B, S, Hkv, ...); lengths () or (B,) int32.
+    Returns (B, H, dh) f32.
+    """
+    b, h, dh = q.shape
+    s, hkv = k_payload.shape[1:3]
+    g = h // hkv
+    k = ref_dequant_kv(k_payload, k_scales, k_scale32)      # (B,S,Hkv,dh)
+    v = ref_dequant_kv(v_payload, v_scales, v_scale32)
+    qr = q.astype(jnp.float32).reshape(b, hkv, g, dh)
+    scores = jnp.einsum("bkgd,bskd->bkgs", qr, k) * (dh ** -0.5)
+    if softcap:
+        scores = softcap * jnp.tanh(scores / softcap)
+    kv_len = jnp.broadcast_to(jnp.asarray(lengths, jnp.int32), (b,))
+    win = jnp.asarray(window, jnp.int32)
+    kpos = jnp.arange(s)
+    mask = kpos[None, :] < kv_len[:, None]
+    mask &= jnp.where(win > 0,
+                      kpos[None, :] > (kv_len - 1 - win)[:, None], True)
+    scores = jnp.where(mask[:, None, None], scores, -1e30)
+    p = jax.nn.softmax(scores, axis=-1)
+    o = jnp.einsum("bkgs,bskd->bkgd", p, v)
+    return o.reshape(b, h, dh)
 
 
 def ref_fwht_rows(x: jax.Array, signs: jax.Array, group: int = 16) -> jax.Array:

@@ -33,6 +33,10 @@ def main(argv=None):
     ap.add_argument("--no-pack", action="store_true",
                     help="serve dense bf16 weights through the simulated "
                          "qdq path instead of packed QTensors")
+    ap.add_argument("--kv-quant", default=None, choices=["bf16", "mixfp4"],
+                    help="hold the KV cache packed (mixfp4: 4.5 bits/value, "
+                         "decode through the fused attention kernel); "
+                         "default bf16")
     ap.add_argument("--save-weights", default=None, metavar="DIR",
                     help="write the packed QTensor weight tree as a "
                          "checkpoint and exit")
@@ -48,13 +52,22 @@ def main(argv=None):
 
     engine = ServeEngine(cfg, params, batch_size=args.batch,
                          max_len=args.max_len,
-                         pack_weights=not args.no_pack)
+                         pack_weights=not args.no_pack,
+                         kv_quant=args.kv_quant)
     del params  # projections now live ONLY as packed QTensors in the engine
     if engine.packed_bytes:
         print(f"[serve] projection weights held as packed QTensors: "
               f"{engine.packed_bytes / 1024:.0f} KiB "
               f"({engine.compression:.2f}x smaller than bf16), served "
               f"through qmm -> W4A16 kernels")
+    if engine.kv_quant == "mixfp4":
+        # bf16 equivalent: K and V tensors at 2 bytes/value
+        bf16_kib = (2 * 2 * engine.batch_size * engine.max_len
+                    * cfg.n_layers * cfg.n_kv_heads * cfg.dh) / 1024
+        print(f"[serve] packed MixFP4 KV cache: "
+              f"{engine.kv_cache_bytes() / 1024:.0f} KiB "
+              f"(bf16 would be {bf16_kib:.0f} KiB), decode reads it "
+              f"through the fused attention kernel")
     if args.save_weights:
         if args.no_pack:
             ap.error("--save-weights requires packed weights; drop --no-pack "

@@ -48,6 +48,10 @@ __all__ = [
     "attn_init",
     "build_model",
     "shard",
+    "KV_SCALE32",
+    "quantize_kv_rows",
+    "slot_take",
+    "slot_put",
 ]
 
 
@@ -460,12 +464,131 @@ def attention(
     return jnp.moveaxis(out, 0, 1).reshape(b, sq, h, dh)
 
 
+# ---------------------------------------------------------------------------
+# Packed MixFP4 KV cache (the decode_32k traffic term; docs/serving.md)
+# ---------------------------------------------------------------------------
+# Per-tensor scale shared by every KV row.  Rows are quantized incrementally
+# (one per decode step), so the level-2 scale cannot be data-dependent — it
+# must be identical for rows written at different times.  RoPE'd K and raw V
+# are O(1); with s32=1 the per-block E4M3 scale alone covers blockmaxes up
+# to 6*448 = 2688 before clipping, the same headroom the paper's per-tensor
+# rule (max|X|/2688) grants a tensor whose absmax IS 2688.
+KV_SCALE32 = 1.0
+
+
+def quantize_kv_rows(kv: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Quantize KV rows into the wire format under the shared KV_SCALE32.
+
+    kv (..., dh) -> (payload (..., dh//2) u8, scales (..., dh//16) u8) via
+    the fused Pallas row quantizer; 1-D g=16 blocks along the head dim.
+    Replaces the historical ``serving.quantize_kv`` loose triple (which
+    derived a per-call scale32 and so could not serve incremental writes).
+    """
+    from repro.kernels import ops  # deferred: kernels import core
+
+    shape = kv.shape
+    flat = kv.reshape(-1, shape[-1]).astype(jnp.float32)
+    payload, scales, _ = ops.quantize_rows(flat, scale32=KV_SCALE32)
+    return (payload.reshape(*shape[:-1], shape[-1] // 2),
+            scales.reshape(*shape[:-1], shape[-1] // 16))
+
+
+def _map_slot_arrays(fn, *trees):
+    """tree.map over cache trees whose leaves may be QTensors: ``fn`` is
+    applied to dense leaves and to QTensor payload/scales children, while
+    scale32 (no per-slot batch axis — it is shared by construction) passes
+    through from the first tree untouched."""
+    is_qt = lambda x: isinstance(x, qtensor.QTensor)
+
+    def one(leaf, *rest):
+        if is_qt(leaf):
+            return qtensor.QTensor(
+                fn(leaf.payload, *[r.payload for r in rest]),
+                fn(leaf.scales, *[r.scales for r in rest]),
+                leaf.scale32, leaf.method, leaf.layout, leaf.shape,
+                leaf.dtype)
+        return fn(leaf, *rest)
+
+    return jax.tree.map(one, *trees, is_leaf=is_qt)
+
+
+def slot_take(cache, slot):
+    """Slice slot ``slot``'s batch row (axis 1 of every (L, B, ...) cache
+    leaf) into a batch-1 cache — the single-slot prefill view."""
+    return _map_slot_arrays(
+        lambda a: jax.lax.dynamic_slice_in_dim(a, slot, 1, axis=1), cache)
+
+
+def slot_put(cache, small, slot):
+    """Scatter a batch-1 cache (from :func:`slot_take` + a prefill) back
+    into slot ``slot`` — only that batch row is written, so an admission is
+    invisible to every other slot without any snapshot/restore."""
+    return _map_slot_arrays(
+        lambda a, s: jax.lax.dynamic_update_slice_in_dim(
+            a, s.astype(a.dtype), slot, axis=1), cache, small)
+
+
+def _attn_packed_cached(q, knew, vnew, kv_cache, cache_len, window,
+                        cfg: ArchConfig):
+    """Attention over the packed QTensor KV cache.
+
+    Decode (s == 1): quantize the new K/V row, scatter its packed bytes
+    into the cache at each slot's position, and run the fused Pallas
+    decode-attention kernel straight over the packed arrays — no dense
+    bf16 copy of the cache is ever materialized.
+
+    Prefill (s > 1, scalar ``cache_len``): quantize all prompt rows at
+    once, write the packed slab, and attend over the *dequantized* rows —
+    bit-identical values to what later decode steps will read back, so a
+    batched prefill and a token-by-token replay see the same quantized
+    history.
+    """
+    from repro.kernels import ops  # deferred: kernels import core
+
+    b, s, _, _ = q.shape
+    ck, cv = kv_cache
+    cl = jnp.asarray(cache_len)
+    kp, ks = quantize_kv_rows(knew)
+    vp, vs = quantize_kv_rows(vnew)
+    if s == 1:
+        cl_vec = cl if cl.ndim else jnp.broadcast_to(cl, (b,))
+        rows = jnp.arange(b)
+        ckp = ck.payload.at[rows, cl_vec].set(kp[:, 0])
+        cks = ck.scales.at[rows, cl_vec].set(ks[:, 0])
+        cvp = cv.payload.at[rows, cl_vec].set(vp[:, 0])
+        cvs = cv.scales.at[rows, cl_vec].set(vs[:, 0])
+        o = ops.attn_decode_packed(
+            q[:, 0], ckp, cks, cvp, cvs, cl_vec + 1,
+            window=window, softcap=cfg.softcap_attn,
+            k_scale32=ck.scale32, v_scale32=cv.scale32)
+        o = o[:, None].astype(q.dtype)
+    else:
+        assert cl.ndim == 0, \
+            "packed-KV prefill requires a scalar cache_len (whole-prompt " \
+            "writes start at one position)"
+        ckp = jax.lax.dynamic_update_slice_in_dim(ck.payload, kp, cl, axis=1)
+        cks = jax.lax.dynamic_update_slice_in_dim(ck.scales, ks, cl, axis=1)
+        cvp = jax.lax.dynamic_update_slice_in_dim(cv.payload, vp, cl, axis=1)
+        cvs = jax.lax.dynamic_update_slice_in_dim(cv.scales, vs, cl, axis=1)
+        k = qtensor.from_packed_rows(ckp, cks, ck.scale32).dequantize()
+        v = qtensor.from_packed_rows(cvp, cvs, cv.scale32).dequantize()
+        o = attention(q, k, v, causal_offset=cl, window=window,
+                      softcap=cfg.softcap_attn, chunk=cfg.attn_chunk,
+                      kv_valid_len=cl + s)
+    new_k = qtensor.QTensor(ckp, cks, ck.scale32, ck.method, ck.layout,
+                            ck.shape, ck.dtype)
+    new_v = qtensor.QTensor(cvp, cvs, cv.scale32, cv.method, cv.layout,
+                            cv.shape, cv.dtype)
+    return o, (new_k, new_v)
+
+
 def attn_apply(p: dict, x: jax.Array, ctx: Ctx, cfg: ArchConfig, *,
                positions: jax.Array, window, kv_cache=None,
                cache_len=None, causal: bool = True,
                ) -> tuple[jax.Array, tuple | None]:
     """Full attention sub-layer.  When ``kv_cache=(K, V)`` is given, new K/V
-    are written at ``cache_len`` and attention runs over the cache (decode)."""
+    are written at ``cache_len`` and attention runs over the cache (decode).
+    A cache of packed QTensors routes through the fused packed-KV path."""
     b, s, _ = x.shape
     dh = cfg.dh
     q = qlinear(x, p["wq"], ctx, 0).reshape(b, s, cfg.n_heads, dh)
@@ -494,6 +617,12 @@ def attn_apply(p: dict, x: jax.Array, ctx: Ctx, cfg: ArchConfig, *,
         if knew.shape[1] % msize == 0:
             knew = shard(knew, "data", "model", None, None)
             vnew = shard(vnew, "data", "model", None, None)
+
+    if kv_cache is not None and isinstance(kv_cache[0], qtensor.QTensor):
+        o, new_cache = _attn_packed_cached(
+            q, knew, vnew, kv_cache, cache_len, window, cfg)
+        out = qlinear(o.reshape(b, s, cfg.n_heads * dh), p["wo"], ctx, 3)
+        return out, new_cache
 
     new_cache = None
     if kv_cache is None:

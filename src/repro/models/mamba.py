@@ -424,6 +424,30 @@ class MambaLM:
     def write_slot(self, cache, i: int, state):
         return jax.tree.map(lambda a, s: a.at[:, i].set(s), cache, state)
 
+    def prefill_slot(self, params, tokens, ctx: Ctx, cache, slot):
+        """Batched single-slot prefill: slice the cache to the slot's batch
+        row, run the whole prompt through the chunked-scan prefill in ONE
+        call, and scatter the row back.  Only slot ``slot``'s recurrent
+        state advances — the dummy-step corruption that forced the engine's
+        snapshot/restore dance around admissions cannot happen.  Returns
+        (last-position logits (1, V), updated full cache)."""
+        cfg = self.cfg
+        p_len = tokens.shape[1]
+        # chunked scans/attention need p_len % chunk == 0 once p_len exceeds
+        # the chunk; awkward prompt lengths fall back to one unchunked block
+        # (p_len is a static shape — each length compiles its own prefill)
+        cfg2 = cfg
+        if p_len > cfg.ssm_chunk and p_len % cfg.ssm_chunk:
+            cfg2 = cfg2.replace(ssm_chunk=p_len)
+        if cfg.attn_period and p_len > cfg.attn_chunk \
+                and p_len % cfg.attn_chunk:
+            cfg2 = cfg2.replace(attn_chunk=p_len)
+        model = self if cfg2 is cfg else MambaLM(cfg2)
+        small = base.slot_take(cache, slot)
+        logits, new_small = model.prefill(
+            params, {"tokens": tokens}, ctx, small)
+        return logits, base.slot_put(cache, new_small, slot)
+
     def decode_step(self, params, tokens, ctx: Ctx, cache, cache_len):
         cfg = self.cfg
         x = params["embed"][tokens[:, None]].astype(jnp.bfloat16)

@@ -17,6 +17,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
+from repro.core import qtensor
 from repro.models import base, moe as moe_lib
 from repro.models.base import ArchConfig, Ctx, Param, shard, unzip_params
 
@@ -154,10 +155,37 @@ class TransformerLM:
     # ------------------------------------------------------------------
     # serving: KV cache, prefill, decode
     # ------------------------------------------------------------------
-    def init_cache(self, batch_size: int, max_len: int, dtype=jnp.bfloat16):
+    def init_cache(self, batch_size: int, max_len: int, dtype=jnp.bfloat16,
+                   kv_quant: str | None = None):
+        """Preallocated KV cache.  ``kv_quant="mixfp4"`` holds it packed:
+        one 1-D-blocked QTensor per K/V whose children carry a leading
+        layer axis ((L, B, S, Hkv, dh//2) payload + (..., dh//16) scale
+        bytes, 4.5 bits/value in HBM) that ``lax.scan`` slices layer-by-
+        layer; decode reads it through the fused Pallas attention kernel
+        without ever materializing the dense tensor (docs/serving.md)."""
         cfg = self.cfg
         shape = (cfg.n_layers, batch_size, max_len, cfg.n_kv_heads, cfg.dh)
-        return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+        if kv_quant is None or kv_quant == "bf16":
+            return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+        if kv_quant != "mixfp4":
+            raise ValueError(f"unknown kv_quant {kv_quant!r} "
+                             "(expected None, 'bf16' or 'mixfp4')")
+        if cfg.dh % 16:
+            raise ValueError(
+                f"kv_quant='mixfp4' needs head_dim % 16 == 0, got {cfg.dh}")
+
+        def packed():
+            # zero payload/scale bytes decode to exact zeros (scale 0)
+            return qtensor.QTensor(
+                jnp.zeros((*shape[:-1], cfg.dh // 2), jnp.uint8),
+                jnp.zeros((*shape[:-1], cfg.dh // 16), jnp.uint8),
+                # per-layer scale32 so scan slices it with the layer axis;
+                # all rows share base.KV_SCALE32 (incremental row writes)
+                jnp.full((cfg.n_layers,), base.KV_SCALE32, jnp.float32),
+                method="mixfp4", layout=qtensor.BlockLayout1D(-1, 16),
+                shape=shape[1:], dtype="float32")
+
+        return {"k": packed(), "v": packed()}
 
     def cache_specs(self):
         # cache shards over *sequence* on the model axis: no head-padding
@@ -197,17 +225,52 @@ class TransformerLM:
 
     def reset_slot(self, cache, i: int):
         """Zero slot ``i``'s cache rows so a freshly admitted request starts
-        from position 0 with no stale K/V (continuous batching)."""
-        return jax.tree.map(lambda a: a.at[:, i].set(0), cache)
+        from position 0 with no stale K/V (continuous batching).  On the
+        packed cache this zeroes the slot's payload/scale *bytes* (zero
+        bytes decode to exact zeros; scale32 is shared, untouched)."""
+        return base._map_slot_arrays(lambda a: a.at[:, i].set(0), cache)
 
     def slot_state(self, cache, i: int):
-        """Snapshot slot ``i``'s cache rows (see ServeEngine._prefill_slot:
-        other active slots are restored after a prefill so the dummy steps
-        they observe never leak into their state)."""
-        return jax.tree.map(lambda a: a[:, i], cache)
+        """Snapshot slot ``i``'s cache rows (packed caches snapshot the
+        slot's packed bytes; the returned QTensor is an opaque
+        ``write_slot`` token, not a standalone logical tensor)."""
+        return base._map_slot_arrays(lambda a: a[:, i], cache)
 
     def write_slot(self, cache, i: int, state):
-        return jax.tree.map(lambda a, s: a.at[:, i].set(s), cache, state)
+        return base._map_slot_arrays(
+            lambda a, s: a.at[:, i].set(s), cache, state)
+
+    def prefill_slot(self, params, tokens, ctx: Ctx, cache, slot):
+        """Batched single-slot prefill: run the whole prompt in ONE call.
+
+        tokens (1, P) int32; ``slot`` selects the cache batch row.  The
+        slot's cache is sliced to batch 1, the prompt runs through the
+        full-sequence layer stack (projection GEMMs hit the W4A16 kernels
+        at (P, K) prefill shapes instead of P single-token dispatches),
+        every cache row is written at once, and only slot ``slot`` is
+        touched — an admission is invisible to its batchmates with no
+        snapshot/restore.  Embedding matches ``decode_step`` (engine
+        requests carry tokens only — no VLM prefix path here).  Returns
+        (last-position logits (1, V), updated full cache).
+        """
+        cfg = self.cfg
+        p_len = tokens.shape[1]
+        model = self
+        if p_len > cfg.attn_chunk and p_len % cfg.attn_chunk:
+            # chunked attention needs Sq % chunk == 0; fall back to one
+            # unchunked block for awkward prompt lengths (P is a static
+            # shape — each prompt length compiles its own prefill anyway)
+            model = TransformerLM(cfg.replace(attn_chunk=p_len))
+        small = base.slot_take(cache, slot)
+        x = params["embed"][tokens].astype(jnp.bfloat16)
+        if cfg.emb_scale:
+            x = x * math.sqrt(cfg.d_model)
+        positions = jnp.arange(p_len)[None, :]
+        x, nk, nv = model._run_layers_cached(
+            params, x, ctx, small["k"], small["v"], jnp.int32(0), positions)
+        logits = base.lm_logits(x[:, -1], params["embed"], cfg.softcap_final,
+                                vocab=cfg.vocab)
+        return logits, base.slot_put(cache, {"k": nk, "v": nv}, slot)
 
     def decode_step(self, params, tokens, ctx: Ctx, cache, cache_len):
         """One token for every sequence in the batch.

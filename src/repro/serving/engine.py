@@ -1,4 +1,5 @@
-"""Batched serving engine over packed MixFP4 weights.
+"""Batched serving engine over packed MixFP4 weights and (optionally) a
+packed MixFP4 KV cache.
 
 Production-shaped serving loop: requests join a continuous batch and the
 projection weights are held ONLY as packed :class:`~repro.core.qtensor.QTensor`
@@ -9,8 +10,19 @@ over bf16 in the decode-bound regime).  Every decode step runs through
 decoding tiles in VMEM; no dense bf16 copy of a projection weight is
 retained anywhere in the engine.
 
-The KV cache can optionally be MixFP4-quantized per (head, 16-value block)
-as well (``quantize_kv``/``dequantize_kv`` below).
+Two hot paths run over packed data end-to-end (docs/serving.md):
+
+* ``kv_quant="mixfp4"`` carries the transformer KV cache as 1-D
+  ``BlockLayout1D`` QTensors; every decode step scatters the new token's
+  packed K/V bytes in place and reads the cache through the fused Pallas
+  decode-attention kernel (``kernels.mixfp4_attn``) — the cache's dense
+  bf16 form never exists at decode time, so the dominant decode_32k
+  traffic term shrinks ~3.55x too.
+* Admissions prefill through the models' batched ``prefill_slot`` entry:
+  the whole prompt runs in ONE jit call at (P, K) prefill shapes through
+  the W4A16 kernels, writing all cache rows at once, instead of the
+  historical O(prompt_len) token-by-token decode replay (which also needed
+  a snapshot/restore dance to keep recurrent batchmates unperturbed).
 """
 from __future__ import annotations
 
@@ -23,8 +35,9 @@ import numpy as np
 
 from repro.checkpoint.manager import CheckpointManager
 from repro.core import qtensor
-from repro.kernels import ops
 from repro.models.base import ArchConfig, Ctx, build_model, pack_projections
+
+_TRANSFORMER_FAMILIES = ("dense", "moe", "vlm")
 
 
 def _packed_stats(tree) -> tuple[int, int]:
@@ -46,6 +59,11 @@ class Request:
     max_new_tokens: int = 16
     generated: list = dataclasses.field(default_factory=list)
     done: bool = False
+    # First greedy token, produced by the admission prefill and emitted by
+    # the first step() — None until the request has been admitted.  (It
+    # used to be injected dynamically by _prefill_slot, so step() on a
+    # request that skipped prefill raised AttributeError.)
+    _next: int | None = None
 
 
 class ServeEngine:
@@ -53,17 +71,25 @@ class ServeEngine:
 
     def __init__(self, cfg: ArchConfig, params, *, batch_size: int = 8,
                  max_len: int = 512, pack_weights: bool = True,
-                 method: str = "mixfp4"):
+                 method: str = "mixfp4", kv_quant: str | None = None):
         if cfg.family == "encdec":
             raise ValueError(
                 "ServeEngine has no source-encoding path (requests carry "
                 "tokens only); an encdec model would cross-attend an "
                 "all-zero memory. Drive encdec decoding through "
                 "model.prefill(src_embeds)/decode_step directly.")
+        if kv_quant not in (None, "bf16", "mixfp4"):
+            raise ValueError(f"unknown kv_quant {kv_quant!r} "
+                             "(expected None, 'bf16' or 'mixfp4')")
+        if kv_quant == "mixfp4" and cfg.family not in _TRANSFORMER_FAMILIES:
+            raise ValueError(
+                f"kv_quant='mixfp4' packs the transformer KV cache; family "
+                f"{cfg.family!r} has no (or not only) a KV cache to pack")
         self.cfg = cfg
         self.model = build_model(cfg)
         self.batch_size = batch_size
         self.max_len = max_len
+        self.kv_quant = kv_quant or "bf16"
         self.ctx = Ctx(jax.random.PRNGKey(0), cfg.quant)
         if pack_weights:
             # Projection weights become packed QTensors; the dense leaves
@@ -76,11 +102,33 @@ class ServeEngine:
             self.packed_bytes = self.dense_bytes = 0
         self.compression = (self.dense_bytes / self.packed_bytes
                             if self.packed_bytes else 1.0)
-        self.cache = self.model.init_cache(batch_size, max_len)
+        if self.kv_quant == "mixfp4":
+            self.cache = self.model.init_cache(batch_size, max_len,
+                                               kv_quant="mixfp4")
+        else:
+            self.cache = self.model.init_cache(batch_size, max_len)
         self.lengths = np.zeros((batch_size,), np.int32)
         self.slots: list[Request | None] = [None] * batch_size
+        self.prefill_dispatches = 0   # jit dispatches spent on admissions
+        self.admissions = 0
         self._decode = jax.jit(
             lambda p, t, c, l: self.model.decode_step(p, t, self.ctx, c, l))
+        # one dispatch per admission; recompiles per distinct prompt length
+        # (prefill shapes — bucket/pad prompts upstream if that matters)
+        self._prefill = jax.jit(
+            lambda p, t, c, i: self.model.prefill_slot(p, t, self.ctx, c, i))
+
+    # ------------------------------------------------------------------
+    # storage accounting
+    # ------------------------------------------------------------------
+    def kv_cache_bytes(self) -> int:
+        """HBM bytes held by the KV/state cache (QTensor leaves count their
+        wire bytes — 4.5 bits/value instead of bf16's 16)."""
+        total = 0
+        for leaf in jax.tree.leaves(
+                self.cache, is_leaf=lambda x: isinstance(x, qtensor.QTensor)):
+            total += int(leaf.nbytes)
+        return total
 
     # ------------------------------------------------------------------
     # packed-weight checkpointing: the QTensor pytree round-trips through
@@ -127,31 +175,19 @@ class ServeEngine:
         return False
 
     def _prefill_slot(self, i: int, req: Request):
-        """Single-slot prefill: run the prompt through decode steps (slot-
-        level prefill keeps the engine simple; batch prefill is the
-        prefill_32k dry-run path).
-
-        Other ACTIVE slots observe dummy token-0 steps during this loop.
-        Positional KV rows would be overwritten at their next real step,
-        but recurrent SSM state advances irreversibly for every batch row —
-        so snapshot every other active slot and restore it afterwards; an
-        admission is bitwise-invisible to its batchmates for all families."""
-        others = [j for j, s in enumerate(self.slots)
-                  if s is not None and j != i]
-        saved = {j: self.model.slot_state(self.cache, j) for j in others}
-        logits = None
-        for tok in req.prompt:
-            # fresh host buffers per dispatch: the decode runs async and may
-            # alias numpy memory — never hand it a buffer we later mutate
-            toks = np.zeros((self.batch_size,), np.int32)
-            toks[i] = tok
-            logits, self.cache = self._decode(
-                self.params, jnp.asarray(toks), self.cache,
-                jnp.asarray(self.lengths.copy()))
-            self.lengths[i] += 1
-        req._next = int(jnp.argmax(logits[i]))
-        for j, state in saved.items():
-            self.cache = self.model.write_slot(self.cache, j, state)
+        """Single-slot batched prefill: ONE jit dispatch runs the whole
+        prompt through ``model.prefill_slot`` at (1, P) shapes, writing all
+        of slot ``i``'s cache rows at once.  Other slots' batch rows are
+        never touched (the model slices/scatters only row ``i``), so an
+        admission is invisible to its batchmates for all families with no
+        snapshot/restore."""
+        tokens = jnp.asarray(np.asarray(req.prompt, np.int32)[None, :])
+        logits, self.cache = self._prefill(
+            self.params, tokens, self.cache, jnp.int32(i))
+        self.lengths[i] = len(req.prompt)
+        req._next = int(jnp.argmax(logits[0]))
+        self.prefill_dispatches += 1
+        self.admissions += 1
 
     def step(self) -> list[tuple[int, int]]:
         """One decode step for all active slots (each at its own cache
@@ -167,6 +203,11 @@ class ServeEngine:
             if req is None or req.done:
                 continue
             if not req.generated:
+                if req._next is None:
+                    raise RuntimeError(
+                        f"request {req.uid} occupies slot {i} but was never "
+                        "prefilled (requests enter the batch via "
+                        "add_request, which runs the admission prefill)")
                 req.generated.append(req._next)
                 out.append((req.uid, req._next))
                 if len(req.generated) >= req.max_new_tokens:
@@ -192,28 +233,3 @@ class ServeEngine:
                 req.done = True
                 self.slots[i] = None
         return out
-
-
-# ---------------------------------------------------------------------------
-# MixFP4-quantized KV cache (beyond-paper, DESIGN.md §9.3): stores K/V as
-# packed payload + scale bytes per (token, head, 16-lane block).  Decode
-# memory traffic drops ~3.5x on the cache — the dominant term of decode_32k.
-# (Follow-on: carry these as 1-D QTensors so the cache flows through the
-# same pytree machinery as the weights.)
-# ---------------------------------------------------------------------------
-def quantize_kv(kv: jax.Array):
-    """kv: (..., dh) bf16 -> (payload (..., dh//2) u8, scales (..., dh//16) u8,
-    per-tensor f32)."""
-    shape = kv.shape
-    flat = kv.reshape(-1, shape[-1]).astype(jnp.float32)
-    payload, scales, s32 = ops.quantize_rows(flat)
-    return (payload.reshape(*shape[:-1], shape[-1] // 2),
-            scales.reshape(*shape[:-1], shape[-1] // 16), s32)
-
-
-def dequantize_kv(payload, scales, s32, dtype=jnp.bfloat16):
-    qt = qtensor.QTensor(
-        payload, scales, s32, method="mixfp4",
-        layout=qtensor.BlockLayout1D(-1, 16),
-        shape=(*payload.shape[:-1], payload.shape[-1] * 2), dtype="float32")
-    return qt.dequantize(dtype)

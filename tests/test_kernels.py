@@ -34,7 +34,8 @@ def test_gemm_w4a16_sweep(mkn, tile):
         pytest.skip("tile must divide problem")
     x = jax.random.normal(jax.random.PRNGKey(1), (m, k), jnp.float32)
     w = jax.random.normal(jax.random.PRNGKey(2), (k, n), jnp.float32) * 0.3
-    payload, scales, s32 = ops.pack_weight_kn(w)
+    qw = ops.pack_weight_qt(w)
+    payload, scales, s32 = qw.payload, qw.scales, qw.scale32
     y_k = ops.gemm_w4a16(x, payload, scales, s32, bm=bm, bn=bn, bk=bk,
                          interpret=True)
     # f32 oracle (no bf16 tile rounding): dequantized weight matmul
@@ -49,8 +50,8 @@ def test_gemm_w4a16_sweep(mkn, tile):
 def test_gemm_w4a16_dequant_matches_qdq2d():
     """The packed weight path must represent exactly qdq_2d's values."""
     w = jax.random.normal(jax.random.PRNGKey(3), (96, 48)) * 0.5
-    payload, scales, s32 = ops.pack_weight_kn(w)
-    wd = ref.ref_dequant_weight_kn(payload, scales, s32)
+    qw = ops.pack_weight_qt(w)
+    wd = ref.ref_dequant_weight_kn(qw.payload, qw.scales, qw.scale32)
     wq = Q.qdq_2d(w, "mixfp4")
     np.testing.assert_allclose(np.asarray(wd), np.asarray(wq), rtol=0, atol=0)
 
@@ -60,7 +61,8 @@ def test_gemm_w4a4_sweep(mkn):
     m, k, n = mkn
     x = jax.random.normal(jax.random.PRNGKey(4), (m, k), jnp.float32)
     w = jax.random.normal(jax.random.PRNGKey(5), (k, n), jnp.float32) * 0.3
-    payload, scales, s32 = ops.pack_weight_kn(w)
+    qw = ops.pack_weight_qt(w)
+    payload, scales, s32 = qw.payload, qw.scales, qw.scale32
     xp, xs, xs32 = ops.quantize_rows(x, interpret=True)
     y_k = ops.gemm_w4a4(xp, xs, xs32, payload, scales, s32,
                         bm=8, bn=16, bk=32, interpret=True)
@@ -74,10 +76,8 @@ def test_gemm_w4a16_serving_bytes():
     """Memory win: packed weight is ~3.55x smaller than bf16."""
     k, n = 256, 256
     w = jax.random.normal(jax.random.PRNGKey(6), (k, n))
-    payload, scales, s32 = ops.pack_weight_kn(w)
-    packed_bytes = payload.size + scales.size + 4
-    bf16_bytes = k * n * 2
-    assert bf16_bytes / packed_bytes > 3.5
+    qw = ops.pack_weight_qt(w)
+    assert k * n * 2 / qw.nbytes > 3.5
 
 
 def test_quant_kernel_odd_rows():

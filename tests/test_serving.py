@@ -283,6 +283,235 @@ def test_moe_family_serves_from_packed_experts():
     assert len(out) == 2 and all(0 <= t < cfg.vocab for t in out)
 
 
+def test_step_on_unprefilled_request_raises(small_cfg):
+    """Regression: ``_next`` used to be injected dynamically by the prefill,
+    so step() on a slot holding a hand-constructed (never-admitted) request
+    died with AttributeError.  It is now a real Request field; the engine
+    raises a clear error instead."""
+    model = build_model(small_cfg)
+    params, _ = model.init(jax.random.PRNGKey(0))
+    eng = ServeEngine(small_cfg, params, batch_size=1, max_len=8,
+                      pack_weights=False)
+    req = Request(uid=0, prompt=np.array([1, 2], np.int32))
+    assert req._next is None  # declared field, not injected
+    eng.slots[0] = req        # bypass add_request on purpose
+    with pytest.raises(RuntimeError, match="never .*prefilled"):
+        eng.step()
+
+
+@pytest.mark.parametrize("kv_quant", [None, "mixfp4"])
+def test_batched_prefill_bitwise_matches_replay(small_cfg, kv_quant):
+    """The batched prefill_slot entry must write bit-identical cache rows
+    and produce the identical first token as the historical token-by-token
+    decode replay — for the bf16 cache AND the packed cache (whose rows
+    quantize identically whether written one at a time or as one slab)."""
+    model = build_model(small_cfg)
+    params, _ = model.init(jax.random.PRNGKey(7))
+    prompt = np.array([9, 8, 7, 3, 1], np.int32)
+
+    eng = ServeEngine(small_cfg, params, batch_size=2, max_len=32,
+                      kv_quant=kv_quant)
+    eng.add_request(Request(uid=0, prompt=prompt, max_new_tokens=1))
+    batched_first = eng.slots[0]._next if eng.slots[0] else \
+        eng.step()[0][1]  # max_new=1: slot may already have been freed
+    batched_cache = eng.cache
+
+    replay = ServeEngine(small_cfg, params, batch_size=2, max_len=32,
+                         kv_quant=kv_quant)
+    cache = replay.model.reset_slot(replay.cache, 0)
+    lengths = np.zeros((2,), np.int32)
+    logits = None
+    for tok in prompt:
+        toks = np.zeros((2,), np.int32)
+        toks[0] = tok
+        logits, cache = replay._decode(replay.params, jnp.asarray(toks),
+                                       cache, jnp.asarray(lengths.copy()))
+        lengths[0] += 1
+    replay_first = int(jnp.argmax(logits[0]))
+
+    assert batched_first == replay_first
+
+    def slot0_rows(c):
+        rows = {}
+        for name, leaf in c.items():
+            if isinstance(leaf, qtensor.QTensor):
+                rows[f"{name}.payload"] = \
+                    np.asarray(leaf.payload)[:, 0, :len(prompt)]
+                rows[f"{name}.scales"] = \
+                    np.asarray(leaf.scales)[:, 0, :len(prompt)]
+            else:
+                rows[name] = np.asarray(leaf)[:, 0, :len(prompt)]
+        return rows
+
+    got, want = slot0_rows(batched_cache), slot0_rows(cache)
+    for name in want:
+        np.testing.assert_array_equal(got[name], want[name],
+                                      err_msg=f"cache[{name}] rows differ")
+
+
+def test_packed_kv_cache_is_qtensor_and_small(small_cfg):
+    """Acceptance: with kv_quant='mixfp4' the engine's KV cache is held as
+    1-D-blocked QTensors (uint8 wire children, never a dense bf16 tensor)
+    at <= 0.3x the bf16 cache bytes."""
+    model = build_model(small_cfg)
+    params, _ = model.init(jax.random.PRNGKey(0))
+    packed = ServeEngine(small_cfg, params, batch_size=2, max_len=32,
+                         kv_quant="mixfp4")
+    dense = ServeEngine(small_cfg, params, batch_size=2, max_len=32)
+    for name in ("k", "v"):
+        leaf = packed.cache[name]
+        assert isinstance(leaf, qtensor.QTensor)
+        assert leaf.payload.dtype == jnp.uint8
+        assert leaf.scales.dtype == jnp.uint8
+        assert isinstance(leaf.layout, qtensor.BlockLayout1D)
+    assert packed.kv_cache_bytes() <= 0.3 * dense.kv_cache_bytes()
+    # decode leaves the cache packed (still QTensors after steps)
+    packed.add_request(Request(uid=0, prompt=np.array([1, 2, 3], np.int32),
+                               max_new_tokens=2))
+    packed.step()
+    packed.step()
+    assert isinstance(packed.cache["k"], qtensor.QTensor)
+
+
+def test_packed_kv_tokens_match_bf16_engine(small_cfg):
+    """Greedy output streams of the packed-KV engine vs the bf16-cache
+    engine (same packed weights).  KV quantization error is real but small;
+    on these pinned seeds/prompts the argmax chain is identical."""
+    model = build_model(small_cfg)
+    for seed, prompt in [(0, [3, 1, 4, 1, 5]), (5, [9, 8, 7]),
+                         (2, [2, 7, 1, 8])]:
+        params, _ = model.init(jax.random.PRNGKey(seed))
+        streams = {}
+        for kv in ("bf16", "mixfp4"):
+            eng = ServeEngine(small_cfg, params, batch_size=1, max_len=32,
+                              kv_quant=kv)
+            streams[kv] = _serve_one(eng, prompt, 5)
+        assert streams["mixfp4"] == streams["bf16"], (seed, streams)
+
+
+def test_packed_kv_slot_reuse_no_contamination(small_cfg):
+    """Slot reuse on the packed cache: reset_slot zeroes the slot's packed
+    bytes, so a reused-slot serve is bit-identical to a fresh engine."""
+    model = build_model(small_cfg)
+    params, _ = model.init(jax.random.PRNGKey(7))
+    eng = ServeEngine(small_cfg, params, batch_size=1, max_len=32,
+                      kv_quant="mixfp4")
+    _serve_one(eng, [9, 8, 7, 6, 5], 6)        # occupies + frees slot 0
+    reused = _serve_one(eng, [1, 2, 3], 4)     # admitted into the freed slot
+
+    fresh = ServeEngine(small_cfg, params, batch_size=1, max_len=32,
+                        kv_quant="mixfp4")
+    assert reused == _serve_one(fresh, [1, 2, 3], 4)
+
+
+def test_packed_kv_concurrent_matches_solo(small_cfg):
+    """Per-slot packed decode at ragged lengths: the concurrent batch's
+    next-token logits equal solo packed engines' (each slot reads only its
+    own packed rows, at its own cache position)."""
+    model = build_model(small_cfg)
+    params, _ = model.init(jax.random.PRNGKey(11))
+    eng = ServeEngine(small_cfg, params, batch_size=2, max_len=32,
+                      kv_quant="mixfp4")
+    pa = np.array([3, 1, 4, 1, 5], np.int32)
+    pb = np.array([2, 7, 1, 8, 2, 8, 1], np.int32)
+    eng.add_request(Request(uid=0, prompt=pa, max_new_tokens=4))
+    eng.add_request(Request(uid=1, prompt=pb, max_new_tokens=4))
+    logits2, _ = eng._decode(eng.params, jnp.array([7, 7], jnp.int32),
+                             eng.cache, jnp.asarray(eng.lengths))
+    for prompt, row in ((pa, 0), (pb, 1)):
+        solo = ServeEngine(small_cfg, params, batch_size=1, max_len=32,
+                           kv_quant="mixfp4")
+        solo.add_request(Request(uid=9, prompt=prompt, max_new_tokens=4))
+        logits1, _ = solo._decode(solo.params, jnp.array([7], jnp.int32),
+                                  solo.cache, jnp.asarray(solo.lengths))
+        np.testing.assert_allclose(np.asarray(logits2[row]),
+                                   np.asarray(logits1[0]), atol=1e-4)
+
+
+def test_packed_kv_odd_dh_block_count():
+    """dh=48 (three 16-lane blocks per row) serves through the fused
+    packed-KV path end to end."""
+    cfg = ArchConfig(name="serve-dh48", family="dense", n_layers=2,
+                     d_model=96, n_heads=2, n_kv_heads=2, d_ff=128,
+                     vocab=64, attn_chunk=64,
+                     quant=QuantConfig(method="mixfp4"))
+    model = build_model(cfg)
+    params, _ = model.init(jax.random.PRNGKey(1))
+    eng = ServeEngine(cfg, params, batch_size=1, max_len=16,
+                      kv_quant="mixfp4")
+    assert eng.cache["k"].payload.shape[-1] == 24   # dh//2
+    assert eng.cache["k"].scales.shape[-1] == 3     # dh//16
+    out = _serve_one(eng, [3, 4, 5], 3)
+    assert len(out) == 3 and all(0 <= t < 64 for t in out)
+
+
+def test_packed_kv_validation():
+    """kv_quant gating: non-transformer families and dh % 16 != 0 are
+    rejected up front with clear errors."""
+    ssm = ArchConfig(name="ssm-kv", family="ssm", n_layers=1, d_model=64,
+                     vocab=64, ssm_state=8, ssm_expand=2,
+                     quant=QuantConfig(method="mixfp4"))
+    model = build_model(ssm)
+    params, _ = model.init(jax.random.PRNGKey(0))
+    with pytest.raises(ValueError, match="kv_quant"):
+        ServeEngine(ssm, params, batch_size=1, max_len=8, kv_quant="mixfp4")
+
+    dense = ArchConfig(name="dh-odd", family="dense", n_layers=1,
+                       d_model=48, n_heads=2, n_kv_heads=2, d_ff=64,
+                       vocab=64, quant=QuantConfig(method="mixfp4"))
+    m2 = build_model(dense)
+    p2, _ = m2.init(jax.random.PRNGKey(0))
+    with pytest.raises(ValueError, match="head_dim"):
+        ServeEngine(dense, p2, batch_size=1, max_len=8, kv_quant="mixfp4")
+
+    with pytest.raises(ValueError, match="kv_quant"):
+        ServeEngine(dense, p2, batch_size=1, max_len=8, kv_quant="int3")
+
+
+def test_ssm_prefill_awkward_prompt_length():
+    """Regression: the batched SSM prefill runs the chunked selective scan,
+    which requires p_len % ssm_chunk == 0 once p_len exceeds the chunk —
+    prefill_slot must fall back to one unchunked block for awkward prompt
+    lengths (the replay path decoded at s=1 and never hit this)."""
+    cfg = ArchConfig(name="ssm-chunk", family="ssm", n_layers=2, d_model=64,
+                     vocab=64, ssm_state=8, ssm_expand=2, ssm_chunk=4,
+                     quant=QuantConfig(method="mixfp4"))
+    model = build_model(cfg)
+    params, _ = model.init(jax.random.PRNGKey(3))
+    eng = ServeEngine(cfg, params, batch_size=1, max_len=16)
+    out = _serve_one(eng, [3, 1, 4, 1, 5, 9], 2)   # 6 % 4 != 0
+    assert len(out) == 2 and all(0 <= t < 64 for t in out)
+
+
+def test_single_prefill_dispatch_per_admission(small_cfg):
+    """Acceptance: an admission costs exactly ONE prefill jit dispatch (the
+    historical replay cost O(prompt_len) decode dispatches)."""
+    model = build_model(small_cfg)
+    params, _ = model.init(jax.random.PRNGKey(0))
+    eng = ServeEngine(small_cfg, params, batch_size=2, max_len=32)
+    for uid, prompt in enumerate(([5, 4, 3, 2, 1, 0], [1, 2])):
+        eng.add_request(Request(uid=uid, prompt=np.asarray(prompt, np.int32),
+                                max_new_tokens=2))
+    assert eng.admissions == 2
+    assert eng.prefill_dispatches == eng.admissions
+
+
+def test_serving_bench_emits_expected_json(tmp_path):
+    """The serving benchmark must emit BENCH_serving.json with the schema
+    the CI smoke leg (and the perf trajectory) rely on."""
+    import json
+    from benchmarks import serving_bench
+    out = tmp_path / "BENCH_serving.json"
+    results = serving_bench.bench_serving(str(out), tiny=True)
+    on_disk = json.loads(out.read_text())
+    assert on_disk.keys() == results.keys()
+    for key in ("config", "cache_bytes", "decode_step_us", "prefill"):
+        assert key in on_disk, key
+    assert set(on_disk["decode_step_us"]) == {"bf16", "mixfp4"}
+    assert on_disk["cache_bytes"]["ratio"] <= 0.3
+    assert on_disk["prefill"]["dispatches_per_admission"] == 1
+
+
 def test_pack_projections_skips_non_projection_leaves():
     tree = {"layers": {"wq": jnp.ones((2, 32, 32)),
                        "ln_attn": jnp.ones((2, 32)),
