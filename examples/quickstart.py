@@ -4,15 +4,23 @@
    choices (the paper's core idea),
 2. pack it to the bit-exact wire format (zero-metadata type-in-scale),
 3. run a quantized GEMM with the Fig. 7 training boundary and take grads,
-4. run the Pallas kernels (interpret mode on CPU, native on TPU).
+4. run the Pallas kernels (interpret mode on CPU, native on TPU),
+5. shard the packed tensor over a host mesh (docs/sharding.md) —
+   payload/scales co-sharded over the model axis, GEMM per shard.
 
 Run:  PYTHONPATH=src python examples/quickstart.py
+For a real 2-way model axis in step 5 on CPU, fake two host devices:
+      XLA_FLAGS=--xla_force_host_platform_device_count=2 \
+          PYTHONPATH=src python examples/quickstart.py
 """
 import jax
 import jax.numpy as jnp
 
+from jax.sharding import PartitionSpec as P
+
 from repro.core import analysis, quantize as Q, qtensor
 from repro.core.qgemm import QuantConfig, qgemm
+from repro.launch.mesh import make_host_mesh
 
 
 def main():
@@ -47,6 +55,21 @@ def main():
     y = qtensor.qmm(x, qw)
     print(f"packed W4A16 GEMM out: {y.shape}, "
           f"weight bytes {qw.nbytes} vs bf16 {w.size * 2}")
+
+    # --- 5. sharded packed weights on a host mesh (docs/sharding.md) ------
+    # QTensor.with_sharding derives co-sharded NamedShardings for the
+    # payload/scale bytes from ONE logical spec — here column-parallel TP
+    # over the 'model' axis — and qmm_sharded runs the W4A16 kernel per
+    # shard, never gathering or dequantizing the full weight.  On a
+    # 1-device host the mesh degenerates gracefully; fake 2 devices (see
+    # module docstring) to watch the bytes actually split.
+    tp = 2 if jax.device_count() % 2 == 0 and jax.device_count() >= 2 else 1
+    mesh = make_host_mesh(model=tp)
+    qw_sh = qw.with_sharding(mesh, P(None, "model"))
+    y_sh = qtensor.qmm_sharded(x, qw_sh, mesh=mesh)
+    assert bool(jnp.all(y == y_sh)), "column-parallel TP is bitwise exact"
+    print(f"sharded packed GEMM on {dict(mesh.shape)}: payload sharding "
+          f"{qw_sh.payload.sharding.spec}, bitwise equal to single-device")
 
 
 if __name__ == "__main__":

@@ -172,8 +172,12 @@ class CheckpointManager:
         extra["pytree_spec"] = qtensor.tree_spec(tree)
         self.save(step, tree, extra=extra, blocking=blocking)
 
-    def restore_packed(self, step: int | None = None, **kw):
-        from repro.core import qtensor
+    def packed_spec(self, step: int | None = None) -> tuple[int, dict]:
+        """(step, JSON pytree spec) from a packed checkpoint's manifest —
+        structure only, no leaf bytes read.  A sharded serving process
+        uses this to derive per-child ``NamedSharding``s (via
+        ``qtensor.tree_like`` + ``distributed.sharding``) *before*
+        restoring, so leaves land directly in the sharded layout."""
         if step is None:
             step = self.latest_step()
         if step is None:
@@ -184,6 +188,15 @@ class CheckpointManager:
         if spec is None:
             raise ValueError(f"step {step} was not written by save_packed "
                              "(no pytree_spec in manifest)")
+        return step, spec
+
+    def restore_packed(self, step: int | None = None, **kw):
+        """Restore a packed QTensor tree from the manifest spec alone.
+        ``shardings=`` (a matching tree, e.g. from
+        ``distributed.sharding.packed_restore_shardings``) places each
+        payload/scales leaf straight onto its mesh shard."""
+        from repro.core import qtensor
+        step, spec = self.packed_spec(step)
         like = qtensor.tree_like(spec)
         tree, extra = self.restore(step, like, **kw)
         extra.pop("pytree_spec", None)

@@ -38,16 +38,26 @@ Methods whose candidate set is wider than {E2M1, E1M2} (``mixfp4_e3``,
 decode paths (``four_six``'s max-4 branch, bare ``nvint4``) cannot be
 expressed in the wire format; ``quantize`` rejects them — use
 ``core.quantize.qdq`` for those simulation-only ablations.
+
+Sharding (docs/sharding.md): a QTensor also carries a *logical*
+``PartitionSpec`` (``pspec``, static aux).  ``spec()`` derives consistent
+child specs for payload/scales/scale32 from a logical weight spec —
+payload and scales are always co-sharded, and a spec that would split a
+16-lane scale block is rejected — ``with_sharding()`` places the children
+under the derived ``NamedSharding``s, and ``qmm_sharded`` runs the W4A16
+kernel per shard under ``shard_map`` so TP serving never gathers or
+dequantizes a full weight.
 """
 from __future__ import annotations
 
 import dataclasses
 import math
 from dataclasses import dataclass
-from typing import Any, Sequence, Union
+from typing import Any, Mapping, Sequence, Union
 
 import jax
 import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.core import formats, pack as pack_lib, quantize as Q, scaling
 
@@ -61,8 +71,11 @@ __all__ = [
     "quantize_rows",
     "from_packed_rows",
     "qmm",
+    "qmm_sharded",
+    "kn_partitions",
     "stack",
     "packed_nbytes_for_shape",
+    "packed_struct_for_shape",
     "tree_spec",
     "tree_like",
 ]
@@ -132,17 +145,25 @@ class QTensor:
     layout: BlockLayout = dataclasses.field(default_factory=BlockLayout1D)
     shape: tuple = ()           # logical (unpadded) shape
     dtype: str = "float32"      # dequantize output dtype
+    # Logical PartitionSpec (static aux; see docs/sharding.md).  One entry
+    # per payload dim: leading batch dims first, then the layout dims in
+    # LOGICAL axis order (for BlockLayout1D the blocked axis is named at its
+    # logical position; spec() moves it last to match the children).  Set by
+    # with_sharding(); None = no sharding declared.
+    pspec: Any = None
 
     # -- pytree protocol ------------------------------------------------
     def tree_flatten(self):
         return ((self.payload, self.scales, self.scale32),
-                (self.method, self.layout, self.shape, self.dtype))
+                (self.method, self.layout, self.shape, self.dtype,
+                 self.pspec))
 
     @classmethod
     def tree_unflatten(cls, aux, children):
         payload, scales, scale32 = children
-        method, layout, shape, dtype = aux
-        return cls(payload, scales, scale32, method, layout, shape, dtype)
+        method, layout, shape, dtype, pspec = aux
+        return cls(payload, scales, scale32, method, layout, shape, dtype,
+                   pspec)
 
     # -- storage accounting ---------------------------------------------
     @property
@@ -164,6 +185,82 @@ class QTensor:
         expected = (len(self.shape) if isinstance(self.layout, BlockLayout1D)
                     else 2)
         return self.payload.ndim - expected
+
+    # -- sharding (docs/sharding.md) -------------------------------------
+    def _norm_entries(self, pspec) -> list:
+        """Logical spec entries, one per payload dim (trailing ``None``s
+        filled in, over-long specs rejected)."""
+        entries = [] if pspec is None else list(pspec)
+        want = self.payload.ndim
+        if len(entries) > want:
+            raise ValueError(
+                f"spec {pspec} has {len(entries)} entries but this QTensor "
+                f"has {want} dims ({self._n_batch_dims()} batch + layout)")
+        return entries + [None] * (want - len(entries))
+
+    def spec(self, pspec, *, axis_sizes: Mapping[str, int] | None = None
+             ) -> dict:
+        """Derive consistent child ``PartitionSpec``s from a logical spec.
+
+        ``pspec`` names mesh axes for the *logical* dims (batch dims first);
+        the result co-shards ``payload`` and ``scales`` identically —
+        sharding a blocked dim moves whole scale blocks, never nibbles —
+        and maps the batch dims onto ``scale32``.  With ``axis_sizes``
+        (mesh axis name -> size) the block-granularity invariant is
+        enforced: a spec whose shard boundary would split a 16-lane scale
+        block raises ``ValueError``.  Returns
+        ``{"payload": P, "scales": P, "scale32": P}``.
+        """
+        entries = self._norm_entries(pspec)
+        nb = self._n_batch_dims()
+        batch = entries[:nb]
+        if isinstance(self.layout, BlockLayout2D):
+            k_e, n_e = entries[nb], entries[nb + 1]
+            if axis_sizes is not None:
+                kp = 2 * self.payload.shape[-2]
+                np_ = self.payload.shape[-1]
+                _check_block_granularity(k_e, kp, self.layout.bm, "K",
+                                         axis_sizes)
+                _check_block_granularity(n_e, np_, self.layout.bn, "N",
+                                         axis_sizes)
+            body = [k_e, n_e]
+        else:
+            logical = entries[nb:]
+            bidx = self.layout.axis % len(self.shape)
+            blocked = logical[bidx]
+            if axis_sizes is not None:
+                kp = 2 * self.payload.shape[-1]
+                _check_block_granularity(blocked, kp, self.layout.block,
+                                         f"axis {self.layout.axis}",
+                                         axis_sizes)
+            body = logical[:bidx] + logical[bidx + 1:] + [blocked]
+        return {"payload": P(*batch, *body),
+                "scales": P(*batch, *body),
+                "scale32": P(*batch[:self.scale32.ndim])}
+
+    def shardings(self, mesh, pspec) -> "QTensor":
+        """``spec()`` materialized against ``mesh``: a QTensor-shaped
+        template whose children are ``NamedSharding``s (usable wherever a
+        matching pytree of shardings is expected, e.g. checkpoint
+        restore)."""
+        sp = self.spec(pspec, axis_sizes=dict(mesh.shape))
+        return QTensor(NamedSharding(mesh, sp["payload"]),
+                       NamedSharding(mesh, sp["scales"]),
+                       NamedSharding(mesh, sp["scale32"]),
+                       self.method, self.layout, self.shape, self.dtype,
+                       P(*self._norm_entries(pspec)))
+
+    def with_sharding(self, mesh, pspec) -> "QTensor":
+        """Place the packed children onto ``mesh`` under the child
+        shardings derived from logical ``pspec`` (validated at block
+        granularity), and record the normalized ``pspec`` in the static
+        aux so ``qmm``/``qlinear`` can dispatch mesh-aware."""
+        sh = self.shardings(mesh, pspec)
+        return QTensor(jax.device_put(self.payload, sh.payload),
+                       jax.device_put(self.scales, sh.scales),
+                       jax.device_put(self.scale32, sh.scale32),
+                       self.method, self.layout, self.shape, self.dtype,
+                       sh.pspec)
 
     # -- decode ----------------------------------------------------------
     def dequantize(self, dtype=None) -> jax.Array:
@@ -429,6 +526,114 @@ def qmm(x: Union[jax.Array, QTensor], w: Union[jax.Array, QTensor], *,
 
 
 # ---------------------------------------------------------------------------
+# Sharded qmm: packed-operand tensor parallelism (docs/sharding.md)
+# ---------------------------------------------------------------------------
+def _axes_size(entry, axis_sizes: Mapping[str, int]) -> int:
+    """Total shard count a spec entry assigns (product over tuple axes)."""
+    if entry is None:
+        return 1
+    names = entry if isinstance(entry, tuple) else (entry,)
+    n = 1
+    for a in names:
+        if a not in axis_sizes:
+            raise ValueError(f"spec names mesh axis {a!r}, mesh has "
+                             f"{sorted(axis_sizes)}")
+        n *= axis_sizes[a]
+    return n
+
+
+def _check_block_granularity(entry, padded_dim: int, block: int, dim_name,
+                             axis_sizes: Mapping[str, int]):
+    """Reject a spec whose shard boundary would land inside a scale block:
+    the payload/scales co-sharding invariant needs every shard of a blocked
+    dim to be a whole number of ``block``-lane blocks."""
+    size = _axes_size(entry, axis_sizes)
+    if size > 1 and padded_dim % (size * block):
+        raise ValueError(
+            f"sharding {dim_name} (padded {padded_dim}) over {entry!r} "
+            f"({size} shards) would split a {block}-lane scale block; "
+            f"shards must hold whole blocks "
+            f"(need {dim_name} % {size * block} == 0)")
+
+
+def kn_partitions(qt: QTensor) -> tuple:
+    """(K entry, N entry) of a 2-D QTensor's logical ``pspec`` — the last
+    two entries, so a scan-sliced stack (whose leading batch entries are
+    ``None``) reads the same as the unstacked weight."""
+    if qt.pspec is None:
+        return (None, None)
+    e = list(qt.pspec)
+    e = [None] * (2 - len(e)) + e
+    return e[-2], e[-1]
+
+
+def qmm_sharded(x: jax.Array, w: QTensor, *, mesh,
+                interpret: bool | None = None) -> jax.Array:
+    """``qmm`` for a model-parallel packed weight: the W4A16 kernel runs
+    per shard under ``shard_map``, so the payload/scale bytes are never
+    gathered or dequantized to a full dense weight.
+
+    The weight's logical ``pspec`` (see :meth:`QTensor.with_sharding`)
+    selects the plan:
+
+      * N sharded (column-parallel, the serving default): ``x`` is
+        replicated over the model axis, every shard computes its output
+        columns — bitwise-identical to the single-device kernel, since
+        output columns are independent and the K tiling is unchanged.
+      * K sharded (row-parallel): ``x`` is split along K and partial
+        products ``psum`` over the model axis — NOT bitwise-identical to
+        single-device (the K reduction is reassociated), which is why the
+        engine's default serve layout avoids it (docs/sharding.md).
+    """
+    from repro.distributed.sharding import shard_map  # deferred: layering
+
+    if not (isinstance(w.layout, BlockLayout2D) and w.payload.ndim == 2):
+        raise ValueError("qmm_sharded expects an unbatched 2-D-tiled "
+                         "QTensor weight (scan slices stacks first)")
+    if isinstance(x, QTensor):
+        raise ValueError("qmm_sharded serves dense activations (W4A16); "
+                         "sharded W4A4 is a follow-on (ROADMAP)")
+    k_e, n_e = kn_partitions(w)
+    if k_e is None and n_e is None:
+        return qmm(x, w, interpret=interpret)
+    sizes = dict(mesh.shape)
+    ks, ns = _axes_size(k_e, sizes), _axes_size(n_e, sizes)
+    kp2, np_ = w.payload.shape
+    kp = 2 * kp2
+    k_log, n_log = w.shape
+    _check_block_granularity(k_e, kp, w.layout.bm, "K", sizes)
+    _check_block_granularity(n_e, np_, w.layout.bn, "N", sizes)
+    if x.shape[-1] != k_log:
+        raise ValueError(f"qmm_sharded: x K={x.shape[-1]} vs weight "
+                         f"K={k_log}")
+    # pad x to the packed Kp grid OUTSIDE shard_map so a K shard is exact
+    # (padded weight rows decode to exact zeros — same zero terms, in the
+    # same order, as the unsharded dispatcher's internal padding)
+    xk = x
+    if kp != k_log:
+        xk = jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(0, kp - k_log)])
+    n_loc = np_ // ns
+    x_spec = P(*[None] * (x.ndim - 1), k_e)
+    w_spec = P(k_e, n_e)
+
+    def body(xl, wp, ws, w32):
+        k_loc = 2 * wp.shape[0]   # local K, padded-as-logical (see above)
+        qt = QTensor(wp, ws, w32, w.method, w.layout,
+                     (k_loc, n_loc if n_e is not None else n_log), w.dtype)
+        y = qmm(xl, qt, interpret=interpret)
+        if k_e is not None:
+            y = jax.lax.psum(
+                y, k_e if isinstance(k_e, tuple) else (k_e,))
+        return y
+
+    out = shard_map(body, mesh=mesh,
+                    in_specs=(x_spec, w_spec, w_spec, P()),
+                    out_specs=P(*[None] * (x.ndim - 1), n_e))(
+        xk, w.payload, w.scales, w.scale32)
+    return out[..., :n_log] if n_e is not None else out
+
+
+# ---------------------------------------------------------------------------
 # Storage math (abstract — no arrays needed; used by dryrun reports)
 # ---------------------------------------------------------------------------
 def packed_nbytes_for_shape(shape: Sequence[int],
@@ -442,6 +647,43 @@ def packed_nbytes_for_shape(shape: Sequence[int],
     lead = int(math.prod(shape)) // n
     npad = _pad_to(n, layout.block)
     return lead * (npad // 2 + npad // layout.block) + 4
+
+
+def packed_struct_for_shape(shape: Sequence[int],
+                            layout: BlockLayout | None = None, *,
+                            method: str = "mixfp4",
+                            dtype: str = "float32") -> QTensor:
+    """ShapeDtypeStruct-children skeleton of the QTensor that
+    :func:`quantize` / ``models.base.pack_projections`` would build for a
+    dense tensor of ``shape`` — for 2-D layouts, dims ahead of the
+    trailing (K, N) matrix become QTensor batch dims, exactly as
+    ``pack_projections`` stacks them.  The abstract counterpart of
+    :func:`packed_nbytes_for_shape`: no-allocation layout decisions
+    (dryrun reports, serve-spec derivation) work on this skeleton through
+    the same code paths the engine uses on real trees, so the child-shape
+    math has one owner."""
+    layout = layout or BlockLayout2D()
+    sds = jax.ShapeDtypeStruct
+    if isinstance(layout, BlockLayout2D):
+        lead, (k, n) = tuple(shape[:-2]), shape[-2:]
+        kp, np_ = _pad_to(k, layout.bm), _pad_to(n, layout.bn)
+        return QTensor(
+            sds((*lead, kp // 2, np_), jnp.uint8),
+            sds((*lead, kp // layout.bm, np_ // layout.bn), jnp.uint8),
+            sds(lead, jnp.float32),
+            method=method, layout=layout, shape=(k, n), dtype=dtype)
+    n = shape[layout.axis]
+    lead = list(shape)
+    del lead[layout.axis % len(shape)]
+    npad = _pad_to(n, layout.block)
+    axis_neg = (layout.axis if layout.axis < 0
+                else layout.axis - len(shape))
+    return QTensor(
+        sds((*lead, npad // 2), jnp.uint8),
+        sds((*lead, npad // layout.block), jnp.uint8),
+        sds((), jnp.float32),
+        method=method, layout=BlockLayout1D(axis_neg, layout.block),
+        shape=tuple(shape), dtype=dtype)
 
 
 # ---------------------------------------------------------------------------
@@ -459,15 +701,35 @@ def _layout_from_json(d: dict) -> BlockLayout:
     return BlockLayout1D(d["axis"], d["block"])
 
 
+def _pspec_to_json(pspec) -> list | None:
+    if pspec is None:
+        return None
+    return [list(e) if isinstance(e, tuple) else e for e in pspec]
+
+
+def _pspec_from_json(entries) -> Any:
+    if entries is None:
+        return None
+    return P(*[tuple(e) if isinstance(e, list) else e for e in entries])
+
+
 def tree_spec(tree) -> Any:
     """JSON-able structural spec of a (nested dict/list) tree whose leaves
-    are arrays or QTensors — enough to rebuild a restore skeleton."""
+    are arrays or QTensors — enough to rebuild a restore skeleton.  QTensor
+    entries record the child shapes/dtypes (batch dims included) and the
+    logical ``pspec``, so a restore target can derive per-child
+    ``NamedSharding``s before any leaf bytes are read."""
     if isinstance(tree, QTensor):
         return {"__qtensor__": {
             "method": tree.method,
             "layout": _layout_to_json(tree.layout),
             "shape": list(tree.shape),
             "dtype": tree.dtype,
+            "pspec": _pspec_to_json(tree.pspec),
+            "children": {
+                name: {"shape": list(getattr(tree, name).shape),
+                       "dtype": str(getattr(tree, name).dtype)}
+                for name in ("payload", "scales", "scale32")},
         }}
     if isinstance(tree, dict):
         return {"__dict__": {k: tree_spec(v) for k, v in tree.items()}}
@@ -479,13 +741,23 @@ def tree_spec(tree) -> Any:
 
 def tree_like(spec: Any):
     """Inverse of :func:`tree_spec`: a placeholder tree with the same pytree
-    structure (leaf *values* are dummies; checkpoint restore only needs the
-    structure and fills real arrays from the manifest)."""
+    structure.  QTensor children become ``ShapeDtypeStruct``s when the spec
+    recorded their shapes (so sharding derivation works on the skeleton);
+    specs written before child shapes were recorded fall back to dummy
+    ``0`` leaves — checkpoint restore only needs the structure either way."""
     if "__qtensor__" in spec:
         m = spec["__qtensor__"]
-        return QTensor(0, 0, 0, method=m["method"],
+        kids = m.get("children")
+        if kids:
+            children = [jax.ShapeDtypeStruct(tuple(kids[n]["shape"]),
+                                             jnp.dtype(kids[n]["dtype"]))
+                        for n in ("payload", "scales", "scale32")]
+        else:
+            children = [0, 0, 0]
+        return QTensor(*children, method=m["method"],
                        layout=_layout_from_json(m["layout"]),
-                       shape=tuple(m["shape"]), dtype=m["dtype"])
+                       shape=tuple(m["shape"]), dtype=m["dtype"],
+                       pspec=_pspec_from_json(m.get("pspec")))
     if "__dict__" in spec:
         return {k: tree_like(v) for k, v in spec["__dict__"].items()}
     if "__list__" in spec:

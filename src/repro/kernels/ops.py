@@ -2,7 +2,7 @@
 
 On TPU the Pallas kernels compile natively; on CPU (this container) they run
 in interpret mode, which executes the kernel body in Python/XLA-CPU and is
-what the per-kernel allclose tests exercise.  ``pack_weight_kn`` /
+what the per-kernel allclose tests exercise.  ``pack_weight_qt`` /
 ``quantize_rows`` are the packing producers shared by serving and tests.
 """
 from __future__ import annotations
@@ -21,7 +21,6 @@ from repro.kernels.mixfp4_quant import mixfp4_quant_rows
 __all__ = [
     "default_interpret",
     "quantize_rows",
-    "pack_weight_kn",
     "pack_weight_qt",
     "gemm_w4a16",
     "gemm_w4a4",
@@ -46,16 +45,10 @@ def quantize_rows(x: jax.Array, **kw):
     return mixfp4_quant_rows(x, **kw)
 
 
-def pack_weight_kn(w: jax.Array, method: str = "mixfp4",
-                   block: tuple[int, int] = (16, 16)):
-    """DEPRECATED positional-triple shim, kept only for external callers
-    pinned to the historical ``(payload, scales, scale32)`` interface.
-
-    Use :func:`pack_weight_qt` / ``repro.core.qtensor.quantize`` (and route
-    GEMMs through ``qtensor.qmm``) instead; all in-repo call sites have been
-    migrated (docs/qtensor.md migration table).
-    """
-    return ref.ref_pack_weight_kn(w, method, block)
+# pack_weight_kn (the deprecated positional-triple shim) is gone: use
+# pack_weight_qt / qtensor.quantize and route GEMMs through qtensor.qmm
+# (docs/qtensor.md migration table).  The numeric reference it fronted
+# lives on as ref.ref_pack_weight_kn, the kernel-test oracle.
 
 
 def pack_weight_qt(w: jax.Array, method: str = "mixfp4",

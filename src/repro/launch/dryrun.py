@@ -83,19 +83,30 @@ def _f32_like(sds_tree):
 
 
 def packed_weight_report(arch: str, quant_method: str = "mixfp4",
-                         overrides: dict | None = None) -> dict:
+                         overrides: dict | None = None,
+                         model_shards: int = 16) -> dict:
     """Abstract (no-allocation) HBM accounting for the serving weight path:
     bytes for the projection weights dense at bf16 vs held as packed 2-D
-    QTensors (what ServeEngine actually stores)."""
+    QTensors (what ServeEngine actually stores), plus the per-device share
+    under the sharded serve layout.  The shard-or-replicate decision per
+    leaf is made by ``distributed.sharding.serve_packed_specs`` itself —
+    the same function the engine calls — on an abstract skeleton, so the
+    report cannot drift from the layout the engine places
+    (``model_shards`` is the model-axis TP degree; 16 on the production
+    mesh)."""
+    import types
+
+    from repro.distributed.sharding import serve_packed_specs
+
     cfg = configs.full_config(arch).replace(
         quant=QuantConfig(method=quant_method))
     if overrides:
         cfg = cfg.replace(**overrides)
     params_sds, _ = _abstract_init(build_model(cfg))
-    packed = dense = 0
+    mesh = types.SimpleNamespace(shape={"model": model_shards})
+    stats = {"packed": 0, "dense": 0, "per_device": 0, "replicated": 0}
 
     def walk(node):
-        nonlocal packed, dense
         if not isinstance(node, dict):
             return
         for k, v in node.items():
@@ -103,15 +114,28 @@ def packed_weight_report(arch: str, quant_method: str = "mixfp4",
             # counts exactly the leaves ServeEngine converts
             if model_base.is_packable_projection(k, v):
                 n_mats = int(math.prod(v.shape[:-2]))
-                packed += n_mats * qtensor.packed_nbytes_for_shape(
+                leaf = n_mats * qtensor.packed_nbytes_for_shape(
                     v.shape[-2:], qtensor.BlockLayout2D())
-                dense += int(math.prod(v.shape)) * 2
+                stats["packed"] += leaf
+                stats["dense"] += int(math.prod(v.shape)) * 2
+                spec = serve_packed_specs(
+                    {"w": qtensor.packed_struct_for_shape(v.shape)},
+                    mesh)["w"]
+                if any(e is not None for e in spec):
+                    stats["per_device"] += leaf // model_shards
+                else:
+                    stats["per_device"] += leaf
+                    stats["replicated"] += leaf
             else:
                 walk(v)
 
     walk(params_sds)
+    packed, dense = stats["packed"], stats["dense"]
     return {"proj_dense_bf16": dense, "proj_packed_qtensor": packed,
-            "compression": round(dense / packed, 3) if packed else 1.0}
+            "compression": round(dense / packed, 3) if packed else 1.0,
+            "model_shards": model_shards,
+            "proj_packed_per_device": stats["per_device"],
+            "proj_packed_replicated": stats["replicated"]}
 
 
 def build_cell(arch: str, shape_name: str, mesh, multi_pod: bool,

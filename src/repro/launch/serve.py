@@ -4,8 +4,42 @@ requests through the continuous-batching engine (packed MixFP4 weights).
 Usage (CPU demo):
   PYTHONPATH=src python -m repro.launch.serve --arch gemma2-2b --smoke \
       --requests 4 --new-tokens 8
+
+Sharded packed serving dryrun (docs/sharding.md) — projections held as
+model-axis-sharded QTensors, decode bitwise-identical to single-device:
+  PYTHONPATH=src python -m repro.launch.serve --arch gemma2-2b --smoke \
+      --force-host-devices 2 --model-parallel 2
 """
 from __future__ import annotations
+
+import os
+import sys
+
+# --force-host-devices must take effect BEFORE jax initializes (device
+# count locks at first init), so it is peeked off argv here — same pattern
+# as launch/dryrun.py's module-top XLA_FLAGS override.  Both argparse
+# spellings ('--force-host-devices 2' and '--force-host-devices=2') are
+# accepted; malformed values are left for argparse to report properly.
+def _peek_force_host_devices(argv) -> int | None:
+    for i, a in enumerate(argv):
+        val = None
+        if a == "--force-host-devices" and i + 1 < len(argv):
+            val = argv[i + 1]
+        elif a.startswith("--force-host-devices="):
+            val = a.split("=", 1)[1]
+        if val is not None:
+            try:
+                return int(val)
+            except ValueError:
+                return None
+    return None
+
+
+_n = _peek_force_host_devices(sys.argv)
+if _n is not None:
+    os.environ["XLA_FLAGS"] = (
+        f"--xla_force_host_platform_device_count={_n} "
+        + os.environ.get("XLA_FLAGS", ""))
 
 import argparse
 import time
@@ -14,7 +48,9 @@ import jax
 import numpy as np
 
 from repro import configs
+from repro.core import qtensor
 from repro.core.qgemm import QuantConfig
+from repro.launch.mesh import make_host_mesh
 from repro.models.base import build_model, param_count
 from repro.serving.engine import Request, ServeEngine
 
@@ -40,6 +76,14 @@ def main(argv=None):
     ap.add_argument("--save-weights", default=None, metavar="DIR",
                     help="write the packed QTensor weight tree as a "
                          "checkpoint and exit")
+    ap.add_argument("--model-parallel", type=int, default=0, metavar="N",
+                    help="serve SHARDED packed weights on an N-way model "
+                         "axis of the host mesh: payload/scales carry "
+                         "model-axis NamedShardings, decode runs the W4A16 "
+                         "kernel per shard (docs/sharding.md)")
+    ap.add_argument("--force-host-devices", type=int, default=0, metavar="N",
+                    help="fake N host devices (CPU demo of the sharded "
+                         "path; consumed before jax init, see module top)")
     args = ap.parse_args(argv)
 
     cfg = (configs.smoke_config(args.arch) if args.smoke
@@ -50,11 +94,29 @@ def main(argv=None):
     print(f"[serve] {cfg.name}: {param_count(params)/1e6:.1f}M params, "
           f"quant={args.quant}")
 
+    mesh = None
+    if args.model_parallel:
+        if args.no_pack:
+            ap.error("--model-parallel serves sharded PACKED weights; "
+                     "drop --no-pack")
+        mesh = make_host_mesh(model=args.model_parallel)
+        print(f"[serve] host mesh {dict(mesh.shape)}: sharded packed "
+              f"serving (column-parallel projections, expert-sharded MoE "
+              f"stacks; decode bitwise-identical to single-device)")
     engine = ServeEngine(cfg, params, batch_size=args.batch,
                          max_len=args.max_len,
                          pack_weights=not args.no_pack,
-                         kv_quant=args.kv_quant)
+                         kv_quant=args.kv_quant, mesh=mesh)
     del params  # projections now live ONLY as packed QTensors in the engine
+    if mesh is not None:
+        shards = sorted({
+            str(leaf.payload.sharding.spec)
+            for leaf in jax.tree.leaves(
+                engine.params,
+                is_leaf=lambda x: isinstance(x, qtensor.QTensor))
+            if isinstance(leaf, qtensor.QTensor)})
+        print(f"[serve] QTensor payload/scales NamedSharding specs: "
+              f"{shards}")
     if engine.packed_bytes:
         print(f"[serve] projection weights held as packed QTensors: "
               f"{engine.packed_bytes / 1024:.0f} KiB "

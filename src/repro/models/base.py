@@ -267,9 +267,20 @@ def qlinear(x: jax.Array, w, ctx: "Ctx", tag: int) -> jax.Array:
     Dense ``w`` (training): the Fig. 7 qdq-simulated ``qgemm`` with SR/RHT
     on the backward pass.  Packed ``QTensor`` ``w`` (serving): ``qmm``
     serves straight from the 4.5-bit wire format through the W4A16 kernel —
-    no dense copy of the weight ever exists.
+    no dense copy of the weight ever exists.  A packed weight that carries
+    a logical ``pspec`` (``QTensor.with_sharding``) under an active mesh
+    dispatches to ``qmm_sharded``: the kernel runs per model-axis shard
+    under ``shard_map``, keeping the operands packed AND sharded
+    (docs/sharding.md).
     """
     if isinstance(w, qtensor.QTensor):
+        m = _active_mesh()
+        if (m is not None and w.pspec is not None
+                and isinstance(w.layout, qtensor.BlockLayout2D)
+                and w.payload.ndim == 2
+                and not isinstance(x, qtensor.QTensor)
+                and qtensor.kn_partitions(w) != (None, None)):
+            return qtensor.qmm_sharded(x, w, mesh=m).astype(x.dtype)
         return qtensor.qmm(x, w).astype(x.dtype)
     return qgemm(ctx.quant, x, w, jax.random.fold_in(ctx.key, tag))
 

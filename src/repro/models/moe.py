@@ -33,6 +33,7 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.core import qtensor
+from repro.distributed.sharding import shard_map
 from repro.models import base
 from repro.models.base import ArchConfig, Ctx, Param, qlinear
 
@@ -142,10 +143,19 @@ def _expert_ffn(wu, wg, wd, h, key, cfg: ArchConfig, psum_axis=None):
 
 def _moe_local(x, gates, idx, key, wu, wg, wd, *, cfg: ArchConfig,
                m: int, ep: bool, model_axis: str, has_mesh: bool,
-               e_pad: int | None = None):
+               e_pad: int | None = None, packed_metas=None):
     """Per-shard MoE body.  x: (T_loc, D).  ``e_pad`` >= n_experts rounds the
     buffer's expert dim up to a multiple of the model axis (dummy experts
-    receive no tokens; qwen2-moe pads 60 -> 64)."""
+    receive no tokens; qwen2-moe pads 60 -> 64).
+
+    ``packed_metas`` marks packed expert stacks shipped through shard_map
+    as raw ``(payload, scales, scale32)`` child tuples (shard_map in_specs
+    are per-array): each is rebuilt into a QTensor here from its static
+    ``(method, layout, shape, dtype)`` meta, so the quantized expert FFNs
+    run straight off each device's local packed expert bytes."""
+    if packed_metas is not None:
+        wu, wg, wd = (qtensor.QTensor(*children, *meta)
+                      for children, meta in zip((wu, wg, wd), packed_metas))
     t, d = x.shape
     e = cfg.n_experts
     e_pad = e_pad or e
@@ -188,21 +198,36 @@ def moe_apply(p: dict, x: jax.Array, ctx: Ctx, cfg: ArchConfig):
         dta, mdl = ctx.data_axes, ctx.model_axis
         msize = ctx.model_size
         wu, wg, wd = p["w_up"], p["w_gate"], p["w_down"]
-        if isinstance(wu, qtensor.QTensor):
-            # sharded packed experts are a ROADMAP follow-on (PartitionSpec
-            # story for QTensor children); under a mesh, decode through the
-            # dense path for now
+        packed = isinstance(wu, qtensor.QTensor)
+        if packed and cfg.ep_mode != "expert":
+            # ffn-TP splits the expert matrices along d_ff (row-parallel
+            # w_down), which the packed shard_map path does not cover yet
+            # (ROADMAP); serve this mode dense under a mesh
             wu, wg, wd = wu.dequantize(), wg.dequantize(), wd.dequantize()
+            packed = False
         e_pad = None
+        packed_metas = None
         if ep:
             # weights are stored pre-padded to a multiple of 16 (moe_init);
-            # pad further only if the mesh demands it
-            e_pad = -(-wu.shape[0] // msize) * msize
-            if e_pad != wu.shape[0]:
-                padn = e_pad - wu.shape[0]
-                wu = jnp.pad(wu, ((0, padn), (0, 0), (0, 0)))
-                wg = jnp.pad(wg, ((0, padn), (0, 0), (0, 0)))
-                wd = jnp.pad(wd, ((0, padn), (0, 0), (0, 0)))
+            # pad further only if the mesh demands it.  Packed stacks pad
+            # their child bytes: zero payload/scales/scale32 decode (and
+            # qmm) to exact zeros, so dummy experts stay inert.
+            e_store = _n_experts(wu)
+            e_pad = -(-e_store // msize) * msize
+            if e_pad != e_store:
+                padn = e_pad - e_store
+                if packed:
+                    wu, wg, wd = (
+                        qtensor.QTensor(
+                            jnp.pad(w_.payload, ((0, padn),) + ((0, 0),) * 2),
+                            jnp.pad(w_.scales, ((0, padn),) + ((0, 0),) * 2),
+                            jnp.pad(w_.scale32, ((0, padn),)),
+                            w_.method, w_.layout, w_.shape, w_.dtype)
+                        for w_ in (wu, wg, wd))
+                else:
+                    wu = jnp.pad(wu, ((0, padn), (0, 0), (0, 0)))
+                    wg = jnp.pad(wg, ((0, padn), (0, 0), (0, 0)))
+                    wd = jnp.pad(wd, ((0, padn), (0, 0), (0, 0)))
             # tokens re-shard over every chip: each dispatches a distinct
             # slice; pad T to the shard count (pads route to expert 0 with
             # zero gate).
@@ -216,7 +241,19 @@ def moe_apply(p: dict, x: jax.Array, ctx: Ctx, cfg: ArchConfig):
                 gates = jnp.pad(gates, ((0, pad), (0, 0)))
                 idx = jnp.pad(idx, ((0, pad), (0, 0)))
             tok_spec = P(tok_axes, None)
-            wspec = P(mdl, None, None)
+            if packed:
+                # ship the packed children (shard_map in_specs are
+                # per-array): whole experts shard over the model axis —
+                # E is a QTensor batch dim, so payload/scales/scale32 all
+                # shard on dim 0 and K/N tiles stay intact per expert
+                packed_metas = tuple(
+                    (w_.method, w_.layout, w_.shape, w_.dtype)
+                    for w_ in (wu, wg, wd))
+                wu, wg, wd = ((w_.payload, w_.scales, w_.scale32)
+                              for w_ in (wu, wg, wd))
+                wspec = (P(mdl, None, None), P(mdl, None, None), P(mdl))
+            else:
+                wspec = P(mdl, None, None)
             in_specs = (tok_spec, tok_spec, tok_spec, P(),
                         wspec, wspec, wspec)
             out_spec = tok_spec
@@ -231,10 +268,10 @@ def moe_apply(p: dict, x: jax.Array, ctx: Ctx, cfg: ArchConfig):
             out_spec = tok_spec
 
         body = partial(_moe_local, cfg=cfg, m=msize, ep=ep,
-                       model_axis=mdl, has_mesh=True, e_pad=e_pad)
-        out = jax.shard_map(
+                       model_axis=mdl, has_mesh=True, e_pad=e_pad,
+                       packed_metas=packed_metas)
+        out = shard_map(
             body, mesh=ctx.mesh, in_specs=in_specs, out_specs=out_spec,
-            check_vma=False,
         )(xt, gates.astype(x.dtype), idx, ctx.key, wu, wg, wd)
         out = out[:t]
 

@@ -188,8 +188,16 @@ class TransformerLM:
         return {"k": packed(), "v": packed()}
 
     def cache_specs(self):
-        # cache shards over *sequence* on the model axis: no head-padding
-        # waste for small GQA kv counts, flash-decoding style reads
+        """Dense-cache PartitionSpecs for the dryrun serve cells: shard
+        over *sequence* on the model axis — no head-padding waste for
+        small GQA kv counts, flash-decoding style reads.
+
+        The PACKED cache (``kv_quant="mixfp4"``) has no spec here yet:
+        ``ServeEngine(mesh=...)`` replicates it (docs/serving.md).  The
+        QTensor contract already admits the same sequence-axis sharding
+        (S is a lead dim of the packed rows, docs/sharding.md); routing
+        it through the fused decode-attention kernel is the open
+        sharded-packed-KV ROADMAP item."""
         spec = P(None, "data", "model", None, None)
         return {"k": spec, "v": spec}
 

@@ -23,9 +23,20 @@ Two hot paths run over packed data end-to-end (docs/serving.md):
   the W4A16 kernels, writing all cache rows at once, instead of the
   historical O(prompt_len) token-by-token decode replay (which also needed
   a snapshot/restore dance to keep recurrent batchmates unperturbed).
+
+With ``mesh=`` the engine serves *sharded* packed weights
+(docs/sharding.md): every projection QTensor is placed under model-axis
+``NamedSharding``s derived by ``distributed.sharding.serve_packed_specs``
+(column-parallel N-sharding; MoE expert stacks shard whole experts), decode
+runs the W4A16 kernel per shard via ``qmm_sharded``/``shard_map``, and the
+layout is chosen so the output stream stays bitwise-identical to the
+single-device packed path.  ``load_weights`` restores a packed checkpoint
+straight into the sharded layout.  The KV cache is replicated for now —
+its PartitionSpec story is the open ROADMAP item (docs/serving.md).
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 from typing import Any
 
@@ -35,6 +46,7 @@ import numpy as np
 
 from repro.checkpoint.manager import CheckpointManager
 from repro.core import qtensor
+from repro.distributed import sharding as dist_sharding
 from repro.models.base import ArchConfig, Ctx, build_model, pack_projections
 
 _TRANSFORMER_FAMILIES = ("dense", "moe", "vlm")
@@ -71,7 +83,8 @@ class ServeEngine:
 
     def __init__(self, cfg: ArchConfig, params, *, batch_size: int = 8,
                  max_len: int = 512, pack_weights: bool = True,
-                 method: str = "mixfp4", kv_quant: str | None = None):
+                 method: str = "mixfp4", kv_quant: str | None = None,
+                 mesh=None):
         if cfg.family == "encdec":
             raise ValueError(
                 "ServeEngine has no source-encoding path (requests carry "
@@ -85,18 +98,33 @@ class ServeEngine:
             raise ValueError(
                 f"kv_quant='mixfp4' packs the transformer KV cache; family "
                 f"{cfg.family!r} has no (or not only) a KV cache to pack")
+        if mesh is not None and not pack_weights:
+            raise ValueError(
+                "mesh serving is the sharded *packed* path (QTensor "
+                "payload/scales under model-axis NamedShardings); "
+                "pack_weights=False has no sharded serve layout")
         self.cfg = cfg
         self.model = build_model(cfg)
         self.batch_size = batch_size
         self.max_len = max_len
         self.kv_quant = kv_quant or "bf16"
-        self.ctx = Ctx(jax.random.PRNGKey(0), cfg.quant)
+        self.mesh = mesh
+        self.ctx = Ctx(jax.random.PRNGKey(0), cfg.quant, mesh=mesh)
         if pack_weights:
             # Projection weights become packed QTensors; the dense leaves
             # are dropped from this tree (callers should release their own
             # reference if they want the full HBM saving).
             self.params, self.packed_bytes, self.dense_bytes = \
                 pack_projections(params, method=method)
+            if mesh is not None:
+                # model-axis TP placement: payload/scales co-sharded at
+                # block granularity, logical pspec recorded in the aux so
+                # qlinear dispatches qmm_sharded; dense leaves (embed,
+                # norms — the paper's exclusions) replicate
+                self.weight_specs = dist_sharding.serve_packed_specs(
+                    self.params, mesh)
+                self.params = dist_sharding.shard_packed_tree(
+                    self.params, self.weight_specs, mesh)
         else:
             self.params = params
             self.packed_bytes = self.dense_bytes = 0
@@ -117,6 +145,12 @@ class ServeEngine:
         # (prefill shapes — bucket/pad prompts upstream if that matters)
         self._prefill = jax.jit(
             lambda p, t, c, i: self.model.prefill_slot(p, t, self.ctx, c, i))
+
+    def _mesh_ctx(self):
+        """Ambient-mesh context for jit traces: activates the models'
+        ``shard()`` constraints and the mesh-aware ``qlinear`` dispatch
+        (no-op for single-device engines)."""
+        return self.mesh if self.mesh is not None else contextlib.nullcontext()
 
     # ------------------------------------------------------------------
     # storage accounting
@@ -140,7 +174,40 @@ class ServeEngine:
                                                 blocking=True)
 
     def load_weights(self, directory: str, step: int | None = None):
-        restored, _ = CheckpointManager(directory).restore_packed(step)
+        """Restore a packed checkpoint; a mesh engine restores each leaf
+        *directly* into the sharded serve layout (per-child NamedShardings
+        derived from the manifest's structural spec before any leaf bytes
+        are read — no replicated intermediate tree)."""
+        mgr = CheckpointManager(directory)
+        if self.mesh is None:
+            restored, _ = mgr.restore_packed(step)
+        else:
+            step, spec = mgr.packed_spec(step)
+            like = qtensor.tree_like(spec)
+            qt_leaves = [l for l in jax.tree.leaves(
+                like, is_leaf=lambda x: isinstance(x, qtensor.QTensor))
+                if isinstance(l, qtensor.QTensor)]
+            if all(isinstance(q.payload, jax.ShapeDtypeStruct)
+                   for q in qt_leaves):
+                # manifest records child shapes: derive per-child
+                # NamedShardings up front and restore each leaf straight
+                # onto its shards (no replicated intermediate)
+                specs = dist_sharding.serve_packed_specs(like, self.mesh)
+                shardings = dist_sharding.packed_restore_shardings(
+                    like, specs, self.mesh)
+                restored, _ = mgr.restore_packed(step, shardings=shardings)
+            else:
+                # pre-child-shape manifest (dummy-leaf skeleton): restore
+                # replicated first, then derive the layout from the
+                # concrete tree and move the leaves
+                restored, _ = mgr.restore_packed(step)
+                specs = dist_sharding.serve_packed_specs(restored, self.mesh)
+            # re-placing is a no-op move for already-placed leaves; it
+            # restamps each QTensor's aux pspec to THIS engine's layout
+            # (the checkpoint may have been saved under a different one)
+            restored = dist_sharding.shard_packed_tree(restored, specs,
+                                                       self.mesh)
+            self.weight_specs = specs
         self.params = restored
         # recompute storage stats from what was actually restored (a cold
         # engine built with pack_weights=False would otherwise keep 0/1.0)
@@ -182,8 +249,9 @@ class ServeEngine:
         admission is invisible to its batchmates for all families with no
         snapshot/restore."""
         tokens = jnp.asarray(np.asarray(req.prompt, np.int32)[None, :])
-        logits, self.cache = self._prefill(
-            self.params, tokens, self.cache, jnp.int32(i))
+        with self._mesh_ctx():
+            logits, self.cache = self._prefill(
+                self.params, tokens, self.cache, jnp.int32(i))
         self.lengths[i] = len(req.prompt)
         req._next = int(jnp.argmax(logits[0]))
         self.prefill_dispatches += 1
@@ -218,9 +286,10 @@ class ServeEngine:
             active.append(i)
         if not active:
             return out
-        logits, self.cache = self._decode(
-            self.params, jnp.asarray(toks), self.cache,
-            jnp.asarray(self.lengths.copy()))
+        with self._mesh_ctx():
+            logits, self.cache = self._decode(
+                self.params, jnp.asarray(toks), self.cache,
+                jnp.asarray(self.lengths.copy()))
         # one vectorized argmax + host transfer per step, not one per slot
         next_toks = np.asarray(jnp.argmax(logits, axis=-1))
         for i in active:

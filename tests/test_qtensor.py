@@ -201,9 +201,11 @@ def test_stack_matches_vmap_quantize():
 
 
 def test_ops_pack_weight_qt_matches_quantize():
-    """The kernels-side producer shim must stay bit-identical to the real
-    path it fronts (docs migration table: pack_weight_kn -> pack_weight_qt)."""
+    """The kernels-side producer must stay bit-identical to the real path
+    it fronts (the deprecated pack_weight_kn triple shim is REMOVED; only
+    pack_weight_qt remains — docs/qtensor.md migration table)."""
     from repro.kernels import ops
+    assert not hasattr(ops, "pack_weight_kn")
     w = _rand((32, 48), 17, 0.3)
     a = ops.pack_weight_qt(w)
     b = quantize(w, QuantSpec("mixfp4", BlockLayout2D()))

@@ -1,0 +1,167 @@
+"""Sharded packed serving on a REAL >=2-device host mesh (ISSUE 3
+acceptance): projection weights — including the 4-D scan-stacked MoE
+expert stacks — held as sharded packed QTensors with model-axis
+NamedShardings on payload/scales, no dense bf16 weight materialization,
+decode bitwise-identical to the single-device packed path, and packed
+checkpoints restoring straight into the sharded layout.
+
+Multi-device CPU needs ``--xla_force_host_platform_device_count`` set
+before jax initializes, so these run in a subprocess (same pattern as the
+elastic-restore test) and are slow-tier; the degenerate 1-device versions
+of the same invariants run in the fast tier (tests/test_sharding.py)."""
+import os
+import subprocess
+import sys
+
+import pytest
+
+_COMMON = """
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+import jax, jax.numpy as jnp, numpy as np
+from repro.core import qtensor
+from repro.core.qgemm import QuantConfig
+from repro.launch.mesh import make_host_mesh
+from repro.models.base import ArchConfig, build_model
+from repro.serving.engine import Request, ServeEngine
+
+assert jax.device_count() == 2
+mesh = make_host_mesh(model=2)
+
+def serve(eng, prompt, n):
+    eng.add_request(Request(uid=0, prompt=np.asarray(prompt, np.int32),
+                            max_new_tokens=n))
+    toks = []
+    while any(s is not None for s in eng.slots):
+        toks.extend(t for _, t in eng.step())
+    return toks
+
+def assert_sharded_packed(eng):
+    from repro.models.base import PROJECTION_KEYS
+    n_model_sharded = 0
+    def walk(node):
+        nonlocal n_model_sharded
+        for k, v in node.items():
+            if k in PROJECTION_KEYS:
+                assert isinstance(v, qtensor.QTensor), (k, type(v))
+                assert v.payload.dtype == jnp.uint8
+                spec = v.payload.sharding.spec
+                assert v.payload.sharding == v.scales.sharding  # co-sharded
+                if "model" in str(spec):
+                    assert len(v.payload.sharding.device_set) == 2
+                    n_model_sharded += 1
+            elif isinstance(v, dict):
+                walk(v)
+    walk(eng.params)
+    assert n_model_sharded > 0, "no projection carries a model-axis sharding"
+"""
+
+
+def _run(body: str, timeout: int = 600) -> str:
+    env = dict(os.environ, PYTHONPATH="src")
+    env.pop("JAX_PLATFORMS", None)
+    out = subprocess.run([sys.executable, "-c", _COMMON + body],
+                         capture_output=True, text=True, env=env,
+                         cwd=os.path.dirname(os.path.dirname(
+                             os.path.abspath(__file__))),
+                         timeout=timeout)
+    assert out.returncode == 0, out.stdout[-2000:] + out.stderr[-4000:]
+    return out.stdout
+
+
+@pytest.mark.slow
+def test_sharded_serve_bitwise_dense_and_packed_kv():
+    """Dense family, bf16 + packed-mixfp4 KV cache: the 2-device sharded
+    engine's greedy stream AND raw decode logits are bitwise-identical to
+    the single-device packed engine."""
+    body = """
+cfg = ArchConfig(name="shard-e2e", family="dense", n_layers=2, d_model=64,
+                 n_heads=2, n_kv_heads=2, d_ff=128, vocab=64, attn_chunk=64,
+                 quant=QuantConfig(method="mixfp4"))
+params, _ = build_model(cfg).init(jax.random.PRNGKey(0))
+for kv in (None, "mixfp4"):
+    ref = ServeEngine(cfg, params, batch_size=1, max_len=32, kv_quant=kv)
+    eng = ServeEngine(cfg, params, batch_size=1, max_len=32, kv_quant=kv,
+                      mesh=mesh)
+    assert_sharded_packed(eng)
+    a = serve(ref, [3, 1, 4, 1, 5], 5)
+    b = serve(eng, [3, 1, 4, 1, 5], 5)
+    assert a == b, (kv, a, b)
+    l0, _ = ref._decode(ref.params, jnp.array([7], jnp.int32), ref.cache,
+                        jnp.asarray(ref.lengths))
+    with mesh:
+        l1, _ = eng._decode(eng.params, jnp.array([7], jnp.int32),
+                            eng.cache, jnp.asarray(eng.lengths))
+    np.testing.assert_array_equal(np.asarray(l0), np.asarray(l1))
+print("SHARDED_BITWISE_OK")
+"""
+    assert "SHARDED_BITWISE_OK" in _run(body)
+
+
+@pytest.mark.slow
+def test_sharded_serve_moe_expert_stacks():
+    """The 4-D scan-stacked MoE expert weights serve as sharded packed
+    QTensors (whole experts per device, shipped packed through shard_map)
+    with a bitwise-identical stream.  capacity_factor is raised so no
+    token drops: per-shard capacity differs from single-device, and a
+    drop on one path but not the other is the one legitimate divergence
+    of the EP layout (docs/sharding.md)."""
+    body = """
+from repro import configs
+cfg = configs.smoke_config("qwen3-moe-30b-a3b").replace(
+    quant=QuantConfig(method="mixfp4"), capacity_factor=8.0)
+params, _ = build_model(cfg).init(jax.random.PRNGKey(5))
+ref = ServeEngine(cfg, params, batch_size=1, max_len=16)
+eng = ServeEngine(cfg, params, batch_size=1, max_len=16, mesh=mesh)
+assert_sharded_packed(eng)
+wu = eng.params["layers"]["moe"]["w_up"]
+assert wu.payload.ndim == 4                      # (L, E, Kp/2, Np)
+assert "model" in str(wu.payload.sharding.spec)  # expert dim sharded
+a = serve(ref, [3, 4, 5], 3)
+b = serve(eng, [3, 4, 5], 3)
+assert a == b, (a, b)
+print("SHARDED_MOE_OK")
+"""
+    assert "SHARDED_MOE_OK" in _run(body)
+
+
+@pytest.mark.slow
+def test_sharded_checkpoint_restores_into_layout(tmp_path):
+    """A packed checkpoint restores STRAIGHT into the sharded layout
+    (per-child NamedShardings derived from the manifest spec before any
+    leaf bytes are read), leaves bit-identical, and still decodes; a
+    single-device engine can read the same checkpoint."""
+    body = f"""
+d = {str(tmp_path)!r}
+cfg = ArchConfig(name="shard-ckpt", family="dense", n_layers=2, d_model=64,
+                 n_heads=2, n_kv_heads=2, d_ff=128, vocab=64, attn_chunk=64,
+                 quant=QuantConfig(method="mixfp4"))
+params, _ = build_model(cfg).init(jax.random.PRNGKey(0))
+warm = ServeEngine(cfg, params, batch_size=1, max_len=16, mesh=mesh)
+warm.save_weights(d)
+cold = ServeEngine(cfg, params, batch_size=1, max_len=16, mesh=mesh)
+cold.load_weights(d)
+assert_sharded_packed(cold)
+for x, y in zip(jax.tree.leaves(warm.params), jax.tree.leaves(cold.params)):
+    np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+assert serve(cold, [1, 2], 2) == serve(warm, [1, 2], 2)
+single = ServeEngine(cfg, params, batch_size=1, max_len=16)
+single.load_weights(d)
+print("SHARDED_RESTORE_OK")
+"""
+    assert "SHARDED_RESTORE_OK" in _run(body)
+
+
+@pytest.mark.slow
+def test_docs_smoke_runner():
+    """The CI docs-smoke leg's exact entry point: every fenced Python
+    block in docs/*.md executes on the faked 2-device host."""
+    env = dict(os.environ, PYTHONPATH="src")
+    env.pop("JAX_PLATFORMS", None)
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    out = subprocess.run(
+        [sys.executable, os.path.join(root, "tools", "docs_smoke.py")],
+        capture_output=True, text=True, env=env, cwd=root, timeout=600)
+    assert out.returncode == 0, out.stdout[-2000:] + out.stderr[-4000:]
+    assert "0 failures" in out.stdout

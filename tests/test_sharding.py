@@ -1,0 +1,316 @@
+"""The QTensor PartitionSpec contract (docs/sharding.md) and the dense
+spec-hygiene helpers: child-spec derivation, payload/scales co-sharding,
+16-lane block-granularity rejection, serve-layout derivation, and the
+``sanitize_specs`` edge cases (rank mismatch, non-divisible dims, tuple
+axes).  Multi-device execution lives in tests/test_serving_sharded.py
+(subprocess, forced host devices); everything here is pure spec logic
+plus 1-device placement, so it stays in the fast tier."""
+import types
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.core import qtensor
+from repro.core.qtensor import BlockLayout1D, BlockLayout2D, QuantSpec
+from repro.distributed import sharding as dsh
+from repro.launch.mesh import make_host_mesh
+
+
+def _fake_mesh(**shape):
+    """sanitize_specs / serve_packed_specs only read ``mesh.shape`` — a
+    namespace stands in for a real (device-backed) mesh."""
+    return types.SimpleNamespace(shape=shape)
+
+
+def _qt2d(k=64, n=96, seed=0):
+    w = jax.random.normal(jax.random.PRNGKey(seed), (k, n)) * 0.1
+    return qtensor.quantize(w, QuantSpec("mixfp4", BlockLayout2D()))
+
+
+# ---------------------------------------------------------------------------
+# sanitize_specs edge cases
+# ---------------------------------------------------------------------------
+def test_sanitize_specs_rank_mismatch():
+    mesh = _fake_mesh(data=2, model=2)
+    sds = {"w": jax.ShapeDtypeStruct((8, 4), jnp.float32)}
+    # over-long: trailing entries beyond the rank are dropped
+    out = dsh.sanitize_specs({"w": P("data", None, "model")}, sds, mesh)
+    assert out["w"] == P("data", None)
+    # short: right-padded with None
+    out = dsh.sanitize_specs({"w": P("data")}, sds, mesh)
+    assert out["w"] == P("data", None)
+    # None spec -> fully replicated
+    out = dsh.sanitize_specs({"w": None}, sds, mesh)
+    assert out["w"] == P()
+
+
+def test_sanitize_specs_non_divisible_replicates():
+    mesh = _fake_mesh(data=4, model=3)
+    sds = {"w": jax.ShapeDtypeStruct((8, 7), jnp.float32)}
+    out = dsh.sanitize_specs({"w": P("data", "model")}, sds, mesh)
+    assert out["w"] == P("data", None)  # 7 % 3 != 0 -> replicated dim
+
+
+def test_sanitize_specs_tuple_axes():
+    mesh = _fake_mesh(pod=2, data=4, model=2)
+    sds = {"w": jax.ShapeDtypeStruct((16, 6), jnp.float32)}
+    # ('pod','data') divides 16 (8 shards); ('pod','data') on 6 does not
+    out = dsh.sanitize_specs(
+        {"w": P(("pod", "data"), "model")}, sds, mesh)
+    assert out["w"] == P(("pod", "data"), "model")
+    sds2 = {"w": jax.ShapeDtypeStruct((6, 16), jnp.float32)}
+    out2 = dsh.sanitize_specs(
+        {"w": P(("pod", "data"), "model")}, sds2, mesh)
+    assert out2["w"] == P(None, "model")
+
+
+# ---------------------------------------------------------------------------
+# QTensor.spec: child derivation + co-sharding invariant
+# ---------------------------------------------------------------------------
+def test_spec_2d_cosharded_children():
+    qt = _qt2d()
+    sp = qt.spec(P(None, "model"))
+    assert sp["payload"] == sp["scales"] == P(None, "model")
+    assert sp["scale32"] == P()
+    sp = qt.spec(P("model", None))
+    assert sp["payload"] == sp["scales"] == P("model", None)
+
+
+def test_spec_short_and_overlong():
+    qt = _qt2d()
+    assert qt.spec(P("model"))["payload"] == P("model", None)
+    assert qt.spec(None)["payload"] == P(None, None)
+    with pytest.raises(ValueError, match="entries"):
+        qt.spec(P(None, None, "model"))
+
+
+def test_spec_stacked_batch_dims():
+    """A scan-stacked weight (lead layer dim) maps its batch entry onto
+    every child, incl. scale32."""
+    qt = _qt2d(64, 96, 1)
+    stacked = qtensor.stack([qt, qt])
+    sp = stacked.spec(P(None, None, "model"))
+    assert sp["payload"] == P(None, None, "model")
+    assert sp["scales"] == P(None, None, "model")
+    assert sp["scale32"] == P(None)
+    # expert-style batch sharding
+    sp = stacked.spec(P("model", None, None))
+    assert sp["payload"] == P("model", None, None)
+    assert sp["scale32"] == P("model")
+
+
+def test_spec_1d_blocked_axis_moves_last():
+    """BlockLayout1D specs are written in LOGICAL axis order; the blocked
+    axis entry lands on the packed last dim of the children."""
+    x = jax.random.normal(jax.random.PRNGKey(2), (8, 64))
+    qt = qtensor.quantize(x, QuantSpec("mixfp4", BlockLayout1D(axis=-1)))
+    sp = qt.spec(P("data", "model"), axis_sizes={"data": 2, "model": 2})
+    assert sp["payload"] == P("data", "model")
+    assert sp["scales"] == P("data", "model")
+
+
+def test_spec_block_granularity_rejection():
+    """Acceptance (ISSUE 3): a spec that would split a 16-lane scale block
+    is rejected — for 2-D K and N dims and for the 1-D blocked axis."""
+    qt = _qt2d(64, 96)
+    with pytest.raises(ValueError, match="scale block"):
+        qt.spec(P("model", None), axis_sizes={"model": 3})  # 64 % 48 != 0
+    with pytest.raises(ValueError, match="scale block"):
+        qt.spec(P(None, "model"), axis_sizes={"model": 4})  # 96 % 64 != 0
+    # divisible sizes pass
+    qt.spec(P("model", "model2"), axis_sizes={"model": 2, "model2": 2})
+
+    x = jax.random.normal(jax.random.PRNGKey(3), (8, 32))
+    q1 = qtensor.quantize(x, QuantSpec("mixfp4", BlockLayout1D(axis=-1)))
+    with pytest.raises(ValueError, match="scale block"):
+        q1.spec(P(None, "model"), axis_sizes={"model": 4})  # 32 % 64 != 0
+    q1.spec(P("model", None), axis_sizes={"model": 4})  # lead dim: free
+
+
+def test_spec_tuple_axes_granularity():
+    qt = _qt2d(64, 96)
+    # ('a','b') = 6 shards on N=96: 96 % (6*16) == 0 -> ok
+    sp = qt.spec(P(None, ("a", "b")), axis_sizes={"a": 2, "b": 3})
+    assert sp["payload"] == P(None, ("a", "b"))
+    # 8 shards on N=96: 96 % (8*16) != 0 -> a block would split
+    with pytest.raises(ValueError, match="scale block"):
+        qt.spec(P(None, ("a", "b")), axis_sizes={"a": 4, "b": 2})
+    with pytest.raises(ValueError, match="mesh has"):
+        qt.spec(P(None, "ghost"), axis_sizes={"model": 2})
+
+
+# ---------------------------------------------------------------------------
+# with_sharding + mesh-aware qmm on the 1-device host mesh (fast tier:
+# exercises the full dispatch path; real >=2-device runs are slow-tier)
+# ---------------------------------------------------------------------------
+def test_with_sharding_records_normalized_pspec():
+    mesh = make_host_mesh(model=1)
+    qt = _qt2d()
+    sh = qt.with_sharding(mesh, P(None, "model"))
+    assert sh.pspec == P(None, "model")
+    assert qtensor.kn_partitions(sh) == (None, "model")
+    assert "model" in str(sh.payload.sharding.spec)
+    assert sh.payload.sharding == sh.scales.sharding
+    np.testing.assert_array_equal(np.asarray(sh.dequantize()),
+                                  np.asarray(qt.dequantize()))
+
+
+def test_kn_partitions_survive_scan_slicing():
+    """The logical pspec is static aux: scan slicing the stacked children
+    keeps it, and the trailing (K, N) entries still read correctly."""
+    mesh = make_host_mesh(model=1)
+    stacked = qtensor.stack([_qt2d(), _qt2d(k=64, n=96, seed=9)])
+    sh = stacked.with_sharding(mesh, P(None, None, "model"))
+
+    def body(c, qt_layer):
+        assert qtensor.kn_partitions(qt_layer) == (None, "model")
+        return c, None
+
+    jax.lax.scan(body, 0, sh)
+
+
+@pytest.mark.parametrize("pspec", [P(None, "model"), P("model", None)])
+def test_qmm_sharded_matches_qmm(pspec):
+    mesh = make_host_mesh(model=1)
+    qt = _qt2d(48, 96, 5)  # padded K: 48 -> 48 (16-mult), N 96
+    sh = qt.with_sharding(mesh, pspec)
+    x = jax.random.normal(jax.random.PRNGKey(6), (4, 48))
+    y0 = qtensor.qmm(x, qt, interpret=True)
+    y1 = qtensor.qmm_sharded(x, sh, mesh=mesh, interpret=True)
+    np.testing.assert_allclose(np.asarray(y0), np.asarray(y1), rtol=1e-6)
+    if pspec == P(None, "model"):  # column-parallel: bitwise contract
+        np.testing.assert_array_equal(np.asarray(y0), np.asarray(y1))
+
+
+def test_qmm_sharded_replicated_pspec_falls_through():
+    mesh = make_host_mesh(model=1)
+    qt = _qt2d()
+    sh = qt.with_sharding(mesh, P())
+    x = jax.random.normal(jax.random.PRNGKey(7), (4, 64))
+    y = qtensor.qmm_sharded(x, sh, mesh=mesh, interpret=True)
+    np.testing.assert_array_equal(
+        np.asarray(y), np.asarray(qtensor.qmm(x, qt, interpret=True)))
+
+
+# ---------------------------------------------------------------------------
+# serve layout derivation + placement helpers
+# ---------------------------------------------------------------------------
+def _packed_smoke_tree():
+    from repro.models.base import pack_projections
+    tree = {"layers": {
+        "attn": {"wq": jnp.ones((2, 32, 64)),      # (L, K, N) stack
+                 "ln": jnp.ones((2, 32))},
+        "moe": {"w_up": jnp.ones((2, 4, 32, 64))}  # (L, E, K, N) experts
+    }}
+    packed, _, _ = pack_projections(tree)
+    return packed
+
+
+def test_serve_packed_specs_layout():
+    packed = _packed_smoke_tree()
+    specs = dsh.serve_packed_specs(packed, _fake_mesh(data=1, model=2))
+    # 2-D stacks: column-parallel N-sharding
+    assert specs["layers"]["attn"]["wq"] == P(None, None, "model")
+    # expert stacks: whole experts over the model axis
+    assert specs["layers"]["moe"]["w_up"] == P(None, "model", None, None)
+    # dense leaves replicate
+    assert specs["layers"]["attn"]["ln"] == P()
+
+
+def test_serve_packed_specs_falls_back_to_replication():
+    """Dims the axis cannot divide at block granularity replicate rather
+    than error (the engine must come up on any mesh)."""
+    packed = _packed_smoke_tree()
+    specs = dsh.serve_packed_specs(packed, _fake_mesh(data=1, model=3))
+    assert specs["layers"]["attn"]["wq"] == P()   # 64 % (3*16) != 0
+    assert specs["layers"]["moe"]["w_up"] == P()  # 4 % 3 != 0
+
+
+def test_shard_packed_tree_places_and_stamps():
+    packed = _packed_smoke_tree()
+    mesh = make_host_mesh(model=1)
+    specs = dsh.serve_packed_specs(packed, mesh)
+    placed = dsh.shard_packed_tree(packed, specs, mesh)
+    wq = placed["layers"]["attn"]["wq"]
+    assert wq.pspec == P(None, None, "model")
+    assert "model" in str(wq.payload.sharding.spec)
+    # dense leaves replicated, values untouched
+    np.testing.assert_array_equal(
+        np.asarray(placed["layers"]["attn"]["ln"]),
+        np.asarray(packed["layers"]["attn"]["ln"]))
+
+
+def test_packed_restore_shardings_from_tree_like():
+    """The checkpoint skeleton (tree_like of a tree_spec) carries child
+    ShapeDtypeStructs, enough to derive per-child NamedShardings without
+    reading any leaf bytes."""
+    from jax.sharding import NamedSharding
+    packed = _packed_smoke_tree()
+    spec_json = qtensor.tree_spec(packed)
+    like = qtensor.tree_like(spec_json)
+    wq = like["layers"]["attn"]["wq"]
+    assert isinstance(wq.payload, jax.ShapeDtypeStruct)
+    assert wq.payload.shape == packed["layers"]["attn"]["wq"].payload.shape
+    mesh = make_host_mesh(model=1)
+    specs = dsh.serve_packed_specs(like, mesh)
+    shardings = dsh.packed_restore_shardings(like, specs, mesh)
+    sh = shardings["layers"]["attn"]["wq"]
+    assert isinstance(sh.payload, NamedSharding)
+    assert "model" in str(sh.payload.spec)
+    # leaf-for-leaf alignment with the value tree (what restore relies on)
+    assert len(jax.tree.leaves(shardings)) == len(jax.tree.leaves(packed))
+
+
+def test_tree_spec_roundtrips_pspec():
+    mesh = make_host_mesh(model=1)
+    qt = _qt2d().with_sharding(mesh, P(None, "model"))
+    like = qtensor.tree_like(qtensor.tree_spec({"w": qt}))
+    assert like["w"].pspec == P(None, "model")
+
+
+def test_engine_sharded_matches_single_device_bitwise():
+    """Fast-tier acceptance slice: the mesh engine (1-device host mesh —
+    full qmm_sharded/shard_map dispatch, degenerate sharding) emits the
+    same greedy stream as the single-device packed engine.  The >=2-device
+    version of this invariant runs in tests/test_serving_sharded.py."""
+    from repro.core.qgemm import QuantConfig
+    from repro.models.base import ArchConfig, build_model
+    from repro.serving.engine import Request, ServeEngine
+
+    cfg = ArchConfig(name="shard-fast", family="dense", n_layers=2,
+                     d_model=64, n_heads=2, n_kv_heads=2, d_ff=128,
+                     vocab=64, attn_chunk=64,
+                     quant=QuantConfig(method="mixfp4"))
+    params, _ = build_model(cfg).init(jax.random.PRNGKey(0))
+
+    def serve(eng):
+        eng.add_request(Request(uid=0, prompt=np.array([3, 1, 4], np.int32),
+                                max_new_tokens=4))
+        toks = []
+        while any(s is not None for s in eng.slots):
+            toks.extend(t for _, t in eng.step())
+        return toks
+
+    ref = ServeEngine(cfg, params, batch_size=1, max_len=16)
+    eng = ServeEngine(cfg, params, batch_size=1, max_len=16,
+                      mesh=make_host_mesh(model=1))
+    wq = eng.params["layers"]["attn"]["wq"]
+    assert isinstance(wq, qtensor.QTensor) and wq.pspec is not None
+    assert serve(ref) == serve(eng)
+
+
+def test_engine_mesh_requires_packed():
+    from repro.core.qgemm import QuantConfig
+    from repro.models.base import ArchConfig, build_model
+    from repro.serving.engine import ServeEngine
+
+    cfg = ArchConfig(name="shard-nopack", family="dense", n_layers=1,
+                     d_model=32, n_heads=2, n_kv_heads=2, d_ff=64,
+                     vocab=32, quant=QuantConfig(method="mixfp4"))
+    params, _ = build_model(cfg).init(jax.random.PRNGKey(0))
+    with pytest.raises(ValueError, match="pack_weights"):
+        ServeEngine(cfg, params, batch_size=1, max_len=8,
+                    pack_weights=False, mesh=make_host_mesh(model=1))

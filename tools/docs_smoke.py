@@ -1,0 +1,62 @@
+"""Docs smoke: extract and run the fenced Python blocks from docs/*.md.
+
+The guides' examples are executable by contract — this runner is what the
+CI ``docs-smoke`` leg executes, so a doc edit that breaks its own example
+fails CI instead of rotting silently (ISSUE 3 satellite).
+
+Semantics:
+
+* every ` ```python ` fenced block is executed; blocks within one file
+  share a namespace, in file order, so an early block can import/set up
+  for later ones (doctest-session style),
+* blocks run on a faked 2-device CPU host — the XLA_FLAGS override below
+  MUST precede any jax import, which is why this is a standalone script —
+  so host-mesh examples (docs/sharding.md) exercise real >=2-way sharding,
+* a failure reports file + block index + the offending source and exits
+  nonzero.
+
+Run locally:  PYTHONPATH=src python tools/docs_smoke.py [docs/sharding.md]
+"""
+import os
+
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=2 "
+                           + os.environ.get("XLA_FLAGS", ""))
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import pathlib
+import re
+import sys
+import traceback
+
+_BLOCK = re.compile(r"```python\n(.*?)```", re.S)
+
+
+def run_file(path: pathlib.Path) -> int:
+    blocks = _BLOCK.findall(path.read_text())
+    ns = {"__name__": f"docs_smoke::{path.stem}"}
+    for i, src in enumerate(blocks):
+        label = f"{path}::block{i}"
+        try:
+            exec(compile(src, label, "exec"), ns)
+        except Exception:
+            print(f"[docs-smoke] FAIL {label}\n{'-' * 60}\n{src}{'-' * 60}")
+            traceback.print_exc()
+            return 1
+        print(f"[docs-smoke] ok {label}")
+    return 0
+
+
+def main(argv=None) -> int:
+    argv = sys.argv[1:] if argv is None else argv
+    root = pathlib.Path(__file__).resolve().parent.parent
+    paths = ([pathlib.Path(a) for a in argv] if argv
+             else sorted((root / "docs").glob("*.md")))
+    failures = sum(run_file(p) for p in paths)
+    n_blocks = sum(len(_BLOCK.findall(p.read_text())) for p in paths)
+    print(f"[docs-smoke] {len(paths)} files, {n_blocks} blocks, "
+          f"{failures} failures")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
