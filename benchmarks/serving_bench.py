@@ -11,9 +11,15 @@ per commit:
   traffic term,
 * prefill throughput, historical token-by-token decode replay vs the
   batched ``prefill_slot`` entry (one jit dispatch per admission), plus the
-  engine's dispatch counter.
+  engine's dispatch counter,
+* with ``--act-quant mixfp4``: W4A16 vs W4A4 decode step latency plus the
+  accuracy drift of quantizing activations — greedy-token agreement over a
+  fixed generation and the max |logit delta| on the first post-prefill
+  decode step (``results["act_quant"]``; asserted by the CI
+  serving-bench-smoke leg).
 
 Run:  PYTHONPATH=src python -m benchmarks.serving_bench [--tiny] [--out F]
+      [--act-quant mixfp4]
 """
 from __future__ import annotations
 
@@ -76,8 +82,46 @@ def _batched_prefill_us(eng: ServeEngine, prompt: np.ndarray) -> float:
         iters=3, warmup=1)
 
 
+def _act_quant_section(cfg, params, batch: int, max_len: int,
+                       prompt: np.ndarray, n_new: int = 8) -> dict:
+    """W4A16 vs W4A4 serving: decode step latency + accuracy drift.
+
+    Drift is measured two ways against the same packed weights: greedy
+    token agreement over an ``n_new``-token generation, and the max
+    absolute logit delta of one decode step taken from the identical
+    post-prefill state (before the streams can diverge)."""
+    out: dict = {"decode_step_us": {}, "n_new": n_new}
+    streams, logits = {}, {}
+    for key, aq in (("w4a16", None), ("w4a4", "mixfp4")):
+        eng = ServeEngine(cfg, params, batch_size=batch, max_len=max_len,
+                          act_quant=aq)
+        eng.add_request(Request(uid=0, prompt=prompt, max_new_tokens=n_new))
+        # probe logits from the shared post-prefill state (pure function of
+        # the cache; the engine's own cache is not advanced)
+        lg, _ = eng._decode(eng.params,
+                            jnp.full((batch,), int(prompt[0]), jnp.int32),
+                            eng.cache, jnp.asarray(eng.lengths.copy()))
+        logits[key] = np.asarray(lg[0])
+        toks = []
+        while any(s is not None for s in eng.slots):
+            toks.extend(t for _, t in eng.step())
+        streams[key] = toks
+        out["decode_step_us"][key] = _decode_us(eng)
+        common.emit(f"serving_decode_step_{key}", out["decode_step_us"][key],
+                    f"batch={batch} act_quant={aq or 'bf16'}")
+    agree = sum(a == b for a, b in zip(streams["w4a16"], streams["w4a4"]))
+    out["token_agreement"] = agree / max(len(streams["w4a16"]), 1)
+    out["logit_max_abs_delta"] = float(
+        np.max(np.abs(logits["w4a4"] - logits["w4a16"])))
+    out["logit_max_abs"] = float(np.max(np.abs(logits["w4a16"])))
+    common.emit("serving_w4a4_drift", 0.0,
+                f"token_agreement={out['token_agreement']:.2f} "
+                f"logit_max_abs_delta={out['logit_max_abs_delta']:.4f}")
+    return out
+
+
 def bench_serving(out_path: str = "BENCH_serving.json", *,
-                  tiny: bool = False) -> dict:
+                  tiny: bool = False, act_quant: str | None = None) -> dict:
     cfg = _bench_cfg(tiny)
     params, _ = build_model(cfg).init(jax.random.PRNGKey(0))
     batch, max_len = (2, 64) if tiny else (4, 256)
@@ -129,6 +173,10 @@ def bench_serving(out_path: str = "BENCH_serving.json", *,
                 f"dispatches_per_admission="
                 f"{results['prefill']['dispatches_per_admission']:.0f}")
 
+    if act_quant == "mixfp4":
+        results["act_quant"] = _act_quant_section(cfg, params, batch,
+                                                  max_len, prompt)
+
     with open(out_path, "w") as f:
         json.dump(results, f, indent=2, sort_keys=True)
     print(f"# wrote {out_path}")
@@ -137,7 +185,7 @@ def bench_serving(out_path: str = "BENCH_serving.json", *,
 
 def bench_for_run():
     """benchmarks.run section entry (CSV rows + BENCH_serving.json)."""
-    return bench_serving(tiny=True)
+    return bench_serving(tiny=True, act_quant="mixfp4")
 
 
 def main(argv=None):
@@ -145,9 +193,13 @@ def main(argv=None):
     ap.add_argument("--tiny", action="store_true",
                     help="smoke-sized config (CI benchmark leg)")
     ap.add_argument("--out", default="BENCH_serving.json")
+    ap.add_argument("--act-quant", default=None, choices=["mixfp4"],
+                    help="also benchmark W4A4 serving (decode latency + "
+                         "accuracy drift vs W4A16) into the act_quant "
+                         "section of the JSON")
     args = ap.parse_args(argv)
     print("name,us_per_call,derived")
-    bench_serving(args.out, tiny=args.tiny)
+    bench_serving(args.out, tiny=args.tiny, act_quant=args.act_quant)
 
 
 if __name__ == "__main__":

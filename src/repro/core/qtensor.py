@@ -373,22 +373,41 @@ def _quantize_2d(w: jax.Array, spec: QuantSpec, key) -> QTensor:
 
 
 def quantize_rows(x: jax.Array, *, interpret: bool | None = None,
-                  scale32: jax.Array | float | None = None) -> QTensor:
+                  scale32: jax.Array | float | None = None,
+                  pad_to: int | None = None) -> QTensor:
     """Fused-kernel 1-D row quantizer (mixfp4/RNE, blocks along the last
     axis of a (M, K) matrix) returning a QTensor — the W4A4 activation
     producer for ``qmm``.  ``scale32`` pins the per-tensor scale (see
     ``kernels.ops.quantize_rows``) for incremental producers like the
-    packed KV cache."""
+    packed KV cache.
+
+    ``pad_to`` zero-pads K up to a target packed grid before quantizing
+    (default: the next multiple of 16) while the *logical* shape stays
+    ``x.shape`` — this is how W4A4 serving quantizes activations straight
+    onto a packed weight's ``Kp`` grid (``pad_to=2*w.payload.shape[-2]``):
+    padded lanes quantize to zero codes and decode to exact zeros, the same
+    zero terms the dense W4A16 dispatcher's internal padding contributes,
+    and a zero tail never moves a block's absmax, so the real lanes' bytes
+    are unchanged."""
     from repro.kernels import ops  # deferred: kernels import core
 
     assert x.ndim == 2, "quantize_rows expects (M, K)"
+    m, k = x.shape
+    kp = _pad_to(k, _G) if pad_to is None else int(pad_to)
+    if kp < k or kp % _G:
+        raise ValueError(
+            f"quantize_rows: pad_to={pad_to} must be a multiple of {_G} "
+            f">= K={k}")
+    x32 = x.astype(jnp.float32)
+    if kp != k:
+        x32 = jnp.pad(x32, ((0, 0), (0, kp - k)))
     kw = {} if interpret is None else {"interpret": interpret}
     if scale32 is not None:
         kw["scale32"] = scale32
-    payload, scales, s32 = ops.quantize_rows(x.astype(jnp.float32), **kw)
+    payload, scales, s32 = ops.quantize_rows(x32, **kw)
     return QTensor(payload, scales, s32, method="mixfp4",
                    layout=BlockLayout1D(-1, _G),
-                   shape=tuple(x.shape), dtype=str(x.dtype))
+                   shape=(m, k), dtype=str(x.dtype))
 
 
 def from_packed_rows(payload: jax.Array, scales: jax.Array,
@@ -567,69 +586,111 @@ def kn_partitions(qt: QTensor) -> tuple:
     return e[-2], e[-1]
 
 
-def qmm_sharded(x: jax.Array, w: QTensor, *, mesh,
+def qmm_sharded(x: Union[jax.Array, QTensor], w: QTensor, *, mesh,
                 interpret: bool | None = None) -> jax.Array:
-    """``qmm`` for a model-parallel packed weight: the W4A16 kernel runs
-    per shard under ``shard_map``, so the payload/scale bytes are never
+    """``qmm`` for a model-parallel packed weight: the kernel runs per
+    shard under ``shard_map``, so the payload/scale bytes are never
     gathered or dequantized to a full dense weight.
+
+    ``x`` is either dense (W4A16 per shard) or a 2-D 1-D-row-blocked
+    QTensor on the weight's packed ``Kp`` grid — produced by
+    ``quantize_rows(x2, pad_to=2*w.payload.shape[-2])`` — the W4A4
+    serving path, where BOTH operands stay on the wire format inside
+    every shard.
 
     The weight's logical ``pspec`` (see :meth:`QTensor.with_sharding`)
     selects the plan:
 
       * N sharded (column-parallel, the serving default): ``x`` is
-        replicated over the model axis, every shard computes its output
-        columns — bitwise-identical to the single-device kernel, since
-        output columns are independent and the K tiling is unchanged.
+        replicated over the model axis — for W4A4 the activation rows
+        are quantized ONCE and their packed bytes replicate — and every
+        shard computes its output columns.  Bitwise-identical to the
+        single-device kernel, since output columns are independent and
+        the K tiling is unchanged.
       * K sharded (row-parallel): ``x`` is split along K and partial
-        products ``psum`` over the model axis — NOT bitwise-identical to
-        single-device (the K reduction is reassociated), which is why the
-        engine's default serve layout avoids it (docs/sharding.md).
+        products ``psum`` in f32 over the model axis.  For W4A4 the
+        payload/scale bytes split at 16-lane block granularity — block
+        quantization is K-slice-local under the shared per-tensor scale,
+        so each shard's bytes equal what quantizing its own K slice
+        under that scale32 would produce.  NOT bitwise-identical to
+        single-device (the psum reassociates the K reduction), which is
+        why the engine's default serve layout avoids it
+        (docs/sharding.md).
     """
     from repro.distributed.sharding import shard_map  # deferred: layering
 
     if not (isinstance(w.layout, BlockLayout2D) and w.payload.ndim == 2):
         raise ValueError("qmm_sharded expects an unbatched 2-D-tiled "
                          "QTensor weight (scan slices stacks first)")
-    if isinstance(x, QTensor):
-        raise ValueError("qmm_sharded serves dense activations (W4A16); "
-                         "sharded W4A4 is a follow-on (ROADMAP)")
+    kp2, np_ = w.payload.shape
+    kp = 2 * kp2
+    k_log, n_log = w.shape
+    x_is_qt = isinstance(x, QTensor)
+    if x_is_qt:
+        ok = (isinstance(x.layout, BlockLayout1D)
+              and x.layout.axis in (-1, len(x.shape) - 1)
+              and x.layout.block == _G
+              and x.payload.ndim == 2
+              and x.payload.shape[-1] * 2 == kp)
+        if not ok:
+            raise ValueError(
+                "qmm_sharded: a QTensor activation must be 1-D g=16 "
+                "row-blocked on the weight's packed K grid — produce it "
+                "with quantize_rows(x2, pad_to=2*w.payload.shape[-2])")
+    if x.shape[-1] != k_log:
+        raise ValueError(f"qmm_sharded: x K={x.shape[-1]} vs weight "
+                         f"K={k_log}")
     k_e, n_e = kn_partitions(w)
     if k_e is None and n_e is None:
         return qmm(x, w, interpret=interpret)
     sizes = dict(mesh.shape)
     ks, ns = _axes_size(k_e, sizes), _axes_size(n_e, sizes)
-    kp2, np_ = w.payload.shape
-    kp = 2 * kp2
-    k_log, n_log = w.shape
     _check_block_granularity(k_e, kp, w.layout.bm, "K", sizes)
     _check_block_granularity(n_e, np_, w.layout.bn, "N", sizes)
-    if x.shape[-1] != k_log:
-        raise ValueError(f"qmm_sharded: x K={x.shape[-1]} vs weight "
-                         f"K={k_log}")
-    # pad x to the packed Kp grid OUTSIDE shard_map so a K shard is exact
-    # (padded weight rows decode to exact zeros — same zero terms, in the
-    # same order, as the unsharded dispatcher's internal padding)
-    xk = x
-    if kp != k_log:
-        xk = jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(0, kp - k_log)])
     n_loc = np_ // ns
-    x_spec = P(*[None] * (x.ndim - 1), k_e)
     w_spec = P(k_e, n_e)
 
-    def body(xl, wp, ws, w32):
+    if x_is_qt:
+        # The rows were quantized once on the padded Kp grid; a K shard
+        # slices whole 16-lane blocks of payload AND scale bytes (the
+        # granularity check above covers both, payload at 8 bytes/block
+        # and scales at 1), and the per-tensor scale32 replicates.
+        x_args = (x.payload, x.scales, x.scale32)
+        x_specs = (P(None, k_e), P(None, k_e), P())
+        lead_specs = (None,)
+    else:
+        # pad x to the packed Kp grid OUTSIDE shard_map so a K shard is
+        # exact (padded weight rows decode to exact zeros — same zero
+        # terms, in the same order, as the unsharded dispatcher's
+        # internal padding)
+        xk = x
+        if kp != k_log:
+            xk = jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(0, kp - k_log)])
+        x_args = (xk,)
+        x_specs = (P(*[None] * (x.ndim - 1), k_e),)
+        lead_specs = (None,) * (x.ndim - 1)
+
+    def body(x_parts, wp, ws, w32):
         k_loc = 2 * wp.shape[0]   # local K, padded-as-logical (see above)
-        qt = QTensor(wp, ws, w32, w.method, w.layout,
-                     (k_loc, n_loc if n_e is not None else n_log), w.dtype)
-        y = qmm(xl, qt, interpret=interpret)
+        qt_w = QTensor(wp, ws, w32, w.method, w.layout,
+                       (k_loc, n_loc if n_e is not None else n_log),
+                       w.dtype)
+        if x_is_qt:
+            xp, xs, x32 = x_parts
+            xl = QTensor(xp, xs, x32, x.method, BlockLayout1D(-1, _G),
+                         (xp.shape[0], k_loc), x.dtype)
+        else:
+            (xl,) = x_parts
+        y = qmm(xl, qt_w, interpret=interpret)   # f32 out on both paths
         if k_e is not None:
             y = jax.lax.psum(
                 y, k_e if isinstance(k_e, tuple) else (k_e,))
         return y
 
     out = shard_map(body, mesh=mesh,
-                    in_specs=(x_spec, w_spec, w_spec, P()),
-                    out_specs=P(*[None] * (x.ndim - 1), n_e))(
-        xk, w.payload, w.scales, w.scale32)
+                    in_specs=(x_specs, w_spec, w_spec, P()),
+                    out_specs=P(*lead_specs, n_e))(
+        x_args, w.payload, w.scales, w.scale32)
     return out[..., :n_log] if n_e is not None else out
 
 

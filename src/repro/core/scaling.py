@@ -68,10 +68,17 @@ def pack_scale_with_type(scale_f32: jax.Array, type_bits: jax.Array) -> jax.Arra
     uint8: bit 7 carries T, bits [6:0] the E4M3 magnitude bits.
 
     Zero extra storage relative to NVFP4's unsigned E4M3 scale byte (§B.3).
+
+    Canonicalized: a zero-magnitude scale byte never carries the type bit
+    (byte 0x80 would be a negative-zero E4M3 scale, which the type-in-sign
+    decoder reads as an E1M2 block — a zero scale decodes every payload to
+    0 regardless of type, so the canonical dead-block byte is 0x00).  Kept
+    bit-identical to the Pallas quantizer's ``_pack_scale``.
     """
     bits = formats.e4m3_to_bits(scale_f32)
+    mag = bits & 0x7F
     t = (type_bits.astype(jnp.uint8) & 1) << 7
-    return (bits & 0x7F) | t
+    return jnp.where(mag == 0, mag, mag | t).astype(jnp.uint8)
 
 
 def unpack_scale_and_type(packed: jax.Array):

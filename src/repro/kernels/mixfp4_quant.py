@@ -105,7 +105,15 @@ def _encode_nibbles(q: jax.Array, t: jax.Array) -> jax.Array:
 def _pack_scale(s8: jax.Array, t: jax.Array) -> jax.Array:
     bits = jax.lax.bitcast_convert_type(
         s8.astype(jnp.float8_e4m3fn), jnp.uint8)
-    return (bits & 0x7F) | (t << 7)
+    mag = bits & 0x7F
+    # Canonicalize: a zero-magnitude scale byte must not carry the type
+    # bit.  Byte 0x80 is a *negative-zero* E4M3 scale that the type-in-sign
+    # decoder would read as an E1M2 block; a zero scale makes the type
+    # moot (every payload decodes to 0), so the canonical encoding of a
+    # dead block is 0x00.  The branch guards in quant_block_kernel_math
+    # keep s8 > 0 today (all-zero blocks get scale 1.0) — this makes the
+    # invariant structural rather than incidental.
+    return jnp.where(mag == 0, mag, mag | (t << 7)).astype(jnp.uint8)
 
 
 def _quant_kernel(s32_ref, x_ref, payload_ref, scale_ref):

@@ -93,7 +93,20 @@ def packed_weight_report(arch: str, quant_method: str = "mixfp4",
     the same function the engine calls — on an abstract skeleton, so the
     report cannot drift from the layout the engine places
     (``model_shards`` is the model-axis TP degree; 16 on the production
-    mesh)."""
+    mesh).
+
+    The ``act_quant`` sub-report covers the W4A4 serving mode
+    (``ServeEngine(act_quant="mixfp4")``, docs/serving.md): per decoded
+    token, the activation rows entering the packable projection GEMMs at
+    dense bf16 (W4A16) vs on the wire format ``quantize_rows`` emits on
+    each weight's padded K grid (Kp/2 payload + Kp/16 scale bytes + 4 B
+    per-tensor scale), and the resulting GEMM arithmetic-intensity
+    (FLOP/byte over per-token weight + activation traffic) delta — the
+    roofline story of routing both operands through the W4A4 kernel.
+    Scan-stacked MoE expert stacks (4-D leaves) count only the
+    ``top_k``-routed fraction of their experts per token, for weight
+    traffic, activation rows and FLOPs alike (all experts still count
+    toward the resident-HBM numbers above)."""
     import types
 
     from repro.distributed.sharding import serve_packed_specs
@@ -104,7 +117,9 @@ def packed_weight_report(arch: str, quant_method: str = "mixfp4",
         cfg = cfg.replace(**overrides)
     params_sds, _ = _abstract_init(build_model(cfg))
     mesh = types.SimpleNamespace(shape={"model": model_shards})
-    stats = {"packed": 0, "dense": 0, "per_device": 0, "replicated": 0}
+    stats = {"packed": 0, "dense": 0, "per_device": 0, "replicated": 0,
+             "act_bf16": 0.0, "act_packed": 0.0, "flops": 0.0,
+             "w_traffic": 0.0}
 
     def walk(node):
         if not isinstance(node, dict):
@@ -114,13 +129,28 @@ def packed_weight_report(arch: str, quant_method: str = "mixfp4",
             # counts exactly the leaves ServeEngine converts
             if model_base.is_packable_projection(k, v):
                 n_mats = int(math.prod(v.shape[:-2]))
+                kdim, ndim = v.shape[-2:]
+                struct = qtensor.packed_struct_for_shape(v.shape)
+                # the engine's activation grid: qlinear quantizes rows with
+                # pad_to = 2 * w.payload.shape[-2], so derive Kp from the
+                # same skeleton (one owner for the child-shape math)
+                kp = 2 * struct.payload.shape[-2]
                 leaf = n_mats * qtensor.packed_nbytes_for_shape(
-                    v.shape[-2:], qtensor.BlockLayout2D())
+                    (kdim, ndim), qtensor.BlockLayout2D())
                 stats["packed"] += leaf
                 stats["dense"] += int(math.prod(v.shape)) * 2
-                spec = serve_packed_specs(
-                    {"w": qtensor.packed_struct_for_shape(v.shape)},
-                    mesh)["w"]
+                # per-token GEMM traffic: one activation row per matrix
+                # (decode batch 1) — except expert stacks ((L, E, K, N),
+                # 4-D leaves), where a token routes through top_k of the
+                # stored E experts
+                active = n_mats
+                if v.ndim >= 4 and cfg.top_k:
+                    active = n_mats * cfg.top_k / v.shape[-3]
+                stats["act_bf16"] += active * kdim * 2
+                stats["act_packed"] += active * (kp // 2 + kp // 16 + 4)
+                stats["flops"] += active * 2 * kdim * ndim
+                stats["w_traffic"] += leaf * (active / n_mats)
+                spec = serve_packed_specs({"w": struct}, mesh)["w"]
                 if any(e is not None for e in spec):
                     stats["per_device"] += leaf // model_shards
                 else:
@@ -131,11 +161,24 @@ def packed_weight_report(arch: str, quant_method: str = "mixfp4",
 
     walk(params_sds)
     packed, dense = stats["packed"], stats["dense"]
+    fb16 = stats["flops"] / max(stats["w_traffic"] + stats["act_bf16"], 1)
+    f4 = stats["flops"] / max(stats["w_traffic"] + stats["act_packed"], 1)
     return {"proj_dense_bf16": dense, "proj_packed_qtensor": packed,
             "compression": round(dense / packed, 3) if packed else 1.0,
             "model_shards": model_shards,
             "proj_packed_per_device": stats["per_device"],
-            "proj_packed_replicated": stats["replicated"]}
+            "proj_packed_replicated": stats["replicated"],
+            "act_quant": {
+                "act_bf16_bytes_per_token": round(stats["act_bf16"]),
+                "act_packed_bytes_per_token": round(stats["act_packed"]),
+                "act_compression": round(
+                    stats["act_bf16"] / stats["act_packed"], 3)
+                if stats["act_packed"] else 1.0,
+                "proj_flops_per_token": round(stats["flops"]),
+                "proj_weight_traffic_per_token": round(stats["w_traffic"]),
+                "flop_per_byte_w4a16": round(fb16, 3),
+                "flop_per_byte_w4a4": round(f4, 3),
+            }}
 
 
 def build_cell(arch: str, shape_name: str, mesh, multi_pod: bool,

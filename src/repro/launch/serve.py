@@ -5,6 +5,11 @@ Usage (CPU demo):
   PYTHONPATH=src python -m repro.launch.serve --arch gemma2-2b --smoke \
       --requests 4 --new-tokens 8
 
+W4A4 serving (docs/serving.md) — activations quantized on the fly, every
+projection through the W4A4 kernel (both operands on the wire format):
+  PYTHONPATH=src python -m repro.launch.serve --arch gemma2-2b --smoke \
+      --act-quant mixfp4
+
 Sharded packed serving dryrun (docs/sharding.md) — projections held as
 model-axis-sharded QTensors, decode bitwise-identical to single-device:
   PYTHONPATH=src python -m repro.launch.serve --arch gemma2-2b --smoke \
@@ -73,6 +78,14 @@ def main(argv=None):
                     help="hold the KV cache packed (mixfp4: 4.5 bits/value, "
                          "decode through the fused attention kernel); "
                          "default bf16")
+    ap.add_argument("--act-quant", default=None,
+                    choices=["bf16", "mixfp4", "mixfp4-qdq"],
+                    help="W4A4 serving: quantize decode/prefill activations "
+                         "on the fly (quantize_rows, type-in-sign E4M3 "
+                         "block scales) and run every projection through "
+                         "the W4A4 kernel — both GEMM operands on the wire "
+                         "format; 'mixfp4-qdq' is the dequantize-then-"
+                         "W4A16 debugging oracle; default bf16 (W4A16)")
     ap.add_argument("--save-weights", default=None, metavar="DIR",
                     help="write the packed QTensor weight tree as a "
                          "checkpoint and exit")
@@ -86,6 +99,18 @@ def main(argv=None):
                          "path; consumed before jax init, see module top)")
     args = ap.parse_args(argv)
 
+    # flag-conflict checks BEFORE the (expensive) model init
+    if args.no_pack:
+        if args.model_parallel:
+            ap.error("--model-parallel serves sharded PACKED weights; "
+                     "drop --no-pack")
+        if args.act_quant in ("mixfp4", "mixfp4-qdq"):
+            ap.error("--act-quant mixfp4 is the W4A4 path (both operands "
+                     "packed); drop --no-pack")
+        if args.save_weights:
+            ap.error("--save-weights requires packed weights; drop --no-pack "
+                     "(the checkpoint format is the packed QTensor tree)")
+
     cfg = (configs.smoke_config(args.arch) if args.smoke
            else configs.full_config(args.arch))
     cfg = cfg.replace(quant=QuantConfig(method=args.quant))
@@ -96,9 +121,6 @@ def main(argv=None):
 
     mesh = None
     if args.model_parallel:
-        if args.no_pack:
-            ap.error("--model-parallel serves sharded PACKED weights; "
-                     "drop --no-pack")
         mesh = make_host_mesh(model=args.model_parallel)
         print(f"[serve] host mesh {dict(mesh.shape)}: sharded packed "
               f"serving (column-parallel projections, expert-sharded MoE "
@@ -106,7 +128,8 @@ def main(argv=None):
     engine = ServeEngine(cfg, params, batch_size=args.batch,
                          max_len=args.max_len,
                          pack_weights=not args.no_pack,
-                         kv_quant=args.kv_quant, mesh=mesh)
+                         kv_quant=args.kv_quant, act_quant=args.act_quant,
+                         mesh=mesh)
     del params  # projections now live ONLY as packed QTensors in the engine
     if mesh is not None:
         shards = sorted({
@@ -118,10 +141,18 @@ def main(argv=None):
         print(f"[serve] QTensor payload/scales NamedSharding specs: "
               f"{shards}")
     if engine.packed_bytes:
+        kern = "W4A4" if engine.act_quant == "mixfp4" else "W4A16"
         print(f"[serve] projection weights held as packed QTensors: "
               f"{engine.packed_bytes / 1024:.0f} KiB "
               f"({engine.compression:.2f}x smaller than bf16), served "
-              f"through qmm -> W4A16 kernels")
+              f"through qmm -> {kern} kernels")
+    if engine.act_quant == "mixfp4":
+        print("[serve] W4A4: activations quantized on the fly "
+              "(quantize_rows onto each weight's packed K grid) and every "
+              "projection runs the W4A4 kernel — full FP4xFP4 MMA analog")
+    elif engine.act_quant == "mixfp4-qdq":
+        print("[serve] W4A4 qdq oracle: same wire bytes, decoded back to "
+              "dense rows and served W4A16")
     if engine.kv_quant == "mixfp4":
         # bf16 equivalent: K and V tensors at 2 bytes/value
         bf16_kib = (2 * 2 * engine.batch_size * engine.max_len
@@ -131,9 +162,6 @@ def main(argv=None):
               f"(bf16 would be {bf16_kib:.0f} KiB), decode reads it "
               f"through the fused attention kernel")
     if args.save_weights:
-        if args.no_pack:
-            ap.error("--save-weights requires packed weights; drop --no-pack "
-                     "(the checkpoint format is the packed QTensor tree)")
         engine.save_weights(args.save_weights)
         print(f"[serve] packed QTensor weights checkpointed to "
               f"{args.save_weights}")

@@ -272,14 +272,44 @@ def qlinear(x: jax.Array, w, ctx: "Ctx", tag: int) -> jax.Array:
     dispatches to ``qmm_sharded``: the kernel runs per model-axis shard
     under ``shard_map``, keeping the operands packed AND sharded
     (docs/sharding.md).
+
+    With ``ctx.act_quant == "mixfp4"`` (W4A4 serving, docs/serving.md) the
+    dense activation is quantized on the fly — ``quantize_rows`` onto the
+    weight's packed ``Kp`` grid, same type-in-sign E4M3 block-scale
+    encoding as every other wire tensor — and the GEMM runs with BOTH
+    operands packed (``qmm(qt_x, qt_w)`` -> the W4A4 Pallas kernel; under
+    a mesh, ``qmm_sharded`` with the packed activation).
+    ``"mixfp4-qdq"`` is the debugging oracle: the SAME wire bytes are
+    decoded back to dense rows and served W4A16 — what the W4A4 kernel
+    computes, minus its fused in-VMEM decode.
     """
     if isinstance(w, qtensor.QTensor):
         m = _active_mesh()
-        if (m is not None and w.pspec is not None
-                and isinstance(w.layout, qtensor.BlockLayout2D)
-                and w.payload.ndim == 2
-                and not isinstance(x, qtensor.QTensor)
-                and qtensor.kn_partitions(w) != (None, None)):
+        kernel_w = (isinstance(w.layout, qtensor.BlockLayout2D)
+                    and w.payload.ndim == 2)
+        sharded = (m is not None and w.pspec is not None and kernel_w
+                   and qtensor.kn_partitions(w) != (None, None))
+        aq = ctx.act_quant
+        if (aq in ("mixfp4", "mixfp4-qdq") and kernel_w
+                and not isinstance(x, qtensor.QTensor)):
+            kp = 2 * w.payload.shape[0]
+            lead, k = x.shape[:-1], x.shape[-1]
+            qx = qtensor.quantize_rows(x.reshape(-1, k), pad_to=kp)
+            if aq == "mixfp4":
+                y = (qtensor.qmm_sharded(qx, w, mesh=m) if sharded
+                     else qtensor.qmm(qx, w))
+            else:
+                # Oracle: decode the SAME wire bytes in the kernel's
+                # factored-scale form (Eq. 35) — value x block-scale rows
+                # (exact in bf16: <= 7 significand bits), per-tensor scale
+                # applied to the f32 output — and serve them W4A16.
+                xd = qtensor.QTensor(
+                    qx.payload, qx.scales, jnp.ones((), jnp.float32),
+                    qx.method, qx.layout, qx.shape, "float32").dequantize()
+                y = (qtensor.qmm_sharded(xd, w, mesh=m) if sharded
+                     else qtensor.qmm(xd, w)) * qx.scale32
+            return y.reshape(*lead, y.shape[-1]).astype(x.dtype)
+        if sharded and not isinstance(x, qtensor.QTensor):
             return qtensor.qmm_sharded(x, w, mesh=m).astype(x.dtype)
         return qtensor.qmm(x, w).astype(x.dtype)
     return qgemm(ctx.quant, x, w, jax.random.fold_in(ctx.key, tag))
@@ -358,13 +388,18 @@ def decode_positions(cache_len, b: int) -> jax.Array:
 
 @dataclass(frozen=True)
 class Ctx:
-    """Per-call context: PRNG key for SR/RHT, quant config, and the active
-    mesh (None = single-device; MoE then skips its collectives)."""
+    """Per-call context: PRNG key for SR/RHT, quant config, the active
+    mesh (None = single-device; MoE then skips its collectives), and the
+    serving activation format: ``act_quant="mixfp4"`` makes every
+    packed-weight ``qlinear`` quantize its activation rows on the fly and
+    run the W4A4 kernel (``"mixfp4-qdq"`` = the dequantize-then-W4A16
+    oracle; anything else = dense bf16 activations, W4A16)."""
     key: jax.Array
     quant: QuantConfig
     mesh: Any = None
     data_axes: tuple = ("data",)      # ("pod","data") on the multi-pod mesh
     model_axis: str = "model"
+    act_quant: str = "bf16"
 
     def fold(self, i: int) -> "Ctx":
         return dataclasses.replace(self, key=jax.random.fold_in(self.key, i))

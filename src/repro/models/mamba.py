@@ -3,7 +3,11 @@
 MixFP4 applies to the projection GEMMs (in/out/x/dt projections — see
 DESIGN.md §Arch-applicability); the SSM recurrences themselves are not GEMMs
 and stay in high precision, mirroring the paper's treatment of attention and
-nonlinearities.
+nonlinearities.  At serve time the same boundary carries the W4A4 mode:
+``Ctx(act_quant="mixfp4")`` makes every packed-weight ``qlinear`` (and the
+hybrid's shared-attention projections) quantize its activation rows and run
+the W4A4 kernel — the recurrent state stays f32 throughout
+(docs/serving.md).
 
 Selective scans are *chunked*: the (B, chunk, d_inner, N) state tensor is the
 only materialisation (Mamba-1), or the SSD chunked form with its (B, c, c, H)

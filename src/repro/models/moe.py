@@ -117,16 +117,21 @@ def _n_experts(w) -> int:
             else w.shape[0])
 
 
-def _expert_ffn(wu, wg, wd, h, key, cfg: ArchConfig, psum_axis=None):
+def _expert_ffn(wu, wg, wd, h, key, cfg: ArchConfig, psum_axis=None,
+                act_quant: str = "bf16"):
     """Quantized per-expert FFN over (E_loc, C, D) buffers.
 
     Dense expert stacks vmap; packed QTensor stacks go through ``lax.map``
     instead — the map slices each expert's payload/scales out of the pytree
     so ``qmm`` sees concrete 2-D operands for the Pallas kernels (vmap would
-    hand the kernels batched tracers)."""
+    hand the kernels batched tracers).  ``act_quant`` rebuilds the serving
+    activation format inside the per-expert Ctx (the engine's Ctx does not
+    cross the shard_map boundary — only ``key`` ships), so W4A4 serving
+    quantizes each expert's token buffer and runs the W4A4 kernel."""
 
     def one(i, wu_i, wg_i, wd_i, h_i):
-        c = Ctx(jax.random.fold_in(key, 1000 + i), cfg.quant)
+        c = Ctx(jax.random.fold_in(key, 1000 + i), cfg.quant,
+                act_quant=act_quant)
         up = qlinear(h_i, wu_i, c, 4)
         gate = jax.nn.silu(qlinear(h_i, wg_i, c, 5))
         return qlinear(gate * up, wd_i, c, 6)
@@ -143,7 +148,8 @@ def _expert_ffn(wu, wg, wd, h, key, cfg: ArchConfig, psum_axis=None):
 
 def _moe_local(x, gates, idx, key, wu, wg, wd, *, cfg: ArchConfig,
                m: int, ep: bool, model_axis: str, has_mesh: bool,
-               e_pad: int | None = None, packed_metas=None):
+               e_pad: int | None = None, packed_metas=None,
+               act_quant: str = "bf16"):
     """Per-shard MoE body.  x: (T_loc, D).  ``e_pad`` >= n_experts rounds the
     buffer's expert dim up to a multiple of the model axis (dummy experts
     receive no tokens; qwen2-moe pads 60 -> 64).
@@ -170,12 +176,13 @@ def _moe_local(x, gates, idx, key, wu, wg, wd, *, cfg: ArchConfig,
     if ep and m > 1:
         recv = jax.lax.all_to_all(
             buf, model_axis, split_axis=0, concat_axis=1, tiled=True)
-        out = _expert_ffn(wu, wg, wd, recv, key, cfg)
+        out = _expert_ffn(wu, wg, wd, recv, key, cfg, act_quant=act_quant)
         back = jax.lax.all_to_all(
             out, model_axis, split_axis=1, concat_axis=0, tiled=True)
     else:
         psum_axis = model_axis if (not ep and has_mesh) else None
-        back = _expert_ffn(wu, wg, wd, buf, key, cfg, psum_axis=psum_axis)
+        back = _expert_ffn(wu, wg, wd, buf, key, cfg, psum_axis=psum_axis,
+                           act_quant=act_quant)
 
     per_choice = back[e_s, slot] * (gate_f * keep)[:, None].astype(x.dtype)
     return jnp.zeros_like(x).at[tok_s].add(per_choice)
@@ -193,7 +200,8 @@ def moe_apply(p: dict, x: jax.Array, ctx: Ctx, cfg: ArchConfig):
         out = _moe_local(xt, gates.astype(x.dtype), idx, ctx.key,
                          p["w_up"], p["w_gate"], p["w_down"],
                          cfg=cfg, m=1, ep=ep, model_axis=ctx.model_axis,
-                         has_mesh=False, e_pad=_n_experts(p["w_up"]))
+                         has_mesh=False, e_pad=_n_experts(p["w_up"]),
+                         act_quant=ctx.act_quant)
     else:
         dta, mdl = ctx.data_axes, ctx.model_axis
         msize = ctx.model_size
@@ -269,7 +277,7 @@ def moe_apply(p: dict, x: jax.Array, ctx: Ctx, cfg: ArchConfig):
 
         body = partial(_moe_local, cfg=cfg, m=msize, ep=ep,
                        model_axis=mdl, has_mesh=True, e_pad=e_pad,
-                       packed_metas=packed_metas)
+                       packed_metas=packed_metas, act_quant=ctx.act_quant)
         out = shard_map(
             body, mesh=ctx.mesh, in_specs=in_specs, out_specs=out_spec,
         )(xt, gates.astype(x.dtype), idx, ctx.key, wu, wg, wd)

@@ -6,6 +6,12 @@ attention/final logit softcaps, QK-norm, sandwich norms, VLM/audio prefix
 embeddings (stub frontends per the brief).  Layers run under lax.scan with
 optional remat; every projection GEMM goes through the Fig. 7 quantized
 boundary (embeddings/LM head stay bf16, per the paper's exclusions).
+
+Serving: ``decode_step``/``prefill_slot`` inherit the activation format
+from the engine's ``Ctx`` — with ``act_quant="mixfp4"`` every ``qlinear``
+(attention q/k/v/o, MLP up/gate/down, MoE experts) quantizes its rows on
+the fly and runs the W4A4 kernel against the packed weight; no per-family
+plumbing, the flag rides the Ctx through the layer scan (docs/serving.md).
 """
 from __future__ import annotations
 

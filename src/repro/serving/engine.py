@@ -10,7 +10,7 @@ over bf16 in the decode-bound regime).  Every decode step runs through
 decoding tiles in VMEM; no dense bf16 copy of a projection weight is
 retained anywhere in the engine.
 
-Two hot paths run over packed data end-to-end (docs/serving.md):
+Three hot paths run over packed data end-to-end (docs/serving.md):
 
 * ``kv_quant="mixfp4"`` carries the transformer KV cache as 1-D
   ``BlockLayout1D`` QTensors; every decode step scatters the new token's
@@ -18,6 +18,13 @@ Two hot paths run over packed data end-to-end (docs/serving.md):
   decode-attention kernel (``kernels.mixfp4_attn``) — the cache's dense
   bf16 form never exists at decode time, so the dominant decode_32k
   traffic term shrinks ~3.55x too.
+* ``act_quant="mixfp4"`` (W4A4) quantizes decode AND prefill activations on
+  the fly — ``quantize_rows`` onto each packed weight's ``Kp`` grid, the
+  same type-in-sign E4M3 block-scale wire encoding — and routes every
+  projection through ``qmm(qt_x, qt_w)`` -> the W4A4 Pallas kernel, the
+  paper's full FP4xFP4 MMA analog (Fig. 9 decode on BOTH operands), for
+  the dense, MoE, SSM and hybrid families.  ``"mixfp4-qdq"`` is the
+  dequantize-then-W4A16 debugging oracle over the same wire bytes.
 * Admissions prefill through the models' batched ``prefill_slot`` entry:
   the whole prompt runs in ONE jit call at (P, K) prefill shapes through
   the W4A16 kernels, writing all cache rows at once, instead of the
@@ -28,9 +35,11 @@ With ``mesh=`` the engine serves *sharded* packed weights
 (docs/sharding.md): every projection QTensor is placed under model-axis
 ``NamedSharding``s derived by ``distributed.sharding.serve_packed_specs``
 (column-parallel N-sharding; MoE expert stacks shard whole experts), decode
-runs the W4A16 kernel per shard via ``qmm_sharded``/``shard_map``, and the
-layout is chosen so the output stream stays bitwise-identical to the
-single-device packed path.  ``load_weights`` restores a packed checkpoint
+runs the W4A16 — or, with ``act_quant="mixfp4"``, the W4A4 — kernel per
+shard via ``qmm_sharded``/``shard_map`` (W4A4 quantizes the replicated
+activation rows ONCE and replicates the packed bytes), and the layout is
+chosen so the output stream stays bitwise-identical to the single-device
+packed path.  ``load_weights`` restores a packed checkpoint
 straight into the sharded layout.  The KV cache is replicated for now —
 its PartitionSpec story is the open ROADMAP item (docs/serving.md).
 """
@@ -84,7 +93,7 @@ class ServeEngine:
     def __init__(self, cfg: ArchConfig, params, *, batch_size: int = 8,
                  max_len: int = 512, pack_weights: bool = True,
                  method: str = "mixfp4", kv_quant: str | None = None,
-                 mesh=None):
+                 act_quant: str | None = None, mesh=None):
         if cfg.family == "encdec":
             raise ValueError(
                 "ServeEngine has no source-encoding path (requests carry "
@@ -98,6 +107,15 @@ class ServeEngine:
             raise ValueError(
                 f"kv_quant='mixfp4' packs the transformer KV cache; family "
                 f"{cfg.family!r} has no (or not only) a KV cache to pack")
+        if act_quant not in (None, "bf16", "mixfp4", "mixfp4-qdq"):
+            raise ValueError(
+                f"unknown act_quant {act_quant!r} (expected None, 'bf16', "
+                "'mixfp4', or the 'mixfp4-qdq' debugging oracle)")
+        if act_quant in ("mixfp4", "mixfp4-qdq") and not pack_weights:
+            raise ValueError(
+                "act_quant='mixfp4' is the W4A4 path — both GEMM operands "
+                "on the wire format — which needs packed weights; drop "
+                "pack_weights=False")
         if mesh is not None and not pack_weights:
             raise ValueError(
                 "mesh serving is the sharded *packed* path (QTensor "
@@ -108,8 +126,10 @@ class ServeEngine:
         self.batch_size = batch_size
         self.max_len = max_len
         self.kv_quant = kv_quant or "bf16"
+        self.act_quant = act_quant or "bf16"
         self.mesh = mesh
-        self.ctx = Ctx(jax.random.PRNGKey(0), cfg.quant, mesh=mesh)
+        self.ctx = Ctx(jax.random.PRNGKey(0), cfg.quant, mesh=mesh,
+                       act_quant=self.act_quant)
         if pack_weights:
             # Projection weights become packed QTensors; the dense leaves
             # are dropped from this tree (callers should release their own

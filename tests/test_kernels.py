@@ -86,3 +86,37 @@ def test_quant_kernel_odd_rows():
     p_k, s_k, _ = mixfp4_quant_rows(x, interpret=True, bm=4)
     p_r, s_r, _ = ref.ref_quant_pack_rows(x, "mixfp4")
     np.testing.assert_array_equal(np.asarray(p_k), np.asarray(p_r))
+
+
+def test_quant_rows_zero_rows_pinned_scale32_canonical_scale_bytes():
+    """Regression (type-in-sign safety): all-zero rows — incl. negative
+    zeros, and under a pinned ``scale32=`` as the packed KV cache and the
+    W4A4 path use — must emit canonical POSITIVE scale bytes.  A
+    negative-zero E4M3 scale byte (0x80) has its type bit set, so the
+    Fig. 9 decoder would read the dead block as E1M2; the branch guards
+    map all-zero blocks to scale 1.0 (byte 0x38), and ``_pack_scale`` now
+    structurally forbids a zero-magnitude byte from carrying the type
+    bit."""
+    for fill in (0.0, -0.0):
+        x = jnp.full((2, 64), fill, jnp.float32)
+        for kw in ({}, {"scale32": 1.0}, {"scale32": jnp.float32(0.25)}):
+            p, s, _ = ops.quantize_rows(x, interpret=True, **kw)
+            s_np, p_np = np.asarray(s), np.asarray(p)
+            assert (s_np & 0x80 == 0).all(), (fill, kw, s_np)   # E2M1 type
+            assert (s_np == 0x38).all(), (fill, kw, s_np)       # scale 1.0
+            assert (p_np == 0).all()
+            np.testing.assert_array_equal(
+                np.asarray(ref.ref_dequant_kv(p, s, 1.0)), 0.0)
+    # mixed row: the zero block keeps its canonical byte next to live ones
+    x = jnp.zeros((1, 32), jnp.float32).at[0, 16:].set(3.0)
+    _, s, _ = ops.quantize_rows(x, interpret=True, scale32=1.0)
+    assert int(np.asarray(s)[0, 0]) == 0x38
+    # the canonicalization itself: even if a zero-magnitude scale met a
+    # set type bit, the packed byte must drop the bit (0x00, never 0x80)
+    from repro.core import scaling
+    from repro.kernels.mixfp4_quant import _pack_scale
+    b = _pack_scale(jnp.zeros((1, 1)), jnp.ones((1, 1), jnp.uint8))
+    assert int(np.asarray(b)[0, 0]) == 0x00
+    b2 = scaling.pack_scale_with_type(jnp.zeros((1,)),
+                                      jnp.ones((1,), jnp.uint8))
+    assert int(np.asarray(b2)[0]) == 0x00

@@ -215,6 +215,46 @@ def test_ops_pack_weight_qt_matches_quantize():
         (b.method, b.layout, b.shape, b.dtype)
 
 
+def test_quantize_rows_pad_to_preserves_real_lane_bytes():
+    """pad_to zero-pads K onto a wider packed grid (the W4A4 activation
+    producer: quantize straight onto a packed weight's Kp grid) without
+    perturbing the real lanes' payload/scale bytes — a zero tail never
+    moves a block's absmax — and the tail blocks decode to exact zeros."""
+    x = _rand((5, 64), 9, 2.0)
+    q0 = qtensor.quantize_rows(x, interpret=True)
+    q1 = qtensor.quantize_rows(x, pad_to=96, interpret=True)
+    assert q1.payload.shape == (5, 48) and q1.scales.shape == (5, 6)
+    assert q1.shape == (5, 64)                  # logical shape unchanged
+    np.testing.assert_array_equal(np.asarray(q1.payload)[:, :32],
+                                  np.asarray(q0.payload))
+    np.testing.assert_array_equal(np.asarray(q1.scales)[:, :4],
+                                  np.asarray(q0.scales))
+    np.testing.assert_allclose(float(q1.scale32), float(q0.scale32), rtol=0)
+    np.testing.assert_array_equal(np.asarray(q1.payload)[:, 32:], 0)
+    np.testing.assert_array_equal(
+        np.asarray(q1.dequantize()), np.asarray(q0.dequantize()))
+    with pytest.raises(ValueError, match="pad_to"):
+        qtensor.quantize_rows(x, pad_to=40, interpret=True)   # not 16-mult
+
+
+def test_qmm_w4a4_padded_k_via_pad_to():
+    """W4A4 with K not a multiple of 16: quantize_rows(pad_to=Kp) puts the
+    activation on the weight's packed grid and qmm contracts only the
+    logical lanes (padded lanes decode to exact zeros on both operands)."""
+    x = _rand((5, 40), 21)
+    w = _rand((40, 24), 22, 0.3)
+    qw = quantize(w, QuantSpec("mixfp4", BlockLayout2D()))     # Kp = 48
+    qx = qtensor.quantize_rows(x, pad_to=2 * qw.payload.shape[0],
+                               interpret=True)
+    y = qmm(qx, qw, interpret=True)
+    assert y.shape == (5, 24)
+    want = ref.ref_gemm_w4a4(qx.payload, qx.scales, qx.scale32,
+                             qw.payload, qw.scales, qw.scale32)[:, :24]
+    scale = float(jnp.abs(want).max()) + 1e-6
+    np.testing.assert_allclose(np.asarray(y) / scale,
+                               np.asarray(want) / scale, atol=2e-2)
+
+
 def test_qmm_w4a4_logical_k_mismatch_raises():
     """Operands that pad to the same grid but disagree on logical K must
     raise, not silently contract over the padded lanes."""

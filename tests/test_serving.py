@@ -498,18 +498,137 @@ def test_single_prefill_dispatch_per_admission(small_cfg):
 
 def test_serving_bench_emits_expected_json(tmp_path):
     """The serving benchmark must emit BENCH_serving.json with the schema
-    the CI smoke leg (and the perf trajectory) rely on."""
+    the CI smoke leg (and the perf trajectory) rely on — including the
+    W4A16-vs-W4A4 section when --act-quant mixfp4 is passed."""
     import json
     from benchmarks import serving_bench
     out = tmp_path / "BENCH_serving.json"
-    results = serving_bench.bench_serving(str(out), tiny=True)
+    results = serving_bench.bench_serving(str(out), tiny=True,
+                                          act_quant="mixfp4")
     on_disk = json.loads(out.read_text())
     assert on_disk.keys() == results.keys()
-    for key in ("config", "cache_bytes", "decode_step_us", "prefill"):
+    for key in ("config", "cache_bytes", "decode_step_us", "prefill",
+                "act_quant"):
         assert key in on_disk, key
     assert set(on_disk["decode_step_us"]) == {"bf16", "mixfp4"}
     assert on_disk["cache_bytes"]["ratio"] <= 0.3
     assert on_disk["prefill"]["dispatches_per_admission"] == 1
+    aq = on_disk["act_quant"]
+    assert set(aq["decode_step_us"]) == {"w4a16", "w4a4"}
+    assert 0.0 <= aq["token_agreement"] <= 1.0
+    assert aq["logit_max_abs_delta"] >= 0.0
+
+
+# ---------------------------------------------------------------------------
+# W4A4 serving (act_quant="mixfp4"): quantized activations through the
+# full FP4 MMA path (docs/serving.md)
+# ---------------------------------------------------------------------------
+def _family_cfg(family: str):
+    """Tiny per-family configs + a pinned seed each (the oracle equality
+    below is an argmax-chain comparison, so seeds are pinned the same way
+    test_packed_kv_tokens_match_bf16_engine pins them)."""
+    if family == "dense":
+        return ArchConfig(name="w4a4-dense", family="dense", n_layers=2,
+                          d_model=64, n_heads=2, n_kv_heads=2, d_ff=128,
+                          vocab=64, attn_chunk=64,
+                          quant=QuantConfig(method="mixfp4")), 0
+    if family == "moe":
+        from repro import configs
+        return configs.smoke_config("qwen3-moe-30b-a3b").replace(
+            quant=QuantConfig(method="mixfp4")), 5
+    if family == "ssm":
+        return ArchConfig(name="w4a4-ssm", family="ssm", n_layers=2,
+                          d_model=64, vocab=64, ssm_state=8, ssm_expand=2,
+                          quant=QuantConfig(method="mixfp4")), 3
+    if family == "hybrid":
+        return ArchConfig(name="w4a4-hyb", family="hybrid", n_layers=2,
+                          d_model=64, vocab=64, n_heads=2, n_kv_heads=2,
+                          d_ff=128, ssm_state=8, ssm_expand=2,
+                          ssm_version=2, ssm_head_dim=32, attn_period=2,
+                          attn_chunk=64,
+                          quant=QuantConfig(method="mixfp4")), 2
+    raise ValueError(family)
+
+
+@pytest.mark.parametrize("family", ["dense", "moe", "ssm", "hybrid"])
+def test_w4a4_stream_matches_dequantize_oracle(family):
+    """act_quant='mixfp4' decode must produce the identical token stream
+    to the dequantize-then-W4A16 oracle ('mixfp4-qdq': the SAME wire
+    bytes, decoded in the kernel's factored-scale form and served through
+    the W4A16 kernel) — so the W4A4 kernel's in-VMEM dual-format decode is
+    pinned against an independent path, per model family."""
+    cfg, seed = _family_cfg(family)
+    params, _ = build_model(cfg).init(jax.random.PRNGKey(seed))
+    streams = {}
+    for aq in ("mixfp4", "mixfp4-qdq"):
+        eng = ServeEngine(cfg, params, batch_size=1, max_len=16,
+                          act_quant=aq)
+        streams[aq] = _serve_one(eng, [3, 4, 5], 4)
+    assert streams["mixfp4"] == streams["mixfp4-qdq"], (family, streams)
+    assert all(0 <= t < cfg.vocab for t in streams["mixfp4"])
+
+
+def test_w4a4_concurrent_ragged_matches_oracle(small_cfg):
+    """W4A4 continuous batching at per-slot ragged lengths: each slot's
+    activations quantize at its own cache position, and the concurrent
+    W4A4 streams equal the oracle engine's (same admissions, same batch
+    shapes, same wire bytes).
+
+    NOTE the deliberate scope: concurrent is compared to concurrent, not
+    to solo engines.  The level-2 activation scale is the paper's
+    PER-TENSOR scale (Alg. 1 line 4) derived per decode step over the
+    whole batch's rows, so a slot's quantized bytes legitimately depend
+    on its batchmates' activation range — the documented W4A4 batch
+    coupling (docs/serving.md "Accuracy caveats"), unlike W4A16/packed-KV
+    where concurrent logits match solo to tolerance."""
+    model = build_model(small_cfg)
+    params, _ = model.init(jax.random.PRNGKey(11))
+    pa = np.array([3, 1, 4, 1, 5], np.int32)
+    pb = np.array([2, 7, 1, 8, 2, 8, 1], np.int32)   # ragged lengths
+
+    def both(aq):
+        eng = ServeEngine(small_cfg, params, batch_size=2, max_len=32,
+                          act_quant=aq)
+        eng.add_request(Request(uid=0, prompt=pa, max_new_tokens=4))
+        eng.add_request(Request(uid=1, prompt=pb, max_new_tokens=4))
+        out = {0: [], 1: []}
+        while any(s is not None for s in eng.slots):
+            for uid, tok in eng.step():
+                out[uid].append(tok)
+        return out
+
+    got, want = both("mixfp4"), both("mixfp4-qdq")
+    assert got == want
+    assert all(len(v) == 4 for v in got.values()), got
+
+
+def test_w4a4_composes_with_packed_kv(small_cfg):
+    """The two packed hot paths compose: act_quant='mixfp4' +
+    kv_quant='mixfp4' serves projections W4A4 AND reads the packed KV
+    cache through the fused attention kernel, still matching the oracle
+    run under the same cache format."""
+    model = build_model(small_cfg)
+    params, _ = model.init(jax.random.PRNGKey(7))
+    streams = {}
+    for aq in ("mixfp4", "mixfp4-qdq"):
+        eng = ServeEngine(small_cfg, params, batch_size=1, max_len=32,
+                          kv_quant="mixfp4", act_quant=aq)
+        assert isinstance(eng.cache["k"], qtensor.QTensor)
+        streams[aq] = _serve_one(eng, [9, 8, 7], 5)
+    assert streams["mixfp4"] == streams["mixfp4-qdq"], streams
+
+
+def test_w4a4_validation(small_cfg):
+    """act_quant gating: unknown values and the packless combination are
+    rejected up front with clear errors."""
+    model = build_model(small_cfg)
+    params, _ = model.init(jax.random.PRNGKey(0))
+    with pytest.raises(ValueError, match="act_quant"):
+        ServeEngine(small_cfg, params, batch_size=1, max_len=8,
+                    act_quant="int4")
+    with pytest.raises(ValueError, match="packed weights"):
+        ServeEngine(small_cfg, params, batch_size=1, max_len=8,
+                    act_quant="mixfp4", pack_weights=False)
 
 
 def test_pack_projections_skips_non_projection_leaves():

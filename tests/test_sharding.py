@@ -195,6 +195,41 @@ def test_qmm_sharded_replicated_pspec_falls_through():
         np.asarray(y), np.asarray(qtensor.qmm(x, qt, interpret=True)))
 
 
+@pytest.mark.parametrize("pspec", [P(None, "model"), P("model", None)])
+def test_qmm_sharded_w4a4_matches_qmm(pspec):
+    """qmm_sharded with a QTensor activation (W4A4): both operands packed
+    inside the shard body; column-parallel is the bitwise contract, and a
+    K spec ships payload/scale bytes split at block granularity."""
+    mesh = make_host_mesh(model=1)
+    qt = _qt2d(40, 96, 5)  # padded K: 40 -> 48 exercises the pad_to grid
+    sh = qt.with_sharding(mesh, pspec)
+    x = jax.random.normal(jax.random.PRNGKey(6), (4, 40))
+    qx = qtensor.quantize_rows(x, pad_to=2 * qt.payload.shape[0],
+                               interpret=True)
+    y0 = qtensor.qmm(qx, qt, interpret=True)
+    y1 = qtensor.qmm_sharded(qx, sh, mesh=mesh, interpret=True)
+    np.testing.assert_allclose(np.asarray(y0), np.asarray(y1), rtol=1e-6)
+    if pspec == P(None, "model"):  # column-parallel: bitwise contract
+        np.testing.assert_array_equal(np.asarray(y0), np.asarray(y1))
+
+
+def test_qmm_sharded_w4a4_rejects_off_grid_activation():
+    """A QTensor activation NOT on the weight's packed Kp grid (e.g.
+    quantized without pad_to against a padded weight) must be rejected,
+    not silently contracted over mismatched lanes."""
+    mesh = make_host_mesh(model=1)
+    qt = _qt2d(40, 96, 5)                       # Kp = 48
+    sh = qt.with_sharding(mesh, P(None, "model"))
+    with pytest.raises(ValueError, match="packed K grid"):
+        qtensor.qmm_sharded(
+            qtensor.quantize_rows(
+                jax.random.normal(jax.random.PRNGKey(8), (4, 32)),
+                interpret=True),                # Kp = 32 != 48
+            sh, mesh=mesh, interpret=True)
+
+
+
+
 # ---------------------------------------------------------------------------
 # serve layout derivation + placement helpers
 # ---------------------------------------------------------------------------
