@@ -1,15 +1,31 @@
 """Kernel-level benchmarks: fused Pallas quantizer / packed GEMM vs naive
 composition (interpret mode on CPU — relative structure, not TPU wall time;
-the roofline derives TPU-side numbers from the dry-run instead)."""
+the roofline derives TPU-side numbers from the dry-run instead).
+
+``bench_kernels`` / ``main`` additionally emit ``BENCH_kernels.json`` with
+the two PR-5 A/Bs (asserted by the CI ``kernels-bench-smoke`` leg):
+
+* ``fused``: the fused quantize+GEMM W4A4 kernel vs the two-dispatch
+  ``quantize_rows -> gemm_w4a4`` composition, per shape, with the bitwise
+  equality of the two outputs checked inline,
+* ``tuner``: the cost-model tile selection vs the historical divisor rule
+  on round AND non-round (prime-ish K/N) shapes — the divisor rule
+  collapses 272-wide dims to 16-wide tiles, the cost model pads to wide
+  tiles instead.
+"""
 from __future__ import annotations
+
+import argparse
+import json
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from benchmarks import common
 from repro.core import qtensor
 from repro.core.quantize import qdq as _qdq
-from repro.kernels import ref
+from repro.kernels import ops, ref, tuning
 
 
 def bench_quant_kernel():
@@ -38,6 +54,104 @@ def bench_gemm_w4a16():
     return {"us": us}
 
 
+def bench_fused_w4a4() -> dict:
+    """Fused quantize+GEMM prologue vs the two-dispatch composition over
+    decode- and prefill-shaped W4A4 GEMMs; checks bitwise equality of the
+    two paths while timing them."""
+    shapes = [("decode", 4, 256, 256), ("prefill", 64, 256, 512),
+              ("nonround", 8, 272, 272)]
+    out = {}
+    for tag, m, k, n in shapes:
+        x = jax.random.normal(jax.random.PRNGKey(m + n), (m, k)) * 2.0
+        w = jax.random.normal(jax.random.PRNGKey(k), (k, n)) * 0.3
+        qw = ops.pack_weight_qt(w)
+        kp = 2 * qw.payload.shape[0]
+        two = jax.jit(lambda a: qtensor.qmm(
+            qtensor.quantize_rows(a, pad_to=kp, interpret=True), qw,
+            interpret=True))
+        fused = jax.jit(lambda a: qtensor.qmm(
+            a, qw, fuse_act_quant=True, interpret=True))
+        bitwise = bool(np.array_equal(np.asarray(two(x)),
+                                      np.asarray(fused(x))))
+        us_two = common.time_fn(two, x)
+        us_fused = common.time_fn(fused, x)
+        out[tag] = {"m": m, "k": k, "n": n,
+                    "two_dispatch_us": us_two, "fused_us": us_fused,
+                    "speedup": us_two / max(us_fused, 1e-9),
+                    "bitwise_identical": bitwise}
+        common.emit(f"kernel_w4a4_fused_{tag}", us_fused,
+                    f"two_dispatch_us={us_two:.1f} "
+                    f"speedup={out[tag]['speedup']:.2f}x bitwise={bitwise}")
+    return out
+
+
+def bench_tile_tuner() -> dict:
+    """Cost-model tiler vs the historical divisor rule (W4A16 path).
+
+    Round shapes: both rules land on the same wide tiles (no regression).
+    Non-round shapes (prime-ish K/N = 17*16, 19*16): the divisor rule
+    collapses to 16-wide tiles (hundreds of grid cells); the cost model
+    pads K/N up to wide tiles instead."""
+    shapes = [("round", 32, 256, 256), ("round_big", 16, 512, 512),
+              ("nonround", 32, 272, 272), ("nonround_prime", 16, 304, 304)]
+    out = {}
+    for tag, m, k, n in shapes:
+        x = jax.random.normal(jax.random.PRNGKey(3), (m, k))
+        w = jax.random.normal(jax.random.PRNGKey(4), (k, n)) * 0.3
+        qw = ops.pack_weight_qt(w)
+        kp, np_ = 2 * qw.payload.shape[0], qw.payload.shape[1]
+        # divisor rule: the PR-1 tiles on the unpadded operands
+        bn_d = tuning.divisor_tile(np_, 256)
+        bk_d = tuning.divisor_tile(kp, 256)
+        div = jax.jit(lambda a: ops.gemm_w4a16(
+            a, qw.payload, qw.scales, qw.scale32,
+            bm=min(128, m), bn=bn_d, bk=bk_d, interpret=True))
+        # cost model: qmm's own dispatch (pads K/N to the tuned grid)
+        cm = jax.jit(lambda a: qtensor.qmm(a, qw, interpret=True))
+        ch = tuning.select_tiles("w4a16", m, kp, np_)
+        us_div = common.time_fn(div, x, iters=10, warmup=3)
+        us_cm = common.time_fn(cm, x, iters=10, warmup=3)
+        out[tag] = {"m": m, "k": k, "n": n,
+                    "divisor": {"bn": bn_d, "bk": bk_d, "us": us_div},
+                    "cost_model": {"bm": ch.bm, "bn": ch.bn, "bk": ch.bk,
+                                   "k_pad": ch.k_pad, "n_pad": ch.n_pad,
+                                   "us": us_cm},
+                    # same tiles => the on-hardware kernels are identical
+                    # (interpret-mode wall time is then pure noise)
+                    "tiles_identical": (bn_d, bk_d) == (ch.bn, ch.bk),
+                    "speedup": us_div / max(us_cm, 1e-9)}
+        common.emit(f"kernel_tile_tuner_{tag}", us_cm,
+                    f"divisor_us={us_div:.1f} "
+                    f"divisor_tiles=({bn_d},{bk_d}) "
+                    f"cost_model_tiles=({ch.bn},{ch.bk}) "
+                    f"speedup={out[tag]['speedup']:.2f}x")
+    return out
+
+
+def bench_kernels(out_path: str = "BENCH_kernels.json") -> dict:
+    """The PR-5 kernel A/Bs -> BENCH_kernels.json (CI kernels-bench-smoke
+    asserts the fields; the fused path must be bitwise and the non-round
+    cost-model tiles must be >= 64-wide)."""
+    results = {"fused": bench_fused_w4a4(), "tuner": bench_tile_tuner()}
+    with open(out_path, "w") as f:
+        json.dump(results, f, indent=2, sort_keys=True)
+    print(f"# wrote {out_path}")
+    return results
+
+
+def bench_for_run():
+    """benchmarks.run section entry (CSV rows + BENCH_kernels.json)."""
+    return bench_kernels()
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="BENCH_kernels.json")
+    args = ap.parse_args(argv)
+    print("name,us_per_call,derived")
+    bench_kernels(args.out)
+
+
 def bench_qdq_cost_vs_single_format():
     """The fused dual-format evaluation costs ~the same HBM traffic as one
     format (shared absmax, one read) — count jaxpr flops as the proxy."""
@@ -48,3 +162,7 @@ def bench_qdq_cost_vs_single_format():
     common.emit("quant_flops_mixfp4_vs_nvfp4", 0.0,
                 f"ratio={f_mix / f_one:.2f} (dual-candidate overhead)")
     return {"ratio": f_mix / f_one}
+
+
+if __name__ == "__main__":
+    main()

@@ -25,6 +25,7 @@ def main() -> None:
         ("fig12_hw", paper_tables.bench_fig12_hardware_model),
         ("kernel_quant", kernels_bench.bench_quant_kernel),
         ("kernel_gemm", kernels_bench.bench_gemm_w4a16),
+        ("kernel_fused_and_tuner", kernels_bench.bench_for_run),
         ("kernel_qdq_cost", kernels_bench.bench_qdq_cost_vs_single_format),
         ("serving", serving_bench.bench_for_run),
         ("table3_rtn", paper_tables.bench_table3_rtn_formats),

@@ -12,11 +12,14 @@ per commit:
 * prefill throughput, historical token-by-token decode replay vs the
   batched ``prefill_slot`` entry (one jit dispatch per admission), plus the
   engine's dispatch counter,
-* with ``--act-quant mixfp4``: W4A16 vs W4A4 decode step latency plus the
-  accuracy drift of quantizing activations — greedy-token agreement over a
-  fixed generation and the max |logit delta| on the first post-prefill
-  decode step (``results["act_quant"]``; asserted by the CI
-  serving-bench-smoke leg).
+* with ``--act-quant mixfp4``: W4A16 vs fused W4A4 vs two-dispatch W4A4
+  decode step latency, the GEMM-path dispatch count per projection (the
+  fused quantize+GEMM prologue must cost ONE where the composition costs
+  two, and must emit the identical token stream), plus the accuracy drift
+  of quantizing activations — greedy-token agreement over a fixed
+  generation and the max |logit delta| on the first post-prefill decode
+  step (``results["act_quant"]``; asserted by the CI serving-bench-smoke
+  leg).
 
 Run:  PYTHONPATH=src python -m benchmarks.serving_bench [--tiny] [--out F]
       [--act-quant mixfp4]
@@ -49,7 +52,9 @@ def _bench_cfg(tiny: bool) -> ArchConfig:
 
 
 def _decode_us(eng: ServeEngine) -> float:
-    """Median wall time of one jitted decode step at the engine's batch."""
+    """Median wall time of one jitted decode step at the engine's batch
+    (the kv-quant section; the fused-vs-2pass W4A4 comparison uses the
+    interleaved min-of-samples loop in _act_quant_section instead)."""
     toks = jnp.zeros((eng.batch_size,), jnp.int32)
     lens = jnp.asarray(eng.lengths.copy())
     return common.time_fn(
@@ -75,24 +80,52 @@ def _replay_prefill_us(eng: ServeEngine, prompt: np.ndarray) -> float:
 
 
 def _batched_prefill_us(eng: ServeEngine, prompt: np.ndarray) -> float:
-    tokens = jnp.asarray(prompt[None, :])
+    p_len = len(prompt)
+    toks = prompt
+    if eng.prefill_buckets:
+        pb = eng.bucket_len(p_len, eng.max_len)
+        if pb > p_len:   # same guard as ServeEngine._prefill_slot
+            toks = np.pad(prompt, (0, pb - p_len))
+    tokens = jnp.asarray(toks[None, :])
     slot = jnp.int32(0)
-    return common.time_fn(
-        lambda: eng._prefill(eng.params, tokens, eng.cache, slot),
-        iters=3, warmup=1)
+    if eng.prefill_buckets:
+        fn = lambda: eng._prefill(eng.params, tokens, eng.cache, slot,  # noqa: E731
+                                  jnp.int32(p_len))
+    else:
+        fn = lambda: eng._prefill(eng.params, tokens, eng.cache, slot)  # noqa: E731
+    return common.time_fn(fn, iters=3, warmup=1)
+
+
+def _gemm_dispatch_counts(eng: ServeEngine) -> dict:
+    """Trace one decode step under the kernel-entry counter: how many
+    GEMM-path Pallas launches the step costs (quantize_rows + gemm_*)."""
+    from repro.kernels import ops
+
+    toks = jnp.zeros((eng.batch_size,), jnp.int32)
+    lens = jnp.asarray(eng.lengths.copy())
+    with ops.count_dispatches() as counts:
+        jax.eval_shape(
+            lambda p, t, c, l: eng.model.decode_step(p, t, eng.ctx, c, l),
+            eng.params, toks, eng.cache, lens)
+    return dict(counts)
 
 
 def _act_quant_section(cfg, params, batch: int, max_len: int,
                        prompt: np.ndarray, n_new: int = 8) -> dict:
-    """W4A16 vs W4A4 serving: decode step latency + accuracy drift.
+    """W4A16 vs fused W4A4 vs two-dispatch W4A4 serving: decode step
+    latency, GEMM-path dispatch counts, and accuracy drift.
 
     Drift is measured two ways against the same packed weights: greedy
     token agreement over an ``n_new``-token generation, and the max
     absolute logit delta of one decode step taken from the identical
-    post-prefill state (before the streams can diverge)."""
+    post-prefill state (before the streams can diverge).  The fused path
+    must emit the identical token stream to the two-dispatch composition
+    (bitwise-identical kernels) while costing ONE GEMM-path dispatch per
+    projection instead of two."""
     out: dict = {"decode_step_us": {}, "n_new": n_new}
-    streams, logits = {}, {}
-    for key, aq in (("w4a16", None), ("w4a4", "mixfp4")):
+    streams, logits, dispatches, engines = {}, {}, {}, {}
+    for key, aq in (("w4a16", None), ("w4a4", "mixfp4"),
+                    ("w4a4_2pass", "mixfp4-2pass")):
         eng = ServeEngine(cfg, params, batch_size=batch, max_len=max_len,
                           act_quant=aq)
         eng.add_request(Request(uid=0, prompt=prompt, max_new_tokens=n_new))
@@ -106,17 +139,55 @@ def _act_quant_section(cfg, params, batch: int, max_len: int,
         while any(s is not None for s in eng.slots):
             toks.extend(t for _, t in eng.step())
         streams[key] = toks
-        out["decode_step_us"][key] = _decode_us(eng)
+        dispatches[key] = _gemm_dispatch_counts(eng)
+        engines[key] = eng
+    # time the three paths INTERLEAVED with a min-of-samples estimator:
+    # back-to-back per-engine medians pick up machine drift between the
+    # runs, which on CPU interpret (~1 ms steps) is larger than the
+    # fused-vs-2pass delta itself
+    import time as _time
+    step_args = {}
+    for key, eng in engines.items():
+        toks = jnp.zeros((batch,), jnp.int32)
+        lens = jnp.asarray(eng.lengths.copy())
+        step_args[key] = (toks, lens)
+        for _ in range(3):  # warm the jit caches
+            jax.block_until_ready(
+                eng._decode(eng.params, toks, eng.cache, lens))
+    samples: dict = {key: [] for key in engines}
+    for _ in range(15):
+        for key, eng in engines.items():
+            toks, lens = step_args[key]
+            t0 = _time.perf_counter()
+            jax.block_until_ready(
+                eng._decode(eng.params, toks, eng.cache, lens))
+            samples[key].append((_time.perf_counter() - t0) * 1e6)
+    for key, aq in (("w4a16", "bf16"), ("w4a4", "mixfp4"),
+                    ("w4a4_2pass", "mixfp4-2pass")):
+        out["decode_step_us"][key] = float(np.min(samples[key]))
         common.emit(f"serving_decode_step_{key}", out["decode_step_us"][key],
-                    f"batch={batch} act_quant={aq or 'bf16'}")
+                    f"batch={batch} act_quant={aq}")
     agree = sum(a == b for a, b in zip(streams["w4a16"], streams["w4a4"]))
     out["token_agreement"] = agree / max(len(streams["w4a16"]), 1)
     out["logit_max_abs_delta"] = float(
         np.max(np.abs(logits["w4a4"] - logits["w4a16"])))
     out["logit_max_abs"] = float(np.max(np.abs(logits["w4a16"])))
+    # fused-vs-composition: bitwise-identical kernels => identical streams
+    out["fused_matches_2pass"] = streams["w4a4"] == streams["w4a4_2pass"]
+    # one GEMM-path dispatch per projection: the W4A16 trace launches
+    # exactly one kernel per projection, so it is the projection count
+    n_proj = max(sum(dispatches["w4a16"].values()), 1)
+    out["gemm_dispatches"] = dispatches
+    out["gemm_dispatches_per_projection"] = {
+        k: sum(d.values()) / n_proj for k, d in dispatches.items()}
     common.emit("serving_w4a4_drift", 0.0,
                 f"token_agreement={out['token_agreement']:.2f} "
                 f"logit_max_abs_delta={out['logit_max_abs_delta']:.4f}")
+    common.emit(
+        "serving_w4a4_dispatches", 0.0,
+        f"per_projection="
+        f"{out['gemm_dispatches_per_projection']} "
+        f"fused_matches_2pass={out['fused_matches_2pass']}")
     return out
 
 
@@ -166,6 +237,9 @@ def bench_serving(out_path: str = "BENCH_serving.json", *,
         "dispatches_per_admission":
             eng.prefill_dispatches / max(eng.admissions, 1),
         "prompt_len": prompt_len,
+        "buckets": eng.prefill_buckets or "off",
+        "bucket_compiles": eng.prefill_compiles,
+        "bucket_cache_hits": eng.prefill_cache_hits,
     }
     common.emit("serving_prefill_batched", batched_us,
                 f"replay_us={replay_us:.1f} "

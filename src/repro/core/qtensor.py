@@ -441,16 +441,6 @@ def stack(qts: Sequence[QTensor]) -> QTensor:
 # ---------------------------------------------------------------------------
 # qmm: dispatching quantized matmul
 # ---------------------------------------------------------------------------
-def _pick_tile(dim: int, cap: int, mult: int) -> int:
-    """Largest tile <= cap that divides ``dim`` and is a multiple of
-    ``mult`` (``dim`` is always a multiple of ``mult`` here)."""
-    t = min(cap, dim)
-    t -= t % mult
-    while t > mult and dim % t:
-        t -= mult
-    return max(t, mult) if dim % mult == 0 else 1
-
-
 def _mm_bf16(a: jax.Array, b: jax.Array) -> jax.Array:
     return jax.lax.dot_general(
         a.astype(jnp.bfloat16), b.astype(jnp.bfloat16),
@@ -458,23 +448,58 @@ def _mm_bf16(a: jax.Array, b: jax.Array) -> jax.Array:
         preferred_element_type=jnp.float32)
 
 
+def _pad_weight_operands(w: "QTensor", ch) -> tuple:
+    """Zero-pad the packed weight payload/scales from the storage (Kp, Np)
+    grid up to the tuner's (k_pad, n_pad) tile grid.  Zero payload bytes
+    under zero scale bytes decode to exact zeros, so padded lanes/columns
+    contribute nothing; the cost model charges the copy this creates, so
+    padding only happens when escaping degenerate tiles is worth it."""
+    kp2, np_ = w.payload.shape
+    kp = 2 * kp2
+    wp, ws = w.payload, w.scales
+    if ch.k_pad != kp or ch.n_pad != np_:
+        wp = jnp.pad(wp, ((0, (ch.k_pad - kp) // 2), (0, ch.n_pad - np_)))
+        ws = jnp.pad(ws, ((0, (ch.k_pad - kp) // _G),
+                          (0, (ch.n_pad - np_) // _G)))
+    return wp, ws
+
+
+def _act_scale32_like_quantize_rows(x2: jax.Array) -> jax.Array:
+    """The per-tensor activation scale exactly as ``mixfp4_quant_rows``
+    derives it (Alg. 1 line 4 — one owner: ``scaling.tensor_scale``, which
+    the quantizer kernel matches bit-for-bit); zero-padding cannot change
+    it, so computing it on the unpadded rows is equivalent."""
+    return scaling.tensor_scale(x2.astype(jnp.float32))
+
+
 def qmm(x: Union[jax.Array, QTensor], w: Union[jax.Array, QTensor], *,
-        interpret: bool | None = None, allow_fallback: bool = True
-        ) -> jax.Array:
+        interpret: bool | None = None, allow_fallback: bool = True,
+        fuse_act_quant: bool = False,
+        act_scale32: jax.Array | float | None = None) -> jax.Array:
     """y = x @ w with quantized operands, f32 output.
 
     Dispatch rules (docs/qtensor.md):
       * ``x`` dense, ``w`` 2-D QTensor  -> Pallas W4A16 kernel (serving
         decode: weight HBM traffic is 4.5 bits/value).
+      * ``x`` dense + ``fuse_act_quant=True`` -> Pallas W4A4 kernel with
+        the row quantizer fused into the prologue: ONE dispatch per GEMM,
+        bitwise-identical to ``quantize_rows(x, pad_to=Kp)`` -> ``qmm``
+        (which remains the oracle).  ``act_scale32`` pins the per-tensor
+        activation scale (sharded row-parallel shards must share the
+        global scale); default derives it exactly as ``quantize_rows``.
       * ``x`` 1-D QTensor (last axis), ``w`` 2-D QTensor -> Pallas W4A4.
       * anything else (1-D weights, stacked batch dims, K mismatch) ->
         qdq-simulated fallback: dequantize + bf16 matmul w/ f32 accum.
 
     Padding to the packed (Kp, Np) grid and kernel tile selection happen
-    here — callers never pad.  ``interpret`` defaults to the backend rule
-    (native on TPU, interpret elsewhere).
+    here — callers never pad.  Tiles come from the cost-model autotuner
+    (``kernels.tuning``): M rounds up the fixed ``bm`` ladder (so decode-
+    batch wobble reuses one compiled kernel) and K/N pad up to the chosen
+    tile multiples instead of collapsing to 16-wide divisor tiles.
+    ``interpret`` defaults to the backend rule (native on TPU, interpret
+    elsewhere).
     """
-    from repro.kernels import ops  # deferred: kernels import core
+    from repro.kernels import ops, tuning  # deferred: kernels import core
 
     if interpret is None:
         interpret = ops.default_interpret()
@@ -483,6 +508,16 @@ def qmm(x: Union[jax.Array, QTensor], w: Union[jax.Array, QTensor], *,
     x_is_qt = isinstance(x, QTensor)
     w_kernel_ok = (w_is_qt and isinstance(w.layout, BlockLayout2D)
                    and w.payload.ndim == 2)
+
+    if fuse_act_quant and x_is_qt:
+        raise ValueError("qmm: fuse_act_quant quantizes a DENSE activation "
+                         "in the kernel prologue; the operand is already "
+                         "packed — drop the flag or pass the dense rows")
+    if fuse_act_quant and not w_kernel_ok:
+        raise ValueError("qmm: fuse_act_quant needs a kernel-dispatchable "
+                         "2-D QTensor weight (scan slices stacks first); "
+                         "silently falling back would drop the W4A4 "
+                         "semantics the caller asked for")
 
     def fallback():
         if not allow_fallback:
@@ -513,17 +548,16 @@ def qmm(x: Union[jax.Array, QTensor], w: Union[jax.Array, QTensor], *,
         if not ok:
             return fallback()
         m = x.payload.shape[0]
-        bm = min(128, m)
-        mp = -(-m // bm) * bm   # pad M like K/N: padded rows decode to zero
+        ch = tuning.select_tiles("w4a4", m, kp, np_)
         xp, xs = x.payload, x.scales
-        if mp != m:
-            xp = jnp.pad(xp, ((0, mp - m), (0, 0)))
-            xs = jnp.pad(xs, ((0, mp - m), (0, 0)))
-        bn = _pick_tile(np_, 256, _G)
-        bk = _pick_tile(kp, 256, _G)
-        y = ops.gemm_w4a4(xp, xs, x.scale32,
-                          w.payload, w.scales, w.scale32,
-                          bm=bm, bn=bn, bk=bk, interpret=interpret)
+        if ch.m_pad != m or ch.k_pad != kp:
+            # padded rows/lanes: zero payload + zero scale bytes decode to
+            # exact zeros, the same terms the fused prologue contributes
+            xp = jnp.pad(xp, ((0, ch.m_pad - m), (0, (ch.k_pad - kp) // 2)))
+            xs = jnp.pad(xs, ((0, ch.m_pad - m), (0, (ch.k_pad - kp) // _G)))
+        wp, ws = _pad_weight_operands(w, ch)
+        y = ops.gemm_w4a4(xp, xs, x.scale32, wp, ws, w.scale32,
+                          bm=ch.bm, bn=ch.bn, bk=ch.bk, interpret=interpret)
         return y[:m, :n_logical]
 
     if x.shape[-1] != k_logical:
@@ -531,16 +565,36 @@ def qmm(x: Union[jax.Array, QTensor], w: Union[jax.Array, QTensor], *,
     lead = x.shape[:-1]
     m = int(math.prod(lead)) if lead else 1
     x2 = x.reshape(m, k_logical)
-    if kp != k_logical:  # padded weight K: zero-pad x (padded W rows decode
-        x2 = jnp.pad(x2, ((0, 0), (0, kp - k_logical)))  # to exact zeros)
-    bm = min(128, m)
-    mp = -(-m // bm) * bm   # pad M to a tile multiple rather than letting a
-    if mp != m:             # prime M degrade to 1-row grid tiles
-        x2 = jnp.pad(x2, ((0, mp - m), (0, 0)))
-    bn = _pick_tile(np_, 256, _G)
-    bk = _pick_tile(kp, 256, _G)
-    y = ops.gemm_w4a16(x2, w.payload, w.scales, w.scale32,
-                       bm=bm, bn=bn, bk=bk, interpret=interpret)
+
+    if fuse_act_quant:
+        # Fused quantize+GEMM prologue (W4A4 in one dispatch): the scale is
+        # derived (or pinned) here, the dense rows are zero-padded onto the
+        # tuner grid, and the kernel quantizes tile-by-tile in VMEM.
+        s32x = (_act_scale32_like_quantize_rows(x2) if act_scale32 is None
+                else jnp.asarray(act_scale32, jnp.float32))
+        ch = tuning.select_tiles("w4a4_fused", m, kp, np_)
+        # rows cast to f32 HERE, before padding/streaming — exactly where
+        # the composition's quantize_rows casts (see mixfp4_gemm_w4a4_fused:
+        # moving the convert can change XLA's fusion of the surrounding
+        # graph and flip the dual-format select at near-ties)
+        x2p = x2.astype(jnp.float32)
+        if ch.m_pad != m or ch.k_pad != k_logical:
+            x2p = jnp.pad(x2p, ((0, ch.m_pad - m),
+                                (0, ch.k_pad - k_logical)))
+        wp, ws = _pad_weight_operands(w, ch)
+        y = ops.gemm_w4a4_fused(x2p, s32x, wp, ws, w.scale32,
+                                bm=ch.bm, bn=ch.bn, bk=ch.bk,
+                                interpret=interpret)
+        return y[:m, :n_logical].reshape(*lead, n_logical)
+
+    ch = tuning.select_tiles("w4a16", m, kp, np_)
+    if ch.k_pad != k_logical:  # padded weight K: zero-pad x (padded W rows
+        x2 = jnp.pad(x2, ((0, 0), (0, ch.k_pad - k_logical)))  # decode to 0)
+    if ch.m_pad != m:       # pad M up the bm ladder rather than letting a
+        x2 = jnp.pad(x2, ((0, ch.m_pad - m), (0, 0)))  # prime M degrade
+    wp, ws = _pad_weight_operands(w, ch)
+    y = ops.gemm_w4a16(x2, wp, ws, w.scale32,
+                       bm=ch.bm, bn=ch.bn, bk=ch.bk, interpret=interpret)
     return y[:m, :n_logical].reshape(*lead, n_logical)
 
 
@@ -587,7 +641,8 @@ def kn_partitions(qt: QTensor) -> tuple:
 
 
 def qmm_sharded(x: Union[jax.Array, QTensor], w: QTensor, *, mesh,
-                interpret: bool | None = None) -> jax.Array:
+                interpret: bool | None = None,
+                fuse_act_quant: bool = False) -> jax.Array:
     """``qmm`` for a model-parallel packed weight: the kernel runs per
     shard under ``shard_map``, so the payload/scale bytes are never
     gathered or dequantized to a full dense weight.
@@ -616,6 +671,15 @@ def qmm_sharded(x: Union[jax.Array, QTensor], w: QTensor, *, mesh,
         single-device (the psum reassociates the K reduction), which is
         why the engine's default serve layout avoids it
         (docs/sharding.md).
+
+    ``fuse_act_quant=True`` (dense ``x`` only) runs the fused quantize+GEMM
+    W4A4 kernel per shard in ONE dispatch: the per-tensor activation scale
+    is derived OUTSIDE ``shard_map`` from the full rows and pinned into
+    every shard's prologue, so a K shard quantizes its slice under the
+    global Alg. 1 scale — the same bytes the quantize-once-and-split
+    composition produces.  Column-parallel stays bitwise-identical to the
+    single-device fused kernel: the tuner picks ``bk`` independently of N,
+    so every shard keeps the single-device K tiling.
     """
     from repro.distributed.sharding import shard_map  # deferred: layering
 
@@ -640,9 +704,14 @@ def qmm_sharded(x: Union[jax.Array, QTensor], w: QTensor, *, mesh,
     if x.shape[-1] != k_log:
         raise ValueError(f"qmm_sharded: x K={x.shape[-1]} vs weight "
                          f"K={k_log}")
+    if fuse_act_quant and x_is_qt:
+        raise ValueError("qmm_sharded: fuse_act_quant quantizes a DENSE "
+                         "activation in the kernel prologue; the operand "
+                         "is already packed")
     k_e, n_e = kn_partitions(w)
     if k_e is None and n_e is None:
-        return qmm(x, w, interpret=interpret)
+        return qmm(x, w, interpret=interpret,
+                   fuse_act_quant=fuse_act_quant)
     sizes = dict(mesh.shape)
     ks, ns = _axes_size(k_e, sizes), _axes_size(n_e, sizes)
     _check_block_granularity(k_e, kp, w.layout.bm, "K", sizes)
@@ -669,6 +738,12 @@ def qmm_sharded(x: Union[jax.Array, QTensor], w: QTensor, *, mesh,
         x_args = (xk,)
         x_specs = (P(*[None] * (x.ndim - 1), k_e),)
         lead_specs = (None,) * (x.ndim - 1)
+        if fuse_act_quant:
+            # global per-tensor scale, derived from the FULL rows before
+            # the K split and replicated into every shard's prologue
+            s32x = _act_scale32_like_quantize_rows(xk.reshape(-1, kp))
+            x_args = x_args + (s32x,)
+            x_specs = x_specs + (P(),)
 
     def body(x_parts, wp, ws, w32):
         k_loc = 2 * wp.shape[0]   # local K, padded-as-logical (see above)
@@ -679,9 +754,14 @@ def qmm_sharded(x: Union[jax.Array, QTensor], w: QTensor, *, mesh,
             xp, xs, x32 = x_parts
             xl = QTensor(xp, xs, x32, x.method, BlockLayout1D(-1, _G),
                          (xp.shape[0], k_loc), x.dtype)
+            y = qmm(xl, qt_w, interpret=interpret)
+        elif fuse_act_quant:
+            xl, s32_local = x_parts
+            y = qmm(xl, qt_w, interpret=interpret, fuse_act_quant=True,
+                    act_scale32=s32_local)
         else:
             (xl,) = x_parts
-        y = qmm(xl, qt_w, interpret=interpret)   # f32 out on both paths
+            y = qmm(xl, qt_w, interpret=interpret)   # f32 out on all paths
         if k_e is not None:
             y = jax.lax.psum(
                 y, k_e if isinstance(k_e, tuple) else (k_e,))

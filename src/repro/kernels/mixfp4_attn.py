@@ -140,7 +140,7 @@ def mixfp4_attn_decode(
     k_scale32: jax.Array | float = 1.0,
     v_scale32: jax.Array | float = 1.0,
     softcap: float = 0.0,
-    bs: int = 128,
+    bs: int | None = None,
     interpret: bool = False,
 ) -> jax.Array:
     """One decode-attention step over the packed KV cache -> (B, H, dh) f32.
@@ -149,7 +149,10 @@ def mixfp4_attn_decode(
     current token's just-written row); ``window`` (0 = full causal) and the
     per-tensor scales are dynamic operands so the per-layer ``lax.scan`` in
     the model can trace them.  S is padded to a multiple of the key-block
-    tile here; padded rows are masked, so callers never pad.
+    tile here; padded rows are masked, so callers never pad.  ``bs=None``
+    asks the cost-model tuner (``kernels.tuning.select_attn_key_block``)
+    for the key-block rows per flash step — sized against the same VMEM /
+    traffic model the GEMM tiles use.
     """
     b, h, dh = q.shape
     s, hkv, dh2 = k_payload.shape[1:]
@@ -158,6 +161,9 @@ def mixfp4_attn_decode(
     assert h % hkv == 0, f"H={h} not a multiple of Hkv={hkv}"
     assert k_scales.shape == (b, s, hkv, dh // _G)
 
+    if bs is None:
+        from repro.kernels import tuning  # deferred: keep module deps flat
+        bs = tuning.select_attn_key_block(s, hkv, dh)
     bs = min(bs, max(s, 1))
     sp = -(-s // bs) * bs
     if sp != s:  # padded rows are masked by `kpos < lengths`

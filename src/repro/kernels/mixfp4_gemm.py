@@ -8,19 +8,37 @@ scale fused on the VPU*, and the MXU performs the matmul with f32
 accumulation.  Eq. 35's factored-scale dot is restructured to scale-before-
 MXU because the 128x128 systolic array cannot emit per-16-element partials.
 
-Two entry points:
-  mixfp4_gemm_w4a16 : bf16 activations x packed weight  (serving decode path;
-                      weight HBM traffic is 4.5 bits/value instead of 16)
-  mixfp4_gemm_w4a4  : packed activations x packed weight (full FP4 MMA analog)
+Three entry points:
+  mixfp4_gemm_w4a16      : bf16 activations x packed weight  (serving decode
+                           path; weight HBM traffic is 4.5 bits/value)
+  mixfp4_gemm_w4a4       : packed activations x packed weight (full FP4 MMA
+                           analog; the two-dispatch composition's GEMM half)
+  mixfp4_gemm_w4a4_fused : bf16/f32 activations quantized to MixFP4 rows IN
+                           THE KERNEL PROLOGUE (Alg. 1 via the shared
+                           ``quant_block_kernel_math``), then the same dual-
+                           decode MMA — serve-time W4A4 in ONE dispatch per
+                           projection instead of quantize_rows + GEMM.
 
 Weight layout (from ``pack_weight_qt``): payload (K//2, N) uint8 with two
 K-consecutive nibbles per byte; scales (K//16, N//16) uint8 for the paper's
 2-D 16x16 weight tiles.  Activation layout (W4A4): payload (M, K//2), scales
 (M, K//16) — 1-D blocks along the contraction axis.
 
-Grid: (M/bm, N/bn, K/bk), K innermost; the f32 output block is revisited
-across the K loop and used as the accumulator (standard Pallas reduction
-pattern), initialised at k==0.
+Grid and streaming: the grid is (M/bm, N/bn) with the K loop INSIDE the
+kernel.  Packed weight payload/scale slabs (and the activation tile) live
+in HBM (`memory_space=ANY`) and are streamed into two VMEM slots with
+manual async copies — the next K slab's DMA is issued before the current
+slab is consumed (double buffering), and the f32 accumulator block never
+leaves VMEM scratch, replacing the historical 3-D-grid output-revisit
+pattern.  Accumulation remains K-ordered (`acc += dot(x_k, w_k) * s32` per
+K step), so the fused and two-dispatch paths are bitwise-comparable.
+
+The fused prologue is bitwise-identical to the composition by construction:
+``quant_block_kernel_math`` returns values already ON the 4-bit lattice and
+an E4M3-valued block scale, the nibble encode/decode round trip is exact on
+both lattices, and the scale byte's pack/unpack is a bitcast — so
+``(q * s8).astype(bfloat16)`` equals what ``_expand_act_tile`` reconstructs
+from the packed bytes, element for element.
 """
 from __future__ import annotations
 
@@ -29,8 +47,11 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
-__all__ = ["mixfp4_gemm_w4a16", "mixfp4_gemm_w4a4"]
+from repro.kernels.mixfp4_quant import quant_block_kernel_math
+
+__all__ = ["mixfp4_gemm_w4a16", "mixfp4_gemm_w4a4", "mixfp4_gemm_w4a4_fused"]
 
 _G = 16
 
@@ -92,23 +113,135 @@ def _expand_act_tile(xp, xs, bm: int, bk: int):
     return (vals * s_full).astype(jnp.bfloat16)
 
 
+def _quantize_act_tile(x: jax.Array, inv_s32: jax.Array, bm: int, bk: int):
+    """Fused prologue: quantize a dense f32 x tile to MixFP4 rows in-VMEM
+    (Alg. 1 dual-format select via the shared ``quant_block_kernel_math``)
+    and emit the SAME bf16 values the packed decode path reconstructs —
+    ``q`` is exactly decode(encode(q)) on both lattices and ``s8`` is
+    already E4M3-valued, so ``(q * s8).astype(bf16)`` is bitwise what
+    ``_expand_act_tile`` returns for the two-dispatch composition."""
+    xs = (x.astype(jnp.float32) * inv_s32).reshape(bm, bk // _G, _G)
+    q, s8, _t = quant_block_kernel_math(xs)
+    vals = (q * s8[..., None]).reshape(bm, bk)
+    return vals.astype(jnp.bfloat16)
+
+
+# ---------------------------------------------------------------------------
+# Shared double-buffered kernel body
+# ---------------------------------------------------------------------------
+def _stream_gemm_body(mode: str, nk: int, bm: int, bn: int, bk: int,
+                      s32_ref, x_refs, wp_hbm, ws_hbm, o_ref,
+                      x_slabs, wp_slab, ws_slab, acc_ref, sem):
+    """Grid cell (i, j): stream K slabs of the packed operands HBM->VMEM
+    through two buffer slots, overlapping the next slab's DMA with the
+    current slab's decode + MXU work; the f32 accumulator stays in VMEM
+    scratch and is written to the output block once, after the K loop."""
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+    s32 = s32_ref[0, 0]
+
+    def dmas(slot, kk):
+        out = []
+        if mode == "w4a4":
+            xp_hbm, xs_hbm = x_refs
+            xp_slab, xs_slab = x_slabs
+            out.append(pltpu.make_async_copy(
+                xp_hbm.at[pl.ds(i * bm, bm), pl.ds(kk * (bk // 2), bk // 2)],
+                xp_slab.at[slot], sem.at[slot, 0]))
+            out.append(pltpu.make_async_copy(
+                xs_hbm.at[pl.ds(i * bm, bm), pl.ds(kk * (bk // _G), bk // _G)],
+                xs_slab.at[slot], sem.at[slot, 1]))
+        else:
+            (x_hbm,) = x_refs
+            (x_slab,) = x_slabs
+            out.append(pltpu.make_async_copy(
+                x_hbm.at[pl.ds(i * bm, bm), pl.ds(kk * bk, bk)],
+                x_slab.at[slot], sem.at[slot, 0]))
+        out.append(pltpu.make_async_copy(
+            wp_hbm.at[pl.ds(kk * (bk // 2), bk // 2), pl.ds(j * bn, bn)],
+            wp_slab.at[slot], sem.at[slot, 2]))
+        out.append(pltpu.make_async_copy(
+            ws_hbm.at[pl.ds(kk * (bk // _G), bk // _G),
+                      pl.ds(j * (bn // _G), bn // _G)],
+            ws_slab.at[slot], sem.at[slot, 3]))
+        return out
+
+    for dma in dmas(0, 0):
+        dma.start()
+    acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    if mode == "w4a4_fused":
+        inv_s32 = 1.0 / s32_ref[0, 1]   # x per-tensor scale (prologue)
+
+    def body(kk, carry):
+        cur = kk % 2
+        nxt = (kk + 1) % 2
+
+        @pl.when(kk + 1 < nk)
+        def _prefetch():
+            for dma in dmas(nxt, kk + 1):
+                dma.start()
+
+        for dma in dmas(cur, kk):
+            dma.wait()
+
+        if mode == "w4a16":
+            x = x_slabs[0][cur].astype(jnp.bfloat16)
+        elif mode == "w4a4":
+            x = _expand_act_tile(x_slabs[0][cur], x_slabs[1][cur], bm, bk)
+        else:
+            x = _quantize_act_tile(x_slabs[0][cur], inv_s32, bm, bk)
+        w = _expand_weight_tile(wp_slab[cur], ws_slab[cur], bk, bn)
+        acc = jax.lax.dot(x, w, preferred_element_type=jnp.float32)
+        acc_ref[...] += acc * s32
+        return carry
+
+    jax.lax.fori_loop(0, nk, body, 0)
+    o_ref[...] = acc_ref[...]
+
+
+def _stream_gemm_call(mode: str, x_args: tuple, x_scratch: tuple,
+                      s32: jax.Array, payload, scales,
+                      m: int, n: int, k: int,
+                      bm: int, bn: int, bk: int, interpret: bool):
+    assert m % bm == 0 and n % bn == 0 and k % bk == 0
+    assert bk % _G == 0 and bn % _G == 0
+    nk = k // bk
+    grid = (m // bm, n // bn)
+    any_spec = pl.BlockSpec(memory_space=pltpu.TPUMemorySpace.ANY)
+    kernel = functools.partial(
+        _split_refs_kernel, mode=mode, nk=nk, bm=bm, bn=bn, bk=bk,
+        n_x=len(x_args))
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec(s32.shape, lambda i, j: (0, 0))]
+        + [any_spec] * (len(x_args) + 2),
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        scratch_shapes=[*x_scratch,
+                        pltpu.VMEM((2, bk // 2, bn), jnp.uint8),
+                        pltpu.VMEM((2, bk // _G, bn // _G), jnp.uint8),
+                        pltpu.VMEM((bm, bn), jnp.float32),
+                        pltpu.SemaphoreType.DMA((2, 4))],
+        interpret=interpret,
+    )(s32, *x_args, payload, scales)
+
+
+def _split_refs_kernel(s32_ref, *refs, mode: str, nk: int,
+                       bm: int, bn: int, bk: int, n_x: int):
+    x_refs = refs[:n_x]
+    wp_hbm, ws_hbm, o_ref = refs[n_x:n_x + 3]
+    x_slabs = refs[n_x + 3:n_x + 3 + n_x]
+    wp_slab, ws_slab, acc_ref, sem = refs[n_x + 3 + n_x:]
+    _stream_gemm_body(mode, nk, bm, bn, bk, s32_ref, x_refs,
+                      wp_hbm, ws_hbm, o_ref, x_slabs, wp_slab, ws_slab,
+                      acc_ref, sem)
+
+
 # ---------------------------------------------------------------------------
 # W4A16
 # ---------------------------------------------------------------------------
-def _w4a16_kernel(s32_ref, x_ref, wp_ref, ws_ref, o_ref):
-    k_idx = pl.program_id(2)
-
-    @pl.when(k_idx == 0)
-    def _init():
-        o_ref[...] = jnp.zeros_like(o_ref)
-
-    bk2, bn = wp_ref.shape
-    w = _expand_weight_tile(wp_ref[...], ws_ref[...], 2 * bk2, bn)
-    x = x_ref[...].astype(jnp.bfloat16)
-    acc = jax.lax.dot(x, w, preferred_element_type=jnp.float32)
-    o_ref[...] += acc * s32_ref[0, 0]
-
-
 @functools.partial(
     jax.jit, static_argnames=("bm", "bn", "bk", "interpret"))
 def mixfp4_gemm_w4a16(
@@ -129,45 +262,16 @@ def mixfp4_gemm_w4a16(
     bm = min(bm, m)
     bn = min(bn, n)
     bk = min(bk, k)
-    assert m % bm == 0 and n % bn == 0 and k % bk == 0
-    assert bk % _G == 0 and bn % _G == 0
-    grid = (m // bm, n // bn, k // bk)
     s32 = scale32.reshape(1, 1).astype(jnp.float32)
-
-    return pl.pallas_call(
-        _w4a16_kernel,
-        grid=grid,
-        in_specs=[
-            pl.BlockSpec((1, 1), lambda i, j, kk: (0, 0)),
-            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
-            pl.BlockSpec((bk // 2, bn), lambda i, j, kk: (kk, j)),
-            pl.BlockSpec((bk // _G, bn // _G), lambda i, j, kk: (kk, j)),
-        ],
-        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
-        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
-        interpret=interpret,
-    )(s32, x, payload, scales)
+    xb = x.astype(jnp.bfloat16)     # same single rne rounding as in-kernel
+    return _stream_gemm_call(
+        "w4a16", (xb,), (pltpu.VMEM((2, bm, bk), jnp.bfloat16),),
+        s32, payload, scales, m, n, k, bm, bn, bk, interpret)
 
 
 # ---------------------------------------------------------------------------
-# W4A4
+# W4A4 (packed activations: the two-dispatch composition's GEMM half)
 # ---------------------------------------------------------------------------
-def _w4a4_kernel(s32_ref, xp_ref, xs_ref, wp_ref, ws_ref, o_ref):
-    k_idx = pl.program_id(2)
-
-    @pl.when(k_idx == 0)
-    def _init():
-        o_ref[...] = jnp.zeros_like(o_ref)
-
-    bm, bk2 = xp_ref.shape
-    bk = 2 * bk2
-    bn = wp_ref.shape[1]
-    x = _expand_act_tile(xp_ref[...], xs_ref[...], bm, bk)
-    w = _expand_weight_tile(wp_ref[...], ws_ref[...], bk, bn)
-    acc = jax.lax.dot(x, w, preferred_element_type=jnp.float32)
-    o_ref[...] += acc * s32_ref[0, 0]
-
-
 @functools.partial(
     jax.jit, static_argnames=("bm", "bn", "bk", "interpret"))
 def mixfp4_gemm_w4a4(
@@ -192,22 +296,65 @@ def mixfp4_gemm_w4a4(
     bm = min(bm, m)
     bn = min(bn, n)
     bk = min(bk, k)
-    assert m % bm == 0 and n % bn == 0 and k % bk == 0
-    grid = (m // bm, n // bn, k // bk)
     s32 = (x_scale32.astype(jnp.float32)
            * scale32.astype(jnp.float32)).reshape(1, 1)
+    return _stream_gemm_call(
+        "w4a4", (x_payload, x_scales),
+        (pltpu.VMEM((2, bm, bk // 2), jnp.uint8),
+         pltpu.VMEM((2, bm, bk // _G), jnp.uint8)),
+        s32, payload, scales, m, n, k, bm, bn, bk, interpret)
 
-    return pl.pallas_call(
-        _w4a4_kernel,
-        grid=grid,
-        in_specs=[
-            pl.BlockSpec((1, 1), lambda i, j, kk: (0, 0)),
-            pl.BlockSpec((bm, bk // 2), lambda i, j, kk: (i, kk)),
-            pl.BlockSpec((bm, bk // _G), lambda i, j, kk: (i, kk)),
-            pl.BlockSpec((bk // 2, bn), lambda i, j, kk: (kk, j)),
-            pl.BlockSpec((bk // _G, bn // _G), lambda i, j, kk: (kk, j)),
-        ],
-        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
-        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
-        interpret=interpret,
-    )(s32, x_payload, x_scales, payload, scales)
+
+# ---------------------------------------------------------------------------
+# W4A4 with fused quantize prologue (one dispatch per projection)
+# ---------------------------------------------------------------------------
+@functools.partial(
+    jax.jit, static_argnames=("bm", "bn", "bk", "interpret"))
+def mixfp4_gemm_w4a4_fused(
+    x: jax.Array,
+    x_scale32: jax.Array,
+    payload: jax.Array,
+    scales: jax.Array,
+    scale32: jax.Array,
+    *,
+    bm: int = 128,
+    bn: int = 256,
+    bk: int = 256,
+    interpret: bool = False,
+) -> jax.Array:
+    """y = dequant(quant(X)) @ dequant(packed W), f32 out — the W4A4 MMA
+    with the activation row quantizer fused into the kernel prologue.
+
+    ``x`` is the DENSE (M, K) activation, already zero-padded onto the
+    weight's packed K grid (the ``qmm`` dispatcher does this); it is
+    quantized tile-by-tile in VMEM under the pinned per-tensor scale
+    ``x_scale32`` — which the caller derives exactly as ``quantize_rows``
+    would (max|x| / 2688), or pins (KV-cache style) — and the result is
+    bitwise-identical to ``quantize_rows(x) -> mixfp4_gemm_w4a4`` run on
+    the same (bm, bn, bk) grid.  Zero-padded rows/lanes quantize to zero
+    codes and contribute the same exact-zero terms as the composition's
+    padded bytes.
+
+    The f32 cast happens HERE, outside the kernel, on purpose: streaming
+    bf16 slabs and converting in the prologue is mathematically exact but
+    puts a convert inside the kernel body, and XLA's differing fusion of
+    that body (vs the standalone quantizer's, which sees f32) can flip
+    the dual-format ``err1 < err2`` select at near-ties — observed as a
+    non-bitwise MoE stream under ``lax.scan``/``lax.map``.  Halving the
+    activation slab traffic is a TPU-side follow-on that needs the select
+    pinned first.
+    """
+    m, k = x.shape
+    n = payload.shape[1]
+    assert payload.shape == (k // 2, n) and scales.shape == (k // _G, n // _G)
+    bm = min(bm, m)
+    bn = min(bn, n)
+    bk = min(bk, k)
+    xs32 = jnp.asarray(x_scale32, jnp.float32).reshape(())
+    # (1, 2): [combined output scale, x per-tensor scale for the prologue]
+    s32 = jnp.stack([xs32 * scale32.astype(jnp.float32).reshape(()),
+                     xs32]).reshape(1, 2)
+    return _stream_gemm_call(
+        "w4a4_fused", (x.astype(jnp.float32),),
+        (pltpu.VMEM((2, bm, bk), jnp.float32),),
+        s32, payload, scales, m, n, k, bm, bn, bk, interpret)

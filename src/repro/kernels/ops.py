@@ -4,10 +4,14 @@ On TPU the Pallas kernels compile natively; on CPU (this container) they run
 in interpret mode, which executes the kernel body in Python/XLA-CPU and is
 what the per-kernel allclose tests exercise.  ``pack_weight_qt`` /
 ``quantize_rows`` are the packing producers shared by serving and tests.
+
+``count_dispatches`` wraps a trace and counts GEMM-path kernel entries —
+how the serving bench proves the fused W4A4 path costs ONE dispatch per
+projection where the quantize_rows -> gemm composition costs two.
 """
 from __future__ import annotations
 
-import functools
+import contextlib
 
 import jax
 import jax.numpy as jnp
@@ -15,7 +19,9 @@ import jax.numpy as jnp
 from repro.kernels import ref
 from repro.kernels.fwht import fwht_rows
 from repro.kernels.mixfp4_attn import mixfp4_attn_decode
-from repro.kernels.mixfp4_gemm import mixfp4_gemm_w4a4, mixfp4_gemm_w4a16
+from repro.kernels.mixfp4_gemm import (mixfp4_gemm_w4a4,
+                                       mixfp4_gemm_w4a4_fused,
+                                       mixfp4_gemm_w4a16)
 from repro.kernels.mixfp4_quant import mixfp4_quant_rows
 
 __all__ = [
@@ -24,13 +30,41 @@ __all__ = [
     "pack_weight_qt",
     "gemm_w4a16",
     "gemm_w4a4",
+    "gemm_w4a4_fused",
     "attn_decode_packed",
     "rht_rows",
+    "count_dispatches",
 ]
 
 
 def default_interpret() -> bool:
     return jax.default_backend() != "tpu"
+
+
+# ---------------------------------------------------------------------------
+# GEMM-path dispatch accounting (trace-time): every kernel entry below ticks
+# the active counter, so tracing e.g. a decode step under count_dispatches()
+# reports exactly how many Pallas launches each projection costs.
+# ---------------------------------------------------------------------------
+_DISPATCHES: dict | None = None
+
+
+@contextlib.contextmanager
+def count_dispatches():
+    """Collect per-entry GEMM-path kernel launch counts for the enclosed
+    trace (e.g. ``jax.eval_shape`` of a decode step).  Yields the dict that
+    accumulates ``{entry_name: count}``."""
+    global _DISPATCHES
+    prev, _DISPATCHES = _DISPATCHES, {}
+    try:
+        yield _DISPATCHES
+    finally:
+        _DISPATCHES = prev
+
+
+def _tick(name: str):
+    if _DISPATCHES is not None:
+        _DISPATCHES[name] = _DISPATCHES.get(name, 0) + 1
 
 
 def quantize_rows(x: jax.Array, **kw):
@@ -41,6 +75,7 @@ def quantize_rows(x: jax.Array, **kw):
     cache, where rows quantized at different decode steps must share one
     per-tensor scale.
     """
+    _tick("quantize_rows")
     kw.setdefault("interpret", default_interpret())
     return mixfp4_quant_rows(x, **kw)
 
@@ -61,20 +96,34 @@ def pack_weight_qt(w: jax.Array, method: str = "mixfp4",
 
 
 def gemm_w4a16(x, payload, scales, scale32, **kw):
+    _tick("gemm_w4a16")
     kw.setdefault("interpret", default_interpret())
     return mixfp4_gemm_w4a16(x, payload, scales, scale32, **kw)
 
 
 def gemm_w4a4(xp, xs, xs32, payload, scales, scale32, **kw):
+    _tick("gemm_w4a4")
     kw.setdefault("interpret", default_interpret())
     return mixfp4_gemm_w4a4(xp, xs, xs32, payload, scales, scale32, **kw)
+
+
+def gemm_w4a4_fused(x, x_scale32, payload, scales, scale32, **kw):
+    """W4A4 GEMM with the row quantizer fused into the kernel prologue:
+    ONE Pallas dispatch where ``quantize_rows`` + ``gemm_w4a4`` costs two,
+    bitwise-identical to that composition on the same tile grid."""
+    _tick("gemm_w4a4_fused")
+    kw.setdefault("interpret", default_interpret())
+    return mixfp4_gemm_w4a4_fused(x, x_scale32, payload, scales, scale32,
+                                  **kw)
 
 
 def attn_decode_packed(q, k_payload, k_scales, v_payload, v_scales,
                        lengths, **kw):
     """Fused decode attention over the packed KV cache (flash-decoding with
     in-VMEM Fig. 9 decode); see ``kernels.mixfp4_attn``.  Returns
-    (B, H, dh) f32 without materializing a dense bf16 cache in HBM."""
+    (B, H, dh) f32 without materializing a dense bf16 cache in HBM.  The
+    key-block size defaults to the cost-model tuner's choice
+    (``kernels.tuning.select_attn_key_block``)."""
     kw.setdefault("interpret", default_interpret())
     return mixfp4_attn_decode(q, k_payload, k_scales, v_payload, v_scales,
                               lengths, **kw)

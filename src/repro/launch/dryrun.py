@@ -120,6 +120,7 @@ def packed_weight_report(arch: str, quant_method: str = "mixfp4",
     stats = {"packed": 0, "dense": 0, "per_device": 0, "replicated": 0,
              "act_bf16": 0.0, "act_packed": 0.0, "flops": 0.0,
              "w_traffic": 0.0}
+    proj_grids: set = set()   # distinct packed (Kp, Np) projection grids
 
     def walk(node):
         if not isinstance(node, dict):
@@ -135,6 +136,7 @@ def packed_weight_report(arch: str, quant_method: str = "mixfp4",
                 # pad_to = 2 * w.payload.shape[-2], so derive Kp from the
                 # same skeleton (one owner for the child-shape math)
                 kp = 2 * struct.payload.shape[-2]
+                proj_grids.add((kp, struct.payload.shape[-1]))
                 leaf = n_mats * qtensor.packed_nbytes_for_shape(
                     (kdim, ndim), qtensor.BlockLayout2D())
                 stats["packed"] += leaf
@@ -163,7 +165,31 @@ def packed_weight_report(arch: str, quant_method: str = "mixfp4",
     packed, dense = stats["packed"], stats["dense"]
     fb16 = stats["flops"] / max(stats["w_traffic"] + stats["act_bf16"], 1)
     f4 = stats["flops"] / max(stats["w_traffic"] + stats["act_packed"], 1)
+
+    # GEMM-path report: kernel dispatches per projection per decoded token
+    # (the fused quantize+GEMM prologue folds the W4A4 path to one), plus
+    # the cost-model tiler's choices for every distinct packed projection
+    # grid at decode (m=1) and prefill (m=512) row counts, for BOTH tuner
+    # groups — "w4a16" (default dense-activation serving) and "w4a4" (the
+    # act_quant modes) are scored/cached separately and can differ — via
+    # the same select_tiles calls qmm makes at serve time, so the report
+    # cannot drift.
+    from repro.kernels import tuning
+    tile_report = {}
+    for kp, np_ in sorted(proj_grids):
+        for m, tag in ((1, "decode"), (512, "prefill")):
+            for path in ("w4a16", "w4a4"):
+                ch = tuning.select_tiles(path, m, kp, np_)
+                tile_report[f"{tag}_{path}_m{m}_k{kp}_n{np_}"] = {
+                    "bm": ch.bm, "bn": ch.bn, "bk": ch.bk,
+                    "k_pad": ch.k_pad, "n_pad": ch.n_pad}
+    gemm_path = {
+        "dispatches_per_projection": {
+            "w4a16": 1, "w4a4_fused": 1, "w4a4_2pass": 2},
+        "tuned_tiles": tile_report,
+    }
     return {"proj_dense_bf16": dense, "proj_packed_qtensor": packed,
+            "gemm_path": gemm_path,
             "compression": round(dense / packed, 3) if packed else 1.0,
             "model_shards": model_shards,
             "proj_packed_per_device": stats["per_device"],

@@ -79,13 +79,24 @@ def main(argv=None):
                          "decode through the fused attention kernel); "
                          "default bf16")
     ap.add_argument("--act-quant", default=None,
-                    choices=["bf16", "mixfp4", "mixfp4-qdq"],
+                    choices=["bf16", "mixfp4", "mixfp4-2pass", "mixfp4-qdq"],
                     help="W4A4 serving: quantize decode/prefill activations "
-                         "on the fly (quantize_rows, type-in-sign E4M3 "
-                         "block scales) and run every projection through "
-                         "the W4A4 kernel — both GEMM operands on the wire "
-                         "format; 'mixfp4-qdq' is the dequantize-then-"
-                         "W4A16 debugging oracle; default bf16 (W4A16)")
+                         "on the fly (type-in-sign E4M3 block scales) and "
+                         "run every projection through the W4A4 kernel — "
+                         "both GEMM operands on the wire format.  'mixfp4' "
+                         "fuses the row quantizer into the kernel prologue "
+                         "(ONE dispatch per projection); 'mixfp4-2pass' is "
+                         "the explicit quantize_rows->GEMM composition it "
+                         "is bitwise-identical to; 'mixfp4-qdq' is the "
+                         "dequantize-then-W4A16 debugging oracle; default "
+                         "bf16 (W4A16)")
+    ap.add_argument("--prefill-buckets", default="auto",
+                    choices=["auto", "pow2-64", "off"],
+                    help="pad prompts up a pow-2/64-step length ladder so "
+                         "admissions reuse one compiled prefill per bucket "
+                         "instead of compiling per distinct prompt length "
+                         "(transformer families; 'auto' enables it there "
+                         "and disables it for SSM/hybrid)")
     ap.add_argument("--save-weights", default=None, metavar="DIR",
                     help="write the packed QTensor weight tree as a "
                          "checkpoint and exit")
@@ -129,7 +140,7 @@ def main(argv=None):
                          max_len=args.max_len,
                          pack_weights=not args.no_pack,
                          kv_quant=args.kv_quant, act_quant=args.act_quant,
-                         mesh=mesh)
+                         mesh=mesh, prefill_buckets=args.prefill_buckets)
     del params  # projections now live ONLY as packed QTensors in the engine
     if mesh is not None:
         shards = sorted({
@@ -147,9 +158,13 @@ def main(argv=None):
               f"({engine.compression:.2f}x smaller than bf16), served "
               f"through qmm -> {kern} kernels")
     if engine.act_quant == "mixfp4":
-        print("[serve] W4A4: activations quantized on the fly "
-              "(quantize_rows onto each weight's packed K grid) and every "
-              "projection runs the W4A4 kernel — full FP4xFP4 MMA analog")
+        print("[serve] W4A4 fused: the row quantizer runs in the W4A4 "
+              "kernel's prologue — ONE Pallas dispatch per projection, "
+              "full FP4xFP4 MMA analog")
+    elif engine.act_quant == "mixfp4-2pass":
+        print("[serve] W4A4 two-dispatch: quantize_rows onto each "
+              "weight's packed K grid, then the packed-operand W4A4 "
+              "kernel (the fused path's bitwise oracle)")
     elif engine.act_quant == "mixfp4-qdq":
         print("[serve] W4A4 qdq oracle: same wire bytes, decoded back to "
               "dense rows and served W4A16")
@@ -182,6 +197,10 @@ def main(argv=None):
     dt = time.time() - t0
     print(f"[serve] {args.requests} requests, {n_tok} tokens, "
           f"{n_tok/max(dt,1e-9):.1f} tok/s")
+    print(f"[serve] prefill compile cache: {engine.admissions} admissions "
+          f"-> {engine.prefill_compiles} compiled lengths, "
+          f"{engine.prefill_cache_hits} shape-cache hits "
+          f"(buckets={engine.prefill_buckets or 'off'})")
 
 
 if __name__ == "__main__":

@@ -274,14 +274,17 @@ def qlinear(x: jax.Array, w, ctx: "Ctx", tag: int) -> jax.Array:
     (docs/sharding.md).
 
     With ``ctx.act_quant == "mixfp4"`` (W4A4 serving, docs/serving.md) the
-    dense activation is quantized on the fly — ``quantize_rows`` onto the
-    weight's packed ``Kp`` grid, same type-in-sign E4M3 block-scale
-    encoding as every other wire tensor — and the GEMM runs with BOTH
-    operands packed (``qmm(qt_x, qt_w)`` -> the W4A4 Pallas kernel; under
-    a mesh, ``qmm_sharded`` with the packed activation).
-    ``"mixfp4-qdq"`` is the debugging oracle: the SAME wire bytes are
-    decoded back to dense rows and served W4A16 — what the W4A4 kernel
-    computes, minus its fused in-VMEM decode.
+    dense activation is quantized on the fly in the W4A4 kernel's fused
+    prologue (``qmm(x, w, fuse_act_quant=True)`` — ONE Pallas dispatch per
+    projection; under a mesh, ``qmm_sharded`` with the fused flag) using
+    the same type-in-sign E4M3 block-scale wire encoding as every other
+    wire tensor.  ``"mixfp4-2pass"`` is the explicit two-dispatch
+    composition the fused path is bitwise-identical to —
+    ``quantize_rows`` onto the weight's packed ``Kp`` grid, then the
+    packed-operand W4A4 kernel — kept as the serving-level oracle and for
+    A/B benchmarks.  ``"mixfp4-qdq"`` is the debugging oracle: the SAME
+    wire bytes are decoded back to dense rows and served W4A16 — what the
+    W4A4 kernel computes, minus its fused in-VMEM decode.
     """
     if isinstance(w, qtensor.QTensor):
         m = _active_mesh()
@@ -290,12 +293,19 @@ def qlinear(x: jax.Array, w, ctx: "Ctx", tag: int) -> jax.Array:
         sharded = (m is not None and w.pspec is not None and kernel_w
                    and qtensor.kn_partitions(w) != (None, None))
         aq = ctx.act_quant
-        if (aq in ("mixfp4", "mixfp4-qdq") and kernel_w
+        if (aq == "mixfp4" and kernel_w
+                and not isinstance(x, qtensor.QTensor)):
+            lead, k = x.shape[:-1], x.shape[-1]
+            x2 = x.reshape(-1, k)
+            y = (qtensor.qmm_sharded(x2, w, mesh=m, fuse_act_quant=True)
+                 if sharded else qtensor.qmm(x2, w, fuse_act_quant=True))
+            return y.reshape(*lead, y.shape[-1]).astype(x.dtype)
+        if (aq in ("mixfp4-2pass", "mixfp4-qdq") and kernel_w
                 and not isinstance(x, qtensor.QTensor)):
             kp = 2 * w.payload.shape[0]
             lead, k = x.shape[:-1], x.shape[-1]
             qx = qtensor.quantize_rows(x.reshape(-1, k), pad_to=kp)
-            if aq == "mixfp4":
+            if aq == "mixfp4-2pass":
                 y = (qtensor.qmm_sharded(qx, w, mesh=m) if sharded
                      else qtensor.qmm(qx, w))
             else:
@@ -391,9 +401,11 @@ class Ctx:
     """Per-call context: PRNG key for SR/RHT, quant config, the active
     mesh (None = single-device; MoE then skips its collectives), and the
     serving activation format: ``act_quant="mixfp4"`` makes every
-    packed-weight ``qlinear`` quantize its activation rows on the fly and
-    run the W4A4 kernel (``"mixfp4-qdq"`` = the dequantize-then-W4A16
-    oracle; anything else = dense bf16 activations, W4A16)."""
+    packed-weight ``qlinear`` run the fused quantize+GEMM W4A4 kernel in
+    one dispatch (``"mixfp4-2pass"`` = the explicit quantize_rows -> W4A4
+    two-dispatch composition it is bitwise-identical to; ``"mixfp4-qdq"``
+    = the dequantize-then-W4A16 oracle; anything else = dense bf16
+    activations, W4A16)."""
     key: jax.Array
     quant: QuantConfig
     mesh: Any = None

@@ -428,13 +428,19 @@ class MambaLM:
     def write_slot(self, cache, i: int, state):
         return jax.tree.map(lambda a, s: a.at[:, i].set(s), cache, state)
 
-    def prefill_slot(self, params, tokens, ctx: Ctx, cache, slot):
+    def prefill_slot(self, params, tokens, ctx: Ctx, cache, slot,
+                     true_len=None):
         """Batched single-slot prefill: slice the cache to the slot's batch
         row, run the whole prompt through the chunked-scan prefill in ONE
         call, and scatter the row back.  Only slot ``slot``'s recurrent
         state advances — the dummy-step corruption that forced the engine's
         snapshot/restore dance around admissions cannot happen.  Returns
         (last-position logits (1, V), updated full cache)."""
+        if true_len is not None:
+            raise ValueError(
+                "prompt-length bucketing (true_len) is transformer-only: "
+                "the SSM recurrent state advances for every padded suffix "
+                "token, so a bucketed prompt would corrupt the slot state")
         cfg = self.cfg
         p_len = tokens.shape[1]
         # chunked scans/attention need p_len % chunk == 0 once p_len exceeds

@@ -254,7 +254,8 @@ class TransformerLM:
         return base._map_slot_arrays(
             lambda a, s: a.at[:, i].set(s), cache, state)
 
-    def prefill_slot(self, params, tokens, ctx: Ctx, cache, slot):
+    def prefill_slot(self, params, tokens, ctx: Ctx, cache, slot,
+                     true_len=None):
         """Batched single-slot prefill: run the whole prompt in ONE call.
 
         tokens (1, P) int32; ``slot`` selects the cache batch row.  The
@@ -266,6 +267,14 @@ class TransformerLM:
         snapshot/restore.  Embedding matches ``decode_step`` (engine
         requests carry tokens only — no VLM prefix path here).  Returns
         (last-position logits (1, V), updated full cache).
+
+        ``true_len`` (dynamic int32) supports the engine's prompt-length
+        bucketing: ``tokens`` is the prompt padded up the bucket ladder and
+        the logits are taken at position ``true_len - 1``.  Causality makes
+        the padded suffix invisible to every real position — suffix cache
+        rows hold junk but are masked by the per-slot length at decode and
+        overwritten row-by-row before ever becoming valid — so the result
+        is bitwise the exact-length call's.
         """
         cfg = self.cfg
         p_len = tokens.shape[1]
@@ -282,7 +291,13 @@ class TransformerLM:
         positions = jnp.arange(p_len)[None, :]
         x, nk, nv = model._run_layers_cached(
             params, x, ctx, small["k"], small["v"], jnp.int32(0), positions)
-        logits = base.lm_logits(x[:, -1], params["embed"], cfg.softcap_final,
+        if true_len is None:
+            x_last = x[:, -1]
+        else:
+            x_last = jax.lax.dynamic_index_in_dim(
+                x, jnp.asarray(true_len, jnp.int32) - 1, axis=1,
+                keepdims=False)
+        logits = base.lm_logits(x_last, params["embed"], cfg.softcap_final,
                                 vocab=cfg.vocab)
         return logits, base.slot_put(cache, {"k": nk, "v": nv}, slot)
 

@@ -19,17 +19,31 @@ Three hot paths run over packed data end-to-end (docs/serving.md):
   bf16 form never exists at decode time, so the dominant decode_32k
   traffic term shrinks ~3.55x too.
 * ``act_quant="mixfp4"`` (W4A4) quantizes decode AND prefill activations on
-  the fly — ``quantize_rows`` onto each packed weight's ``Kp`` grid, the
-  same type-in-sign E4M3 block-scale wire encoding — and routes every
-  projection through ``qmm(qt_x, qt_w)`` -> the W4A4 Pallas kernel, the
-  paper's full FP4xFP4 MMA analog (Fig. 9 decode on BOTH operands), for
-  the dense, MoE, SSM and hybrid families.  ``"mixfp4-qdq"`` is the
-  dequantize-then-W4A16 debugging oracle over the same wire bytes.
+  the fly — in the W4A4 kernel's fused prologue, ONE Pallas dispatch per
+  projection — using the same type-in-sign E4M3 block-scale wire encoding,
+  the paper's full FP4xFP4 MMA analog (Fig. 9 decode on BOTH operands),
+  for the dense, MoE, SSM and hybrid families.  ``"mixfp4-2pass"`` is the
+  explicit ``quantize_rows`` -> W4A4-kernel two-dispatch composition the
+  fused path is bitwise-identical to (the serving-level oracle and the A/B
+  baseline); ``"mixfp4-qdq"`` is the dequantize-then-W4A16 debugging
+  oracle over the same wire bytes.
 * Admissions prefill through the models' batched ``prefill_slot`` entry:
   the whole prompt runs in ONE jit call at (P, K) prefill shapes through
   the W4A16 kernels, writing all cache rows at once, instead of the
   historical O(prompt_len) token-by-token decode replay (which also needed
   a snapshot/restore dance to keep recurrent batchmates unperturbed).
+  For the transformer families, prompts additionally pad up a pow-2/64-step
+  length ladder (``prefill_buckets``) so admissions stop compiling one
+  prefill executable per distinct prompt length: padded suffix rows are
+  causally invisible to the real positions, masked at decode until
+  overwritten, and the last-position logits index the true length — the
+  emitted stream is bitwise-identical to the unbucketed engine's under
+  W4A16 (dense-activation) serving.  Caveat: under the W4A4 modes the
+  per-tensor *prefill* activation scale spans the padded suffix rows too,
+  so a bucketed W4A4 prefill can differ from the exact-length one within
+  the documented per-tensor-coupling bounds (docs/serving.md); oracle
+  comparisons stay exact because both engines bucket identically.
+  ``prefill_compiles`` / ``prefill_cache_hits`` count the effect.
 
 With ``mesh=`` the engine serves *sharded* packed weights
 (docs/sharding.md): every projection QTensor is placed under model-axis
@@ -93,7 +107,8 @@ class ServeEngine:
     def __init__(self, cfg: ArchConfig, params, *, batch_size: int = 8,
                  max_len: int = 512, pack_weights: bool = True,
                  method: str = "mixfp4", kv_quant: str | None = None,
-                 act_quant: str | None = None, mesh=None):
+                 act_quant: str | None = None, mesh=None,
+                 prefill_buckets: str | None = "auto"):
         if cfg.family == "encdec":
             raise ValueError(
                 "ServeEngine has no source-encoding path (requests carry "
@@ -107,15 +122,31 @@ class ServeEngine:
             raise ValueError(
                 f"kv_quant='mixfp4' packs the transformer KV cache; family "
                 f"{cfg.family!r} has no (or not only) a KV cache to pack")
-        if act_quant not in (None, "bf16", "mixfp4", "mixfp4-qdq"):
+        if act_quant not in (None, "bf16", "mixfp4", "mixfp4-2pass",
+                             "mixfp4-qdq"):
             raise ValueError(
                 f"unknown act_quant {act_quant!r} (expected None, 'bf16', "
-                "'mixfp4', or the 'mixfp4-qdq' debugging oracle)")
-        if act_quant in ("mixfp4", "mixfp4-qdq") and not pack_weights:
+                "'mixfp4' (fused quantize+GEMM), 'mixfp4-2pass' (the "
+                "two-dispatch composition), or the 'mixfp4-qdq' debugging "
+                "oracle)")
+        if act_quant in ("mixfp4", "mixfp4-2pass", "mixfp4-qdq") \
+                and not pack_weights:
             raise ValueError(
                 "act_quant='mixfp4' is the W4A4 path — both GEMM operands "
                 "on the wire format — which needs packed weights; drop "
                 "pack_weights=False")
+        if prefill_buckets not in (None, "off", "auto", "pow2-64"):
+            raise ValueError(
+                f"unknown prefill_buckets {prefill_buckets!r} (expected "
+                "None/'off', 'auto', or 'pow2-64')")
+        if prefill_buckets == "pow2-64" \
+                and cfg.family not in _TRANSFORMER_FAMILIES:
+            raise ValueError(
+                "prefill_buckets pads the prompt with suffix tokens, which "
+                "is only sound for the transformer families (KV rows "
+                "beyond the true length are masked/overwritten); the SSM "
+                f"recurrent state of family {cfg.family!r} advances for "
+                "every padded token")
         if mesh is not None and not pack_weights:
             raise ValueError(
                 "mesh serving is the sharded *packed* path (QTensor "
@@ -159,12 +190,30 @@ class ServeEngine:
         self.slots: list[Request | None] = [None] * batch_size
         self.prefill_dispatches = 0   # jit dispatches spent on admissions
         self.admissions = 0
+        # prompt-length bucketing (transformer families): pad prompts up a
+        # pow-2/64-step ladder so admissions reuse one compiled prefill per
+        # bucket instead of compiling per distinct length
+        if prefill_buckets == "auto":
+            prefill_buckets = ("pow2-64"
+                               if cfg.family in _TRANSFORMER_FAMILIES
+                               else None)
+        self.prefill_buckets = (None if prefill_buckets in (None, "off")
+                                else prefill_buckets)
+        self.prefill_compiles = 0      # distinct prefill shapes traced
+        self.prefill_cache_hits = 0    # admissions that reused a shape
+        self._prefill_lens: set = set()
         self._decode = jax.jit(
             lambda p, t, c, l: self.model.decode_step(p, t, self.ctx, c, l))
-        # one dispatch per admission; recompiles per distinct prompt length
-        # (prefill shapes — bucket/pad prompts upstream if that matters)
-        self._prefill = jax.jit(
-            lambda p, t, c, i: self.model.prefill_slot(p, t, self.ctx, c, i))
+        if self.prefill_buckets:
+            self._prefill = jax.jit(
+                lambda p, t, c, i, n: self.model.prefill_slot(
+                    p, t, self.ctx, c, i, true_len=n))
+        else:
+            # one dispatch per admission; recompiles per distinct prompt
+            # length (prefill shapes)
+            self._prefill = jax.jit(
+                lambda p, t, c, i: self.model.prefill_slot(
+                    p, t, self.ctx, c, i))
 
     def _mesh_ctx(self):
         """Ambient-mesh context for jit traces: activates the models'
@@ -261,18 +310,52 @@ class ServeEngine:
                 return True
         return False
 
+    @staticmethod
+    def bucket_len(p_len: int, max_len: int) -> int:
+        """The pow-2/64-step prompt-length ladder: next power of two below
+        64, then 64-step rungs, clamped to the cache length."""
+        b = 8
+        while b < min(p_len, 64):
+            b *= 2
+        if p_len > 64:
+            b = -(-p_len // 64) * 64
+        return min(b, max_len)
+
     def _prefill_slot(self, i: int, req: Request):
         """Single-slot batched prefill: ONE jit dispatch runs the whole
         prompt through ``model.prefill_slot`` at (1, P) shapes, writing all
         of slot ``i``'s cache rows at once.  Other slots' batch rows are
         never touched (the model slices/scatters only row ``i``), so an
         admission is invisible to its batchmates for all families with no
-        snapshot/restore."""
-        tokens = jnp.asarray(np.asarray(req.prompt, np.int32)[None, :])
+        snapshot/restore.
+
+        With ``prefill_buckets`` active the prompt pads up the length
+        ladder (suffix zeros) and the true length rides along as a dynamic
+        operand, so nearby prompt lengths share one compiled prefill; the
+        emitted token and the real cache rows are bitwise those of the
+        exact-length call."""
+        p_len = len(req.prompt)
+        toks = np.asarray(req.prompt, np.int32)
+        if self.prefill_buckets:
+            pb = self.bucket_len(p_len, self.max_len)
+            if pb > p_len:
+                toks = np.pad(toks, (0, pb - p_len))
+        shape_key = len(toks)
+        if shape_key in self._prefill_lens:
+            self.prefill_cache_hits += 1
+        else:
+            self._prefill_lens.add(shape_key)
+            self.prefill_compiles += 1
+        tokens = jnp.asarray(toks[None, :])
         with self._mesh_ctx():
-            logits, self.cache = self._prefill(
-                self.params, tokens, self.cache, jnp.int32(i))
-        self.lengths[i] = len(req.prompt)
+            if self.prefill_buckets:
+                logits, self.cache = self._prefill(
+                    self.params, tokens, self.cache, jnp.int32(i),
+                    jnp.int32(p_len))
+            else:
+                logits, self.cache = self._prefill(
+                    self.params, tokens, self.cache, jnp.int32(i))
+        self.lengths[i] = p_len
         req._next = int(jnp.argmax(logits[0]))
         self.prefill_dispatches += 1
         self.admissions += 1

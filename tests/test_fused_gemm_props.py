@@ -1,0 +1,123 @@
+"""Property-based fused quantize+GEMM tests (hypothesis): the W4A4 kernel
+with the row quantizer fused into its prologue must be BITWISE-identical to
+the two-dispatch ``quantize_rows(pad_to=Kp) -> qmm`` composition — over
+random shapes/padding, random explicit tile choices, and activations that
+force BOTH micro-formats (E2M1 and E1M2 blocks) through the prologue.
+
+The composition is the oracle: it runs the independently-tested row
+quantizer kernel and the packed-operand W4A4 kernel, so a bitwise match
+proves the prologue reproduces the exact wire values (not just close
+ones).  Gated behind importorskip so a bare environment still collects the
+deterministic fused tests in test_kernels.py.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.core import qtensor  # noqa: E402
+from repro.core.qtensor import (BlockLayout2D, QuantSpec,  # noqa: E402
+                                quantize)
+from repro.kernels import ops  # noqa: E402
+
+
+def _operands(seed, m, k, n, method, mixed_rows=False):
+    kx, kw = jax.random.split(jax.random.PRNGKey(seed))
+    x = jax.random.normal(kx, (m, k)) * 2.0
+    if mixed_rows:
+        # Deterministic dual-format rows (see test_qgemm_props._operands):
+        # even rows tile {7,5,3,1} — the E1M2 integer lattice wins the
+        # argmin; odd rows tile {6,.5,1.5,3} — exactly the E2M1 lattice.
+        reps = (k + 3) // 4
+        e1 = jnp.tile(jnp.array([7.0, 5.0, 3.0, 1.0]), reps)[:k]
+        e2 = jnp.tile(jnp.array([6.0, 0.5, 1.5, 3.0]), reps)[:k]
+        x = jnp.where((jnp.arange(m) % 2 == 0)[:, None],
+                      e1[None, :], e2[None, :])
+    w = jax.random.normal(kw, (k, n)) * 0.3
+    qw = quantize(w, QuantSpec(method, BlockLayout2D()))
+    return x, qw
+
+
+def _compose(x, qw):
+    qx = qtensor.quantize_rows(x, pad_to=2 * qw.payload.shape[0],
+                               interpret=True)
+    return qtensor.qmm(qx, qw, interpret=True)
+
+
+@settings(max_examples=12, deadline=None)
+@given(st.integers(0, 10_000),
+       st.integers(1, 33),        # M: incl. 1-row decode and prime rows
+       st.integers(1, 70),        # K: mostly NOT multiples of 16 (padding)
+       st.integers(1, 40),        # N: padded to 16-lane tiles
+       st.sampled_from(["mixfp4", "nvfp4"]))
+def test_fused_bitwise_random_shapes(seed, m, k, n, method):
+    """Random (M, K, N) incl. K/N padding onto the packed grid: the fused
+    dispatcher pads the dense rows where the composition pads packed
+    bytes — both decode to the same exact zeros, and the shared tuner key
+    guarantees the same grid, so the outputs are bit-equal f32."""
+    x, qw = _operands(seed, m, k, n, method)
+    y_fused = qtensor.qmm(x, qw, fuse_act_quant=True, interpret=True)
+    assert y_fused.shape == (m, n)
+    np.testing.assert_array_equal(np.asarray(y_fused),
+                                  np.asarray(_compose(x, qw)))
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 10_000),
+       st.sampled_from([8, 16, 32]),     # bm: row tiles straddled by M=32
+       st.sampled_from([16, 32, 64]),    # bk: 16-lane blocks per K tile
+       st.sampled_from([16, 32]))        # bn
+def test_fused_bitwise_tile_sweep(seed, bm, bk, bn):
+    """Explicit kernel tilings with multi-tile grids in every dimension:
+    the fused prologue re-quantizes the x tile for every N tile, which
+    must not perturb a single bit vs quantizing once up front."""
+    m, k, n = 32, 64, 32
+    x, qw = _operands(seed, m, k, n, "mixfp4")
+    xp, xs, xs32 = ops.quantize_rows(x, interpret=True)
+    y_two = ops.gemm_w4a4(xp, xs, xs32, qw.payload, qw.scales, qw.scale32,
+                          bm=bm, bk=bk, bn=bn, interpret=True)
+    y_fused = ops.gemm_w4a4_fused(x, xs32, qw.payload, qw.scales,
+                                  qw.scale32, bm=bm, bk=bk, bn=bn,
+                                  interpret=True)
+    np.testing.assert_array_equal(np.asarray(y_fused), np.asarray(y_two))
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 10_000), st.integers(2, 24), st.integers(1, 60))
+def test_fused_both_microformats_appear_and_match(seed, m, k):
+    """Interleaved E1M2-winning and E2M1-winning rows force both type bits
+    through the fused prologue's dual-candidate argmin; the prologue's
+    byte-level selection is checked against the standalone quantizer and
+    the GEMM output against the composition."""
+    x, qw = _operands(seed, m, k, 32, "mixfp4", mixed_rows=True)
+    qx = qtensor.quantize_rows(x, pad_to=2 * qw.payload.shape[0],
+                               interpret=True)
+    types = np.asarray(qx.scales) >> 7
+    nfull = k // 16
+    if nfull:
+        assert types[0::2, :nfull].min() == 1, types
+    assert types[1::2].max() == 0, types
+    y_fused = qtensor.qmm(x, qw, fuse_act_quant=True, interpret=True)
+    np.testing.assert_array_equal(
+        np.asarray(y_fused),
+        np.asarray(qtensor.qmm(qx, qw, interpret=True)))
+
+
+@settings(max_examples=6, deadline=None)
+@given(st.integers(0, 10_000))
+def test_fused_pinned_scale32_matches_pinned_composition(seed):
+    """act_scale32 pinning (the sharded row-parallel contract): the fused
+    prologue under a pinned per-tensor scale equals quantize_rows under
+    the same pin."""
+    x, qw = _operands(seed, 6, 48, 32, "mixfp4")
+    pin = jnp.float32(0.125)
+    qx = qtensor.quantize_rows(x, pad_to=2 * qw.payload.shape[0],
+                               scale32=pin, interpret=True)
+    y_fused = qtensor.qmm(x, qw, fuse_act_quant=True, act_scale32=pin,
+                          interpret=True)
+    np.testing.assert_array_equal(
+        np.asarray(y_fused),
+        np.asarray(qtensor.qmm(qx, qw, interpret=True)))

@@ -72,6 +72,85 @@ def test_gemm_w4a4_sweep(mkn):
                                np.asarray(y_r) / scale, atol=2e-2)
 
 
+@pytest.mark.parametrize("mkn", [(16, 64, 32), (5, 40, 24), (8, 272, 144)])
+def test_gemm_w4a4_fused_bitwise_vs_composition(mkn):
+    """The fused quantize+GEMM prologue must reproduce the two-dispatch
+    ``quantize_rows -> qmm`` composition BIT FOR BIT (same tuner grid,
+    exact encode/decode round trip in the prologue) — incl. K/N padding
+    onto the packed grid and non-round dims the tuner pads further."""
+    from repro.core import qtensor
+    m, k, n = mkn
+    x = jax.random.normal(jax.random.PRNGKey(m + k), (m, k)) * 2.0
+    w = jax.random.normal(jax.random.PRNGKey(n), (k, n)) * 0.3
+    qw = ops.pack_weight_qt(w)
+    qx = qtensor.quantize_rows(x, pad_to=2 * qw.payload.shape[0],
+                               interpret=True)
+    y_two = qtensor.qmm(qx, qw, interpret=True)
+    y_fused = qtensor.qmm(x, qw, fuse_act_quant=True, interpret=True)
+    assert y_fused.shape == (m, n)
+    np.testing.assert_array_equal(np.asarray(y_fused), np.asarray(y_two))
+
+
+def test_gemm_w4a4_fused_explicit_tiles():
+    """Direct kernel entry with multi-tile grids in every dimension: the
+    prologue re-quantizes the x tile per N tile without perturbing a bit
+    vs quantizing once up front."""
+    m, k, n = 32, 64, 32
+    x = jax.random.normal(jax.random.PRNGKey(44), (m, k), jnp.float32) * 2.0
+    w = jax.random.normal(jax.random.PRNGKey(45), (k, n)) * 0.3
+    qw = ops.pack_weight_qt(w)
+    xp, xs, xs32 = ops.quantize_rows(x, interpret=True)
+    for bm, bk, bn in [(8, 16, 16), (16, 32, 32), (32, 64, 16)]:
+        y_two = ops.gemm_w4a4(xp, xs, xs32, qw.payload, qw.scales,
+                              qw.scale32, bm=bm, bk=bk, bn=bn,
+                              interpret=True)
+        y_fused = ops.gemm_w4a4_fused(x, xs32, qw.payload, qw.scales,
+                                      qw.scale32, bm=bm, bk=bk, bn=bn,
+                                      interpret=True)
+        np.testing.assert_array_equal(np.asarray(y_fused),
+                                      np.asarray(y_two),
+                                      err_msg=f"tiles {(bm, bk, bn)}")
+
+
+def test_gemm_w4a4_fused_flag_validation():
+    """fuse_act_quant must refuse operands it cannot honor rather than
+    silently changing dispatch count or numerics: a packed activation
+    (already quantized) and a non-kernel weight (would fall back to the
+    dense qdq path) both raise."""
+    from repro.core import qtensor
+    from repro.core.qtensor import BlockLayout1D, QuantSpec, quantize
+    x = jax.random.normal(jax.random.PRNGKey(52), (4, 32))
+    qw = ops.pack_weight_qt(
+        jax.random.normal(jax.random.PRNGKey(53), (32, 16)) * 0.3)
+    qx = qtensor.quantize_rows(x, interpret=True)
+    with pytest.raises(ValueError, match="already\\s+packed"):
+        qtensor.qmm(qx, qw, fuse_act_quant=True, interpret=True)
+    qw_1d = quantize(jax.random.normal(jax.random.PRNGKey(54), (32, 16)),
+                     QuantSpec("mixfp4", BlockLayout1D(0)))
+    with pytest.raises(ValueError, match="kernel-dispatchable"):
+        qtensor.qmm(x, qw_1d, fuse_act_quant=True, interpret=True)
+
+
+def test_dispatch_counter_counts_gemm_path():
+    """ops.count_dispatches: the fused path is ONE kernel entry where the
+    composition is two (quantize_rows + gemm_w4a4)."""
+    from repro.core import qtensor
+    x = jax.random.normal(jax.random.PRNGKey(50), (4, 64))
+    qw = ops.pack_weight_qt(
+        jax.random.normal(jax.random.PRNGKey(51), (64, 32)) * 0.3)
+    with ops.count_dispatches() as fused_counts:
+        jax.eval_shape(
+            lambda a: qtensor.qmm(a, qw, fuse_act_quant=True,
+                                  interpret=True), x)
+    with ops.count_dispatches() as two_counts:
+        jax.eval_shape(
+            lambda a: qtensor.qmm(
+                qtensor.quantize_rows(a, pad_to=64, interpret=True), qw,
+                interpret=True), x)
+    assert fused_counts == {"gemm_w4a4_fused": 1}, fused_counts
+    assert two_counts == {"quantize_rows": 1, "gemm_w4a4": 1}, two_counts
+
+
 def test_gemm_w4a16_serving_bytes():
     """Memory win: packed weight is ~3.55x smaller than bf16."""
     k, n = 256, 256

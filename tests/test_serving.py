@@ -514,9 +514,15 @@ def test_serving_bench_emits_expected_json(tmp_path):
     assert on_disk["cache_bytes"]["ratio"] <= 0.3
     assert on_disk["prefill"]["dispatches_per_admission"] == 1
     aq = on_disk["act_quant"]
-    assert set(aq["decode_step_us"]) == {"w4a16", "w4a4"}
+    assert set(aq["decode_step_us"]) == {"w4a16", "w4a4", "w4a4_2pass"}
     assert 0.0 <= aq["token_agreement"] <= 1.0
     assert aq["logit_max_abs_delta"] >= 0.0
+    # the fused path must match the two-dispatch composition and cost ONE
+    # GEMM-path dispatch per projection (the composition costs two)
+    assert aq["fused_matches_2pass"] is True
+    assert aq["gemm_dispatches_per_projection"]["w4a16"] == 1.0
+    assert aq["gemm_dispatches_per_projection"]["w4a4"] == 1.0
+    assert aq["gemm_dispatches_per_projection"]["w4a4_2pass"] == 2.0
 
 
 # ---------------------------------------------------------------------------
@@ -641,3 +647,134 @@ def test_pack_projections_skips_non_projection_leaves():
     assert isinstance(packed["layers"]["ln_attn"], jax.Array)
     assert isinstance(packed["embed"], jax.Array)
     assert pb > 0 and db == 2 * 32 * 32 * 2
+
+
+# ---------------------------------------------------------------------------
+# Fused quantize+GEMM serving (act_quant="mixfp4" -> one dispatch per
+# projection) and prompt-length bucketing (PR-5)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("family", ["dense", "moe"])
+def test_w4a4_fused_stream_matches_two_dispatch(family):
+    """act_quant='mixfp4' (fused prologue) must emit the IDENTICAL token
+    stream to 'mixfp4-2pass' (quantize_rows -> W4A4 kernel): the kernels
+    are bitwise-identical, so even the argmax chain cannot diverge."""
+    cfg, seed = _family_cfg(family)
+    params, _ = build_model(cfg).init(jax.random.PRNGKey(seed))
+    streams = {}
+    for aq in ("mixfp4", "mixfp4-2pass"):
+        eng = ServeEngine(cfg, params, batch_size=1, max_len=16,
+                          act_quant=aq)
+        streams[aq] = _serve_one(eng, [3, 4, 5], 4)
+    assert streams["mixfp4"] == streams["mixfp4-2pass"], (family, streams)
+
+
+def test_w4a4_fused_one_dispatch_per_projection(small_cfg):
+    """Tracing one decode step must count exactly ONE GEMM-path kernel
+    entry per projection on the fused path, and two on the composition."""
+    from repro.kernels import ops
+    model = build_model(small_cfg)
+    params, _ = model.init(jax.random.PRNGKey(0))
+
+    def counts(aq):
+        eng = ServeEngine(small_cfg, params, batch_size=2, max_len=16,
+                          act_quant=aq)
+        toks = jnp.zeros((2,), jnp.int32)
+        lens = jnp.zeros((2,), jnp.int32)
+        with ops.count_dispatches() as c:
+            jax.eval_shape(
+                lambda p, t, cc, l: eng.model.decode_step(
+                    p, t, eng.ctx, cc, l),
+                eng.params, toks, eng.cache, lens)
+        return dict(c)
+
+    c16 = counts(None)           # W4A16: one kernel per projection
+    n_proj = sum(c16.values())
+    assert set(c16) == {"gemm_w4a16"} and n_proj > 0, c16
+    c_fused = counts("mixfp4")
+    assert c_fused == {"gemm_w4a4_fused": n_proj}, (c_fused, n_proj)
+    c_two = counts("mixfp4-2pass")
+    assert c_two == {"quantize_rows": n_proj, "gemm_w4a4": n_proj}, c_two
+
+
+def test_prefill_bucketing_stream_bitwise_and_compile_reuse(small_cfg):
+    """Bucketed prefill (W4A16 engine) must emit bitwise-identical streams
+    to the unbucketed engine, while nearby prompt lengths share ONE
+    compiled prefill shape (the compile-cache counters prove it)."""
+    model = build_model(small_cfg)
+    params, _ = model.init(jax.random.PRNGKey(3))
+    prompts = [[3, 4, 5], [1, 2, 3, 4, 5], [9, 8, 7, 6], [2, 2]]
+
+    def run(buckets):
+        eng = ServeEngine(small_cfg, params, batch_size=2, max_len=32,
+                          prefill_buckets=buckets)
+        streams = {}
+        pending = [Request(uid=i, prompt=np.array(p, np.int32),
+                           max_new_tokens=4)
+                   for i, p in enumerate(prompts)]
+        while pending or any(s is not None for s in eng.slots):
+            while pending and eng.add_request(pending[0]):
+                pending.pop(0)
+            for uid, tok in eng.step():
+                streams.setdefault(uid, []).append(tok)
+        return streams, eng
+
+    bucketed, eng_b = run("pow2-64")
+    plain, eng_p = run("off")
+    assert bucketed == plain
+    # lengths 3, 5, 4, 2 all bucket to 8: one compiled shape, three hits
+    assert eng_b.prefill_compiles == 1, eng_b.prefill_compiles
+    assert eng_b.prefill_cache_hits == 3, eng_b.prefill_cache_hits
+    assert eng_p.prefill_compiles == 4   # one shape per distinct length
+    assert eng_b.prefill_dispatches == eng_b.admissions == 4
+
+
+def test_prefill_bucketing_composes_with_packed_kv_and_w4a4(small_cfg):
+    """Bucketing + packed KV + fused W4A4 compose: both engines bucket
+    identically, so the fused stream still matches the 2pass oracle."""
+    model = build_model(small_cfg)
+    params, _ = model.init(jax.random.PRNGKey(5))
+    streams = {}
+    for aq in ("mixfp4", "mixfp4-2pass"):
+        eng = ServeEngine(small_cfg, params, batch_size=1, max_len=32,
+                          kv_quant="mixfp4", act_quant=aq,
+                          prefill_buckets="pow2-64")
+        streams[aq] = _serve_one(eng, [9, 8, 7], 5)
+    assert streams["mixfp4"] == streams["mixfp4-2pass"], streams
+
+
+def test_bucket_len_ladder():
+    assert ServeEngine.bucket_len(1, 512) == 8
+    assert ServeEngine.bucket_len(8, 512) == 8
+    assert ServeEngine.bucket_len(9, 512) == 16
+    assert ServeEngine.bucket_len(33, 512) == 64
+    assert ServeEngine.bucket_len(65, 512) == 128
+    assert ServeEngine.bucket_len(130, 512) == 192   # 64-step above 64
+    assert ServeEngine.bucket_len(100, 96) == 96     # clamped to max_len
+
+
+def test_bucketing_rejected_for_recurrent_families():
+    """Explicit bucketing on an SSM family must be rejected (padded suffix
+    tokens advance the recurrent state); 'auto' silently disables it."""
+    cfg = ArchConfig(name="b-ssm", family="ssm", n_layers=2, d_model=64,
+                     vocab=64, ssm_state=8, ssm_expand=2,
+                     quant=QuantConfig(method="mixfp4"))
+    params, _ = build_model(cfg).init(jax.random.PRNGKey(0))
+    with pytest.raises(ValueError, match="transformer"):
+        ServeEngine(cfg, params, batch_size=1, max_len=16,
+                    prefill_buckets="pow2-64")
+    eng = ServeEngine(cfg, params, batch_size=1, max_len=16)
+    assert eng.prefill_buckets is None
+    assert _serve_one(eng, [3, 4, 5], 3)   # still serves fine, unbucketed
+
+
+def test_act_quant_2pass_accepted_and_validated(small_cfg):
+    params, _ = build_model(small_cfg).init(jax.random.PRNGKey(0))
+    with pytest.raises(ValueError, match="act_quant"):
+        ServeEngine(small_cfg, params, batch_size=1, max_len=8,
+                    act_quant="mixfp4-3pass")
+    with pytest.raises(ValueError, match="packed weights"):
+        ServeEngine(small_cfg, params, batch_size=1, max_len=8,
+                    act_quant="mixfp4-2pass", pack_weights=False)
+    with pytest.raises(ValueError, match="prefill_buckets"):
+        ServeEngine(small_cfg, params, batch_size=1, max_len=8,
+                    prefill_buckets="pow3")
