@@ -19,7 +19,11 @@ per commit:
   of quantizing activations — greedy-token agreement over a fixed
   generation and the max |logit delta| on the first post-prefill decode
   step (``results["act_quant"]``; asserted by the CI serving-bench-smoke
-  leg).
+  leg),
+* paged packed-KV pool vs fixed-slot serving under a shared-prefix
+  workload: the paged==fixed token-stream oracle, peak request
+  concurrency, prefix-hit rate, and cache-hit token throughput
+  (``results["kv_pool"]``; also asserted by the CI leg).
 
 Run:  PYTHONPATH=src python -m benchmarks.serving_bench [--tiny] [--out F]
       [--act-quant mixfp4]
@@ -191,6 +195,70 @@ def _act_quant_section(cfg, params, batch: int, max_len: int,
     return out
 
 
+def _paged_section(cfg, params, batch: int, max_len: int, *,
+                   page_len: int = 16, n_req: int = 6, n_new: int = 4) -> dict:
+    """Paged packed-KV pool vs the fixed-slot engine (serving.kvpool).
+
+    Drives the same shared-prefix workload — ``n_req`` requests, each a
+    page-sized common prefix plus a short unique tail — through both
+    engines and records: the paged==fixed token-stream oracle (asserted by
+    the CI serving-bench-smoke leg), peak concurrency, the prefix-hit rate
+    (prompt tokens whose prefill was skipped because their pages were
+    already cached), the cache-hit token throughput, and the pool's own
+    occupancy/eviction counters."""
+    import time as _time
+
+    rng = np.random.RandomState(1)
+    shared = rng.randint(0, cfg.vocab, page_len).astype(np.int32)
+    prompts = [np.concatenate(
+        [shared, rng.randint(0, cfg.vocab, 4 + (i % 3)).astype(np.int32)])
+        for i in range(n_req)]
+
+    def drive(eng):
+        pending = [Request(uid=i, prompt=p, max_new_tokens=n_new)
+                   for i, p in enumerate(prompts)]
+        streams: dict = {r.uid: [] for r in pending}
+        t0 = _time.perf_counter()
+        while pending or any(s is not None for s in eng.slots):
+            while pending and eng.add_request(pending[0]):
+                pending.pop(0)
+            for uid, tok in eng.step():
+                streams[uid].append(tok)
+        return streams, _time.perf_counter() - t0
+
+    fixed = ServeEngine(cfg, params, batch_size=batch, max_len=max_len,
+                        kv_quant="mixfp4")
+    pool_pages = batch * (max_len // page_len) + 1  # +1: trash page
+    paged = ServeEngine(cfg, params, batch_size=batch, max_len=max_len,
+                        kv_quant="mixfp4", kv_pool=pool_pages,
+                        kv_page_len=page_len)
+    sf, _ = drive(fixed)
+    sp, dt = drive(paged)
+    stats = paged.kv_pool.stats()
+    total_prompt = sum(len(p) for p in prompts)
+    total_new = sum(len(v) for v in sp.values())
+    out = {
+        "paged_matches_fixed": sf == sp,
+        "max_concurrent_requests": paged.max_concurrent,
+        "page_len": page_len,
+        "pool_pages": pool_pages,
+        "n_requests": n_req,
+        "prefix_hit_rate": stats["prefix_hit_tokens"] / max(total_prompt, 1),
+        "cache_hit_tokens": stats["prefix_hit_tokens"],
+        "cache_hit_tokens_per_s": stats["prefix_hit_tokens"] / max(dt, 1e-9),
+        "generated_tokens_per_s": total_new / max(dt, 1e-9),
+        "pool": stats,
+    }
+    common.emit("serving_paged_oracle", 0.0,
+                f"paged_matches_fixed={out['paged_matches_fixed']} "
+                f"max_concurrent={out['max_concurrent_requests']}")
+    common.emit("serving_prefix_cache", 0.0,
+                f"hit_rate={out['prefix_hit_rate']:.2f} "
+                f"hit_tokens={out['cache_hit_tokens']} "
+                f"cow={stats['cow_copies']} evictions={stats['evictions']}")
+    return out
+
+
 def bench_serving(out_path: str = "BENCH_serving.json", *,
                   tiny: bool = False, act_quant: str | None = None) -> dict:
     cfg = _bench_cfg(tiny)
@@ -250,6 +318,8 @@ def bench_serving(out_path: str = "BENCH_serving.json", *,
     if act_quant == "mixfp4":
         results["act_quant"] = _act_quant_section(cfg, params, batch,
                                                   max_len, prompt)
+
+    results["kv_pool"] = _paged_section(cfg, params, batch, max_len)
 
     with open(out_path, "w") as f:
         json.dump(results, f, indent=2, sort_keys=True)

@@ -464,6 +464,42 @@ def _pad_weight_operands(w: "QTensor", ch) -> tuple:
     return wp, ws
 
 
+def prepad_for_tiles(w: "QTensor", group: str, m: int,
+                     max_iters: int = 4) -> "QTensor":
+    """Pre-pad a 2-D packed weight's children onto the tuner's tile grid
+    so ``qmm`` dispatches stop re-padding the packed bytes inside every
+    jitted call (``_pad_weight_operands`` becomes a no-op for the target
+    ``(group, m)`` shape — e.g. the serving engine's decode batch).
+
+    Runs ``select_tiles`` to a fixed point: padding the storage dims can
+    itself change the tuner's choice, so iterate pad -> re-select until
+    ``(k_pad, n_pad)`` equals storage (k_pad/n_pad never shrink below
+    storage, so this converges, and other ``m`` shapes still pad safely at
+    dispatch).  Zero payload bytes under zero scale bytes decode to exact
+    zeros, and ``QTensor.shape`` keeps the logical dims, so dequantize /
+    GEMM results are unchanged — only the storage grid grows.  Stacked
+    (scan-sliced) weights and non-2-D layouts pass through untouched.
+    """
+    from repro.kernels import tuning  # deferred: kernels import core
+
+    if not (isinstance(w, QTensor) and isinstance(w.layout, BlockLayout2D)
+            and w.payload.ndim == 2):
+        return w
+    wp, ws = w.payload, w.scales
+    for _ in range(max_iters):
+        kp, np_ = 2 * wp.shape[0], wp.shape[1]
+        ch = tuning.select_tiles(group, m, kp, np_)
+        if ch.k_pad == kp and ch.n_pad == np_:
+            break
+        wp = jnp.pad(wp, ((0, (ch.k_pad - kp) // 2), (0, ch.n_pad - np_)))
+        ws = jnp.pad(ws, ((0, (ch.k_pad - kp) // _G),
+                          (0, (ch.n_pad - np_) // _G)))
+    if wp is w.payload:
+        return w
+    return QTensor(wp, ws, w.scale32, w.method, w.layout, w.shape,
+                   w.dtype, w.pspec)
+
+
 def _act_scale32_like_quantize_rows(x2: jax.Array) -> jax.Array:
     """The per-tensor activation scale exactly as ``mixfp4_quant_rows``
     derives it (Alg. 1 line 4 — one owner: ``scaling.tensor_scale``, which

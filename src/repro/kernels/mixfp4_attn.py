@@ -28,6 +28,16 @@ the output row is emitted on the last block.  GQA queries reshape to
 per step.  Masking covers ragged per-slot lengths, sliding windows and the
 S padding the ``ops`` entry may add; ``softcap`` is a compile-time constant
 (it is an arch property, not a per-layer one).
+
+``mixfp4_attn_decode_paged`` is the same flash loop over a *paged* pool
+(``serving/kvpool.py``): K/V slabs are (P, page_len, Hkv, ...) physical
+pages and a per-sequence block table maps logical key-block j to physical
+pages via ``pltpu.PrefetchScalarGridSpec`` scalar prefetch — the block
+table is read at *index-map* time, so each grid step DMAs exactly the
+pages it needs and the kernel body never sees the indirection.  Both
+kernels share ``_flash_step``, so a paged read over the same logical rows
+runs literally the same arithmetic as the fixed-slot kernel (the bitwise
+paged==fixed contract the serving tests pin).
 """
 from __future__ import annotations
 
@@ -40,7 +50,7 @@ from jax.experimental.pallas import tpu as pltpu
 
 from repro.kernels.mixfp4_gemm import _decode_nibbles, _decode_scales
 
-__all__ = ["mixfp4_attn_decode"]
+__all__ = ["mixfp4_attn_decode", "mixfp4_attn_decode_paged"]
 
 _G = 16
 _NEG_INF = -1e30
@@ -64,9 +74,14 @@ def _decode_kv_block(payload, scales, s32):
     return vals * s_full * s32
 
 
-def _attn_decode_kernel(len_ref, win_ref, s32_ref,
-                        q_ref, kp_ref, ks_ref, vp_ref, vs_ref,
-                        o_ref, acc_ref, m_ref, l_ref, *, softcap: float):
+def _flash_step(q_ref, kp, ks, vp, vs, kv_len, win, s32_ref,
+                o_ref, acc_ref, m_ref, l_ref, *, softcap: float):
+    """One key-block step of the flash-decoding loop, shared verbatim by
+    the fixed-slot and paged kernels: decode the packed (bs, Hkv, ...)
+    K/V block, fold it into the running (max, sum, acc) scratch state, and
+    emit the normalized output row on the last block.  Keeping both
+    kernels on this one body is what makes paged==fixed a *bitwise*
+    contract rather than an allclose one."""
     s_idx = pl.program_id(1)
     ns = pl.num_programs(1)
 
@@ -76,15 +91,12 @@ def _attn_decode_kernel(len_ref, win_ref, s32_ref,
         m_ref[...] = jnp.full_like(m_ref, _NEG_INF)
         l_ref[...] = jnp.zeros_like(l_ref)
 
-    kv_len = len_ref[0, 0]
-    win = win_ref[0, 0]
-
-    bs, hkv, dh2 = kp_ref.shape[1:]
+    bs, hkv, dh2 = kp.shape
     dh = 2 * dh2
     h = q_ref.shape[1]
     g = h // hkv
 
-    k = _decode_kv_block(kp_ref[0], ks_ref[0], s32_ref[0, 0])  # (bs,Hkv,dh)
+    k = _decode_kv_block(kp, ks, s32_ref[0, 0])                # (bs,Hkv,dh)
     q = q_ref[0].astype(jnp.float32).reshape(hkv, g, dh)
     # scores: per kv head, (g, dh) x (dh, bs) -> (Hkv, g, bs)
     s = jax.lax.dot_general(
@@ -108,7 +120,7 @@ def _attn_decode_kernel(len_ref, win_ref, s32_ref,
     l_new = l_ref[...].reshape(hkv, g, 1) * alpha \
         + jnp.sum(p, axis=-1, keepdims=True)
 
-    v = _decode_kv_block(vp_ref[0], vs_ref[0], s32_ref[0, 1])  # (bs,Hkv,dh)
+    v = _decode_kv_block(vp, vs, s32_ref[0, 1])                # (bs,Hkv,dh)
     # (Hkv, g, bs) x (bs, dh) batched over Hkv -> (Hkv, g, dh)
     pv = jax.lax.dot_general(
         p, jnp.transpose(v, (1, 0, 2)),
@@ -124,6 +136,37 @@ def _attn_decode_kernel(len_ref, win_ref, s32_ref,
     def _emit():
         l = l_ref[...]
         o_ref[0] = acc_ref[...] / jnp.where(l > 0, l, 1.0)
+
+
+def _attn_decode_kernel(len_ref, win_ref, s32_ref,
+                        q_ref, kp_ref, ks_ref, vp_ref, vs_ref,
+                        o_ref, acc_ref, m_ref, l_ref, *, softcap: float):
+    _flash_step(q_ref, kp_ref[0], ks_ref[0], vp_ref[0], vs_ref[0],
+                len_ref[0, 0], win_ref[0, 0], s32_ref,
+                o_ref, acc_ref, m_ref, l_ref, softcap=softcap)
+
+
+def _attn_decode_paged_kernel(bt_ref, len_ref, win_ref, s32_ref, q_ref,
+                              *refs, softcap: float, n_sub: int):
+    """Paged flash step: the grid's index maps already gathered the right
+    physical pages (via the prefetched block table), so the body only has
+    to stitch the ``n_sub`` page-sized sub-blocks back into one logical
+    (bs, Hkv, ...) key block.  Packed bytes concatenate before decode ==
+    decode-then-concatenate (the Fig. 9 decode is element-wise per row)."""
+    del bt_ref  # consumed by the index maps
+    kv, (o_ref, acc_ref, m_ref, l_ref) = refs[:-4], refs[-4:]
+    assert len(kv) == 4 * n_sub
+
+    def cat(sub_refs):
+        blocks = [r[0] for r in sub_refs]
+        return blocks[0] if n_sub == 1 else jnp.concatenate(blocks, axis=0)
+
+    kp = cat(kv[0 * n_sub:1 * n_sub])
+    ks = cat(kv[1 * n_sub:2 * n_sub])
+    vp = cat(kv[2 * n_sub:3 * n_sub])
+    vs = cat(kv[3 * n_sub:4 * n_sub])
+    _flash_step(q_ref, kp, ks, vp, vs, len_ref[0, 0], win_ref[0, 0],
+                s32_ref, o_ref, acc_ref, m_ref, l_ref, softcap=softcap)
 
 
 @functools.partial(
@@ -203,3 +246,115 @@ def mixfp4_attn_decode(
         ],
         interpret=interpret,
     )(lengths, win, s32, q, k_payload, k_scales, v_payload, v_scales)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("softcap", "bs", "interpret"))
+def mixfp4_attn_decode_paged(
+    q: jax.Array,
+    k_payload: jax.Array,
+    k_scales: jax.Array,
+    v_payload: jax.Array,
+    v_scales: jax.Array,
+    block_tables: jax.Array,
+    lengths: jax.Array,
+    *,
+    window: jax.Array | int = 0,
+    k_scale32: jax.Array | float = 1.0,
+    v_scale32: jax.Array | float = 1.0,
+    softcap: float = 0.0,
+    bs: int | None = None,
+    interpret: bool = False,
+) -> jax.Array:
+    """Decode attention over the *paged* packed KV pool -> (B, H, dh) f32.
+
+    K/V children are physical page slabs ``(P, page_len, Hkv, ...)`` and
+    ``block_tables`` (B, max_pages) int32 maps each sequence's logical page
+    order to slab rows (page 0 is the pool's trash page: unused table tail
+    entries point there and are masked by ``lengths``).  The table rides
+    ``PrefetchScalarGridSpec`` scalar prefetch so the page gather happens
+    in the BlockSpec index maps — per grid step the kernel DMAs only the
+    pages of that key block, and the body is the same ``_flash_step`` as
+    the fixed-slot kernel.  With ``bs`` equal to the fixed path's tuner
+    choice for the same logical S (the serving engine guarantees this by
+    requiring ``max_len % page_len == 0``), the paged output is
+    bitwise-identical to ``mixfp4_attn_decode`` on the gathered rows.
+    """
+    b, h, dh = q.shape
+    n_pages, page_len, hkv, dh2 = k_payload.shape
+    assert dh == 2 * dh2, f"q dh={dh} vs packed payload dh={2 * dh2}"
+    assert dh % _G == 0, f"dh={dh} must be a multiple of {_G}"
+    assert page_len % _G == 0, f"page_len={page_len} not a multiple of {_G}"
+    assert h % hkv == 0, f"H={h} not a multiple of Hkv={hkv}"
+    assert k_scales.shape == (n_pages, page_len, hkv, dh // _G)
+    assert block_tables.ndim == 2 and block_tables.shape[0] == b
+
+    max_pages = block_tables.shape[1]
+    s_logical = max_pages * page_len
+    if bs is None:
+        from repro.kernels import tuning  # deferred: keep module deps flat
+        bs = tuning.select_attn_key_block(s_logical, hkv, dh)
+    bs = min(bs, max(s_logical, 1))
+    # The grid needs bs and page_len commensurate so each key block is a
+    # whole number of (partial) pages; power-of-two page lengths always
+    # satisfy this for the tuner's power-of-two bs choices.
+    if bs >= page_len:
+        bs -= bs % page_len
+    elif page_len % bs:
+        bs = page_len
+
+    sp = -(-s_logical // bs) * bs
+    if sp != s_logical:  # pad table columns with the trash page (masked)
+        block_tables = jnp.pad(
+            block_tables, ((0, 0), (0, sp // page_len - max_pages)))
+    block_tables = jnp.asarray(block_tables, jnp.int32)
+
+    lengths = jnp.broadcast_to(
+        jnp.asarray(lengths, jnp.int32), (b,)).reshape(b, 1)
+    win = jnp.asarray(window, jnp.int32).reshape(1, 1)
+    s32 = jnp.stack([jnp.asarray(k_scale32, jnp.float32).reshape(()),
+                     jnp.asarray(v_scale32, jnp.float32).reshape(())]
+                    ).reshape(1, 2)
+
+    grid = (b, sp // bs)
+    if bs >= page_len:
+        n_sub, rows = bs // page_len, page_len
+
+        def _page_map(t):
+            return lambda i, j, bt: (bt[i, j * n_sub + t], 0, 0, 0)
+
+        maps = [_page_map(t) for t in range(n_sub)]
+    else:
+        n_sub, rows = 1, bs
+        ipb = page_len // bs
+        maps = [lambda i, j, bt: (bt[i, j // ipb], j % ipb, 0, 0)]
+
+    kv_specs = [pl.BlockSpec((1, rows, hkv, dh2), m) for m in maps]
+    sc_specs = [pl.BlockSpec((1, rows, hkv, dh // _G), m) for m in maps]
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda i, j, bt: (i, 0)),    # lengths
+            pl.BlockSpec((1, 1), lambda i, j, bt: (0, 0)),    # window
+            pl.BlockSpec((1, 2), lambda i, j, bt: (0, 0)),    # scale32s
+            pl.BlockSpec((1, h, dh), lambda i, j, bt: (i, 0, 0)),
+            *kv_specs, *sc_specs, *kv_specs, *sc_specs,
+        ],
+        out_specs=pl.BlockSpec((1, h, dh), lambda i, j, bt: (i, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((h, dh), jnp.float32),   # acc
+            pltpu.VMEM((h, 1), jnp.float32),    # running max
+            pltpu.VMEM((h, 1), jnp.float32),    # running sum
+        ],
+    )
+    return pl.pallas_call(
+        functools.partial(
+            _attn_decode_paged_kernel, softcap=softcap, n_sub=n_sub),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, h, dh), jnp.float32),
+        interpret=interpret,
+    )(block_tables, lengths, win, s32, q,
+      *([k_payload] * n_sub), *([k_scales] * n_sub),
+      *([v_payload] * n_sub), *([v_scales] * n_sub))

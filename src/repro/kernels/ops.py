@@ -18,7 +18,8 @@ import jax.numpy as jnp
 
 from repro.kernels import ref
 from repro.kernels.fwht import fwht_rows
-from repro.kernels.mixfp4_attn import mixfp4_attn_decode
+from repro.kernels.mixfp4_attn import (mixfp4_attn_decode,
+                                       mixfp4_attn_decode_paged)
 from repro.kernels.mixfp4_gemm import (mixfp4_gemm_w4a4,
                                        mixfp4_gemm_w4a4_fused,
                                        mixfp4_gemm_w4a16)
@@ -32,6 +33,7 @@ __all__ = [
     "gemm_w4a4",
     "gemm_w4a4_fused",
     "attn_decode_packed",
+    "attn_decode_paged",
     "rht_rows",
     "count_dispatches",
 ]
@@ -127,6 +129,20 @@ def attn_decode_packed(q, k_payload, k_scales, v_payload, v_scales,
     kw.setdefault("interpret", default_interpret())
     return mixfp4_attn_decode(q, k_payload, k_scales, v_payload, v_scales,
                               lengths, **kw)
+
+
+def attn_decode_paged(q, k_payload, k_scales, v_payload, v_scales,
+                      block_tables, lengths, **kw):
+    """Fused decode attention over the *paged* packed KV pool
+    (``serving.kvpool``): K/V children are physical page slabs
+    (P, page_len, Hkv, ...) and ``block_tables`` (B, max_pages) maps each
+    sequence's logical page order to slab rows via scalar-prefetch index
+    maps.  Same ``_flash_step`` body as ``attn_decode_packed`` — with the
+    engine's matched key-block size the paged read is bitwise-identical
+    to the fixed-slot kernel on the gathered rows."""
+    kw.setdefault("interpret", default_interpret())
+    return mixfp4_attn_decode_paged(q, k_payload, k_scales, v_payload,
+                                    v_scales, block_tables, lengths, **kw)
 
 
 def rht_rows(x, signs, **kw):

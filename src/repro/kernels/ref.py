@@ -101,14 +101,25 @@ def ref_attn_decode_packed(
     k_scale32=1.0,
     v_scale32=1.0,
     softcap: float = 0.0,
+    block_tables: jax.Array | None = None,
 ) -> jax.Array:
     """Decode-attention oracle: dequantize the packed cache and run the
     masked softmax.V in plain f32 jnp (mirrors ``models.base.attention``
     decode semantics: the query sits at position ``lengths - 1``).
 
     q (B, H, dh); packed K/V (B, S, Hkv, ...); lengths () or (B,) int32.
+    With ``block_tables`` (B, max_pages) int32 the K/V children are paged
+    pool slabs (P, page_len, Hkv, ...) and the oracle first gathers each
+    sequence's pages into the logical (B, max_pages*page_len, Hkv, ...)
+    view — the reference semantics for ``ops.attn_decode_paged``.
     Returns (B, H, dh) f32.
     """
+    if block_tables is not None:
+        def _gather(a):
+            g = a[block_tables]          # (B, max_pages, page_len, Hkv, x)
+            return g.reshape(g.shape[0], -1, *g.shape[3:])
+        k_payload, k_scales = _gather(k_payload), _gather(k_scales)
+        v_payload, v_scales = _gather(v_payload), _gather(v_scales)
     b, h, dh = q.shape
     s, hkv = k_payload.shape[1:3]
     g = h // hkv

@@ -207,6 +207,51 @@ def packed_weight_report(arch: str, quant_method: str = "mixfp4",
             }}
 
 
+def kv_pool_report(arch: str, quant_method: str = "mixfp4",
+                   overrides: dict | None = None, *, batch: int = 8,
+                   max_len: int = 512, num_pages: int | None = None,
+                   page_len: int = 16) -> dict | None:
+    """Abstract HBM accounting for the paged packed KV pool
+    (``ServeEngine(kv_pool=...)``, serving.kvpool): bytes for the KV cache
+    dense at bf16, packed per-slot (the fixed-slot engine), and as pool
+    page slabs + per-request block tables — plus the capacity story: pages
+    per worst-case request and how many such requests the pool can hold
+    concurrently (page 0 is the reserved trash page).  ``num_pages``
+    defaults to matching the fixed-slot engine's row capacity exactly, so
+    the default report isolates the layout cost (table bytes) from any
+    over/under-provisioning.  Returns None for families without an
+    attention KV cache."""
+    cfg = configs.full_config(arch).replace(
+        quant=QuantConfig(method=quant_method))
+    if overrides:
+        cfg = cfg.replace(**overrides)
+    if cfg.family in ("dense", "moe", "vlm"):
+        n_axis, hkv = cfg.n_layers, cfg.n_kv_heads
+    elif cfg.family == "hybrid" and cfg.attn_period:
+        n_axis, hkv = build_model(cfg).n_attn_apps(), cfg.n_heads
+    else:
+        return None
+    max_len -= max_len % page_len
+    if num_pages is None:
+        num_pages = batch * (max_len // page_len) + 1  # +1: trash page
+    row = hkv * (cfg.dh // 2 + cfg.dh // 16)      # packed bytes per KV row
+    fixed = 2 * (n_axis * batch * max_len * row + 4 * n_axis)
+    slabs = 2 * (n_axis * num_pages * page_len * row + 4 * n_axis)
+    table = batch * (max_len // page_len) * 4
+    bf16 = 2 * n_axis * batch * max_len * hkv * cfg.dh * 2
+    per_req = -(-max_len // page_len)             # worst-case request
+    return {
+        "page_len": page_len, "num_pages": num_pages,
+        "kv_bf16_bytes": bf16,
+        "kv_packed_fixed_bytes": fixed,
+        "kv_pool_bytes": slabs + table,
+        "block_table_bytes": table,
+        "pool_vs_fixed": round((slabs + table) / fixed, 4) if fixed else 1.0,
+        "pages_per_max_len_request": per_req,
+        "max_concurrent_max_len_requests": (num_pages - 1) // per_req,
+    }
+
+
 def build_cell(arch: str, shape_name: str, mesh, multi_pod: bool,
                quant_method: str = "mixfp4", overrides: dict | None = None):
     """Returns ((jitted_fn, arg_sds), entry_tag) or (None, skip_reason)."""
@@ -282,7 +327,8 @@ def build_cell(arch: str, shape_name: str, mesh, multi_pod: bool,
 
 def run_cell(arch: str, shape_name: str, mesh_kind: str,
              quant_method: str = "mixfp4", out_dir: str | None = None,
-             overrides: dict | None = None, suffix: str = ""):
+             overrides: dict | None = None, suffix: str = "",
+             kv_pool: int | None = None, kv_page_len: int = 16):
     multi_pod = mesh_kind == "multi"
     mesh = make_production_mesh(multi_pod=multi_pod)
     t0 = time.time()
@@ -334,6 +380,11 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str,
             "total_bytes": coll.total_bytes,
         },
         "weight_bytes": packed_weight_report(arch, quant_method, overrides),
+        "kv_pool": kv_pool_report(
+            arch, quant_method, overrides,
+            batch=shp.SHAPES[shape_name].batch,
+            max_len=max(shp.SHAPES[shape_name].seq, kv_page_len),
+            num_pages=kv_pool, page_len=kv_page_len),
     }
     _write(rec, out_dir)
     print(f"[dryrun] OK {arch} {shape_name} {mesh_kind} "
@@ -365,6 +416,14 @@ def main():
     ap.add_argument("--out", default=None)
     ap.add_argument("--set", default="", help="cfg overrides k=v,k=v")
     ap.add_argument("--suffix", default="", help="artifact name suffix")
+    ap.add_argument("--kv-pool", type=int, default=0, metavar="PAGES",
+                    help="size the paged-KV-pool accounting report "
+                         "(kv_pool record field) at PAGES physical pages; "
+                         "default sizes the pool to match the fixed-slot "
+                         "cache's row capacity")
+    ap.add_argument("--kv-page-len", type=int, default=16, metavar="ROWS",
+                    help="rows per KV page for the kv_pool report "
+                         "(multiple of 16)")
     args = ap.parse_args()
     overrides = {}
     for kv in args.set.split(","):
@@ -385,7 +444,9 @@ def main():
             for mesh_kind in meshes:
                 try:
                     run_cell(arch, shape_name, mesh_kind, args.quant,
-                             args.out, overrides, args.suffix)
+                             args.out, overrides, args.suffix,
+                             kv_pool=args.kv_pool or None,
+                             kv_page_len=args.kv_page_len)
                 except Exception as e:
                     traceback.print_exc()
                     failures.append((arch, shape_name, mesh_kind, str(e)))

@@ -90,6 +90,16 @@ def main(argv=None):
                          "is bitwise-identical to; 'mixfp4-qdq' is the "
                          "dequantize-then-W4A16 debugging oracle; default "
                          "bf16 (W4A16)")
+    ap.add_argument("--kv-pool", type=int, default=0, metavar="PAGES",
+                    help="serve the packed KV cache as a PAGES-page pool "
+                         "with per-request block tables, copy-on-write "
+                         "prefix caching (transformers) and LRU eviction "
+                         "(serving.kvpool; requires --kv-quant mixfp4). "
+                         "Page 0 is the trash page, so usable pages are "
+                         "PAGES-1")
+    ap.add_argument("--kv-page-len", type=int, default=16, metavar="ROWS",
+                    help="rows per KV page (multiple of 16 — the MixFP4 "
+                         "block — and must divide --max-len)")
     ap.add_argument("--prefill-buckets", default="auto",
                     choices=["auto", "pow2-64", "off"],
                     help="pad prompts up a pow-2/64-step length ladder so "
@@ -140,7 +150,9 @@ def main(argv=None):
                          max_len=args.max_len,
                          pack_weights=not args.no_pack,
                          kv_quant=args.kv_quant, act_quant=args.act_quant,
-                         mesh=mesh, prefill_buckets=args.prefill_buckets)
+                         mesh=mesh, prefill_buckets=args.prefill_buckets,
+                         kv_pool=args.kv_pool or None,
+                         kv_page_len=args.kv_page_len)
     del params  # projections now live ONLY as packed QTensors in the engine
     if mesh is not None:
         shards = sorted({
@@ -183,8 +195,14 @@ def main(argv=None):
         return
 
     rng = np.random.RandomState(args.seed)
+    # pooled demos share a page-sized "system prompt" across requests so
+    # the pool report below actually shows prefix hits
+    shared = (rng.randint(0, cfg.vocab, args.kv_page_len).astype(np.int32)
+              if args.kv_pool else np.zeros((0,), np.int32))
     pending = [Request(uid=i,
-                       prompt=rng.randint(0, cfg.vocab, 6).astype(np.int32),
+                       prompt=np.concatenate(
+                           [shared,
+                            rng.randint(0, cfg.vocab, 6).astype(np.int32)]),
                        max_new_tokens=args.new_tokens)
                for i in range(args.requests)]
     t0, n_tok, active = time.time(), 0, 0
@@ -201,6 +219,16 @@ def main(argv=None):
           f"-> {engine.prefill_compiles} compiled lengths, "
           f"{engine.prefill_cache_hits} shape-cache hits "
           f"(buckets={engine.prefill_buckets or 'off'})")
+    rep = engine.pool_report()
+    if rep is not None:
+        print(f"[serve] KV pool: {rep['pages_total']} pages x "
+              f"{rep['page_len']} rows, peak concurrency "
+              f"{engine.max_concurrent}; prefix hits {rep['prefix_hits']} "
+              f"pages / {rep['prefix_hit_tokens']} tokens skipped, "
+              f"{rep['cow_copies']} COW copies, {rep['evictions']} "
+              f"evictions, {rep['alloc_failures']} admission deferrals; "
+              f"final occupancy {rep['occupancy']:.2f} "
+              f"({rep['pages_cached']} cached / {rep['pages_free']} free)")
 
 
 if __name__ == "__main__":

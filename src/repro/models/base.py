@@ -640,13 +640,89 @@ def _attn_packed_cached(q, knew, vnew, kv_cache, cache_len, window,
     return o, (new_k, new_v)
 
 
+def _attn_paged_cached(q, knew, vnew, kv_cache, cache_len, block_tables,
+                       window, cfg: ArchConfig):
+    """Attention over the *paged* packed KV pool (serving.kvpool).
+
+    The cache children are physical page slabs (P, page_len, Hkv, ...) and
+    ``block_tables`` (B, max_pages) int32 maps each sequence's logical page
+    order to slab rows — logical position ``t`` lives at
+    ``(block_tables[b, t // page_len], t % page_len)``.
+
+    Decode (s == 1): quantize the new row, scatter its packed bytes through
+    the page translation, and run the paged flash kernel over the slabs +
+    table.  Inactive lanes scatter into page 0 (the pool's trash page,
+    where zeroed table rows point); every read of it is masked by lengths.
+
+    Prefill (s > 1, scalar ``cache_len`` = the suffix start): scatter all
+    rows through the translation, then gather the sequence's pages into the
+    logical (1, max_pages*page_len, ...) view and attend over the
+    *dequantized* rows exactly as the fixed-slot prefill does — gathered
+    bytes equal the fixed path's in every valid position and junk rows
+    beyond ``kv_valid_len`` are masked identically, so the logits are
+    bitwise the fixed path's.
+    """
+    from repro.kernels import ops  # deferred: kernels import core
+
+    b, s, _, _ = q.shape
+    ck, cv = kv_cache
+    page_len = ck.payload.shape[1]
+    cl = jnp.asarray(cache_len)
+    kp, ks = quantize_kv_rows(knew)
+    vp, vs = quantize_kv_rows(vnew)
+    if s == 1:
+        cl_vec = cl if cl.ndim else jnp.broadcast_to(cl, (b,))
+        rows = jnp.arange(b)
+        phys = block_tables[rows, cl_vec // page_len]
+        off = cl_vec % page_len
+        ckp = ck.payload.at[phys, off].set(kp[:, 0])
+        cks = ck.scales.at[phys, off].set(ks[:, 0])
+        cvp = cv.payload.at[phys, off].set(vp[:, 0])
+        cvs = cv.scales.at[phys, off].set(vs[:, 0])
+        o = ops.attn_decode_paged(
+            q[:, 0], ckp, cks, cvp, cvs, block_tables, cl_vec + 1,
+            window=window, softcap=cfg.softcap_attn,
+            k_scale32=ck.scale32, v_scale32=cv.scale32)
+        o = o[:, None].astype(q.dtype)
+    else:
+        assert cl.ndim == 0, \
+            "paged prefill requires a scalar cache_len (the suffix start)"
+        assert b == 1, "paged prefill is a single-request view (b == 1)"
+        pos = cl + jnp.arange(s)
+        phys = block_tables[0, pos // page_len]
+        off = pos % page_len
+        ckp = ck.payload.at[phys, off].set(kp[0])
+        cks = ck.scales.at[phys, off].set(ks[0])
+        cvp = cv.payload.at[phys, off].set(vp[0])
+        cvs = cv.scales.at[phys, off].set(vs[0])
+
+        def logical(a):  # (P, page_len, Hkv, x) -> (1, S_logical, Hkv, x)
+            g = a[block_tables[0]]
+            return g.reshape(1, -1, *g.shape[2:])
+
+        k = qtensor.from_packed_rows(
+            logical(ckp), logical(cks), ck.scale32).dequantize()
+        v = qtensor.from_packed_rows(
+            logical(cvp), logical(cvs), cv.scale32).dequantize()
+        o = attention(q, k, v, causal_offset=cl, window=window,
+                      softcap=cfg.softcap_attn, chunk=cfg.attn_chunk,
+                      kv_valid_len=cl + s)
+    new_k = qtensor.QTensor(ckp, cks, ck.scale32, ck.method, ck.layout,
+                            ck.shape, ck.dtype)
+    new_v = qtensor.QTensor(cvp, cvs, cv.scale32, cv.method, cv.layout,
+                            cv.shape, cv.dtype)
+    return o, (new_k, new_v)
+
+
 def attn_apply(p: dict, x: jax.Array, ctx: Ctx, cfg: ArchConfig, *,
                positions: jax.Array, window, kv_cache=None,
-               cache_len=None, causal: bool = True,
+               cache_len=None, causal: bool = True, block_tables=None,
                ) -> tuple[jax.Array, tuple | None]:
     """Full attention sub-layer.  When ``kv_cache=(K, V)`` is given, new K/V
     are written at ``cache_len`` and attention runs over the cache (decode).
-    A cache of packed QTensors routes through the fused packed-KV path."""
+    A cache of packed QTensors routes through the fused packed-KV path;
+    with ``block_tables`` the QTensors are paged pool slabs and writes/reads
+    go through the page translation (serving.kvpool)."""
     b, s, _ = x.shape
     dh = cfg.dh
     q = qlinear(x, p["wq"], ctx, 0).reshape(b, s, cfg.n_heads, dh)
@@ -677,8 +753,13 @@ def attn_apply(p: dict, x: jax.Array, ctx: Ctx, cfg: ArchConfig, *,
             vnew = shard(vnew, "data", "model", None, None)
 
     if kv_cache is not None and isinstance(kv_cache[0], qtensor.QTensor):
-        o, new_cache = _attn_packed_cached(
-            q, knew, vnew, kv_cache, cache_len, window, cfg)
+        if block_tables is not None:
+            o, new_cache = _attn_paged_cached(
+                q, knew, vnew, kv_cache, cache_len, block_tables, window,
+                cfg)
+        else:
+            o, new_cache = _attn_packed_cached(
+                q, knew, vnew, kv_cache, cache_len, window, cfg)
         out = qlinear(o.reshape(b, s, cfg.n_heads * dh), p["wo"], ctx, 3)
         return out, new_cache
 

@@ -25,8 +25,34 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
+from repro.core import qtensor
 from repro.models import base
 from repro.models.base import ArchConfig, Ctx, Param, qlinear, rms_norm, shard, unzip_params
+
+
+def _app_take(c, aidx):
+    """Slice attention-app ``aidx`` off a stacked KV carry.  The carry is
+    either a dense (na, B, S, H, dh) array or a packed QTensor whose
+    children lead with the app axis — scan carries can't be sliced as xs
+    because only every ``attn_period``-th layer applies the shared block."""
+    take = lambda a: jax.lax.dynamic_index_in_dim(a, aidx, 0, keepdims=False)
+    if isinstance(c, qtensor.QTensor):
+        return qtensor.QTensor(take(c.payload), take(c.scales),
+                               take(c.scale32), c.method, c.layout,
+                               c.shape, c.dtype)
+    return take(c)
+
+
+def _app_put(c, new, aidx):
+    """Write app ``aidx``'s updated KV back into the stacked carry."""
+    put = lambda a, n: jax.lax.dynamic_update_index_in_dim(
+        a, n.astype(a.dtype), aidx, 0)
+    if isinstance(c, qtensor.QTensor):
+        # scale32 is pinned (base.KV_SCALE32) and shared across apps
+        return qtensor.QTensor(put(c.payload, new.payload),
+                               put(c.scales, new.scales), c.scale32,
+                               c.method, c.layout, c.shape, c.dtype)
+    return put(c, new)
 
 
 # ---------------------------------------------------------------------------
@@ -259,7 +285,7 @@ class MambaLM:
         return x + out, hT, convT
 
     def _shared_block(self, sp, x, x0, ctx: Ctx, *, positions,
-                      kv_cache=None, cache_len=None):
+                      kv_cache=None, cache_len=None, block_tables=None):
         """Zamba2 shared attn+MLP on concat(x, x_embed); output added to x."""
         cfg = self.cfg
         d2 = 2 * cfg.d_model
@@ -268,7 +294,8 @@ class MambaLM:
         hn = rms_norm(h2, sp["ln_attn"], cfg.norm_eps)
         attn_out, new_cache = base.attn_apply(
             sp["attn"], hn, ctx.fold(7), acfg, positions=positions,
-            window=0, kv_cache=kv_cache, cache_len=cache_len)
+            window=0, kv_cache=kv_cache, cache_len=cache_len,
+            block_tables=block_tables)
         x = x + attn_out
         h2 = jnp.concatenate([x, x0], axis=-1)
         hn = rms_norm(h2, sp["ln_mlp"], cfg.norm_eps)
@@ -300,7 +327,7 @@ class MambaLM:
         return h, conv
 
     def _run_layers(self, params, x, ctx: Ctx, h0s, conv0s, *, positions,
-                    kv_cache=None, cache_len=None):
+                    kv_cache=None, cache_len=None, block_tables=None):
         cfg = self.cfg
         flags, app_idx = self._attn_flags()
         lkeys = jax.random.split(ctx.key, cfg.n_layers)
@@ -318,17 +345,14 @@ class MambaLM:
             if sp is not None:
                 def with_attn(x):
                     if use_cache:
-                        kci = jax.lax.dynamic_index_in_dim(
-                            kc, aidx, 0, keepdims=False)
-                        vci = jax.lax.dynamic_index_in_dim(
-                            vc, aidx, 0, keepdims=False)
+                        kci = _app_take(kc, aidx)
+                        vci = _app_take(vc, aidx)
                         xo, ncache = self._shared_block(
                             sp, x, x0, lctx, positions=positions,
-                            kv_cache=(kci, vci), cache_len=cache_len)
-                        nkc = jax.lax.dynamic_update_index_in_dim(
-                            kc, ncache[0], aidx, 0)
-                        nvc = jax.lax.dynamic_update_index_in_dim(
-                            vc, ncache[1], aidx, 0)
+                            kv_cache=(kci, vci), cache_len=cache_len,
+                            block_tables=block_tables)
+                        nkc = _app_put(kc, ncache[0], aidx)
+                        nvc = _app_put(vc, ncache[1], aidx)
                         return xo, nkc, nvc
                     xo, _ = self._shared_block(sp, x, x0, lctx,
                                                positions=positions)
@@ -370,15 +394,65 @@ class MambaLM:
                                   self.cfg.softcap_final,
                                   self.cfg.vocab) + aux
 
-    def init_cache(self, batch_size: int, max_len: int, dtype=jnp.bfloat16):
+    def init_cache(self, batch_size: int, max_len: int, dtype=jnp.bfloat16,
+                   kv_quant: str | None = None,
+                   pages: tuple[int, int] | None = None):
+        """Recurrent h/conv state plus (hybrid) the shared-attention KV
+        cache.  ``kv_quant="mixfp4"`` packs the KV exactly like the
+        transformer families — QTensor children with a leading *app* axis
+        ((na, B, S, H, dh//2) payload + scale bytes) that ``_app_take``
+        slices per shared-block application — and ``pages=(num_pages,
+        page_len)`` swaps the per-slot stripes for pool page slabs
+        ((na, P, page_len, H, ...)) plus a ``"pages"`` block table, so the
+        hybrid rides the same serving.kvpool as the transformers.  The
+        h/conv state stays dense f32/bf16 per slot either way: SSM state
+        is not attention history and cannot be paged or prefix-shared."""
         cfg = self.cfg
         h, conv = self._init_states(batch_size)
         cache = {"h": h, "conv": conv}
-        if cfg.attn_period:
-            na = self.n_attn_apps()
+        if pages is not None and not cfg.attn_period:
+            raise ValueError("paged KV (pages=) needs a hybrid arch with "
+                             "shared attention (cfg.attn_period)")
+        if not cfg.attn_period:
+            return cache
+        na = self.n_attn_apps()
+        if kv_quant is None or kv_quant == "bf16":
+            if pages is not None:
+                raise ValueError("paged KV (pages=) requires "
+                                 f"kv_quant='mixfp4', got {kv_quant!r}")
             shape = (na, batch_size, max_len, cfg.n_heads, cfg.dh)
             cache["k"] = jnp.zeros(shape, dtype)
             cache["v"] = jnp.zeros(shape, dtype)
+            return cache
+        if kv_quant != "mixfp4":
+            raise ValueError(f"unknown kv_quant {kv_quant!r} "
+                             "(expected None, 'bf16' or 'mixfp4')")
+        if cfg.dh % 16:
+            raise ValueError(
+                f"kv_quant='mixfp4' needs head_dim % 16 == 0, got {cfg.dh}")
+        if pages is not None:
+            num_pages, page_len = pages
+            if page_len % 16 or max_len % page_len:
+                raise ValueError(
+                    f"page_len={page_len} must be a multiple of 16 and "
+                    f"divide max_len={max_len}")
+            rows = (num_pages, page_len, cfg.n_heads)
+        else:
+            rows = (batch_size, max_len, cfg.n_heads)
+
+        def packed():
+            return qtensor.QTensor(
+                jnp.zeros((na, *rows, cfg.dh // 2), jnp.uint8),
+                jnp.zeros((na, *rows, cfg.dh // 16), jnp.uint8),
+                jnp.full((na,), base.KV_SCALE32, jnp.float32),
+                method="mixfp4", layout=qtensor.BlockLayout1D(-1, 16),
+                shape=(*rows, cfg.dh), dtype="float32")
+
+        cache["k"] = packed()
+        cache["v"] = packed()
+        if pages is not None:
+            cache["pages"] = jnp.zeros(
+                (batch_size, max_len // page_len), jnp.int32)
         return cache
 
     def cache_specs(self):
@@ -396,7 +470,7 @@ class MambaLM:
             specs["v"] = P(None, "data", None, "model", None)
         return specs
 
-    def prefill(self, params, batch, ctx: Ctx, cache):
+    def prefill(self, params, batch, ctx: Ctx, cache, block_tables=None):
         cfg = self.cfg
         x = params["embed"][batch["tokens"]].astype(jnp.bfloat16)
         x = shard(x, "data", None, None)
@@ -405,7 +479,8 @@ class MambaLM:
         kv = (cache["k"], cache["v"]) if cfg.attn_period else None
         x, hTs, convTs, kvT = self._run_layers(
             params, x, ctx, cache["h"], cache["conv"],
-            positions=positions, kv_cache=kv, cache_len=0 if kv else None)
+            positions=positions, kv_cache=kv, cache_len=0 if kv else None,
+            block_tables=block_tables)
         x = rms_norm(x, params["ln_f"], cfg.norm_eps)
         logits = base.lm_logits(x[:, -1], params["embed"], cfg.softcap_final, vocab=cfg.vocab)
         new_cache = {"h": hTs, "conv": convTs}
@@ -415,18 +490,28 @@ class MambaLM:
 
     def reset_slot(self, cache, i: int):
         """Zero slot ``i``'s recurrent SSM state, conv window and (hybrid)
-        K/V rows — for the SSM a zeroed state IS the fresh-request state."""
-        return jax.tree.map(lambda a: a.at[:, i].set(0), cache)
+        K/V rows — for the SSM a zeroed state IS the fresh-request state.
+        Paged caches zero only the slot's h/conv rows and block-table row
+        (all entries -> trash page 0); pool pages belong to the pool."""
+        if isinstance(cache, dict) and "pages" in cache:
+            return dict(cache,
+                        h=cache["h"].at[:, i].set(0),
+                        conv=cache["conv"].at[:, i].set(0),
+                        pages=cache["pages"].at[i].set(0))
+        return base._map_slot_arrays(lambda a: a.at[:, i].set(0), cache)
 
     def slot_state(self, cache, i: int):
-        """Snapshot slot ``i``'s rows.  Unlike KV rows, the recurrent
-        h/conv state advances for EVERY batch row each decode step, so the
-        engine must restore other active slots after a prefill — a dummy
-        step is irreversible for an SSM."""
-        return jax.tree.map(lambda a: a[:, i], cache)
+        """Snapshot slot ``i``'s rows (fixed-slot caches only).  Unlike KV
+        rows, the recurrent h/conv state advances for EVERY batch row each
+        decode step, so the engine must restore other active slots after a
+        prefill — a dummy step is irreversible for an SSM."""
+        assert "pages" not in cache, "paged caches have no per-slot KV rows"
+        return base._map_slot_arrays(lambda a: a[:, i], cache)
 
     def write_slot(self, cache, i: int, state):
-        return jax.tree.map(lambda a, s: a.at[:, i].set(s), cache, state)
+        assert "pages" not in cache, "paged caches have no per-slot KV rows"
+        return base._map_slot_arrays(
+            lambda a, s: a.at[:, i].set(s.astype(a.dtype)), cache, state)
 
     def prefill_slot(self, params, tokens, ctx: Ctx, cache, slot,
                      true_len=None):
@@ -453,6 +538,25 @@ class MambaLM:
                 and p_len % cfg.attn_chunk:
             cfg2 = cfg2.replace(attn_chunk=p_len)
         model = self if cfg2 is cfg else MambaLM(cfg2)
+        if isinstance(cache, dict) and "pages" in cache:
+            # paged: slice only the slot's recurrent state; the KV pool
+            # stays whole and the slot's block-table row routes the writes.
+            # No start_pos/prefix sharing for hybrids: the SSM state needs
+            # the full prompt run regardless, so engines admit hybrids with
+            # prefix caching disabled and always prefill from position 0.
+            recur = {"h": cache["h"], "conv": cache["conv"]}
+            small = base.slot_take(recur, slot)
+            small["k"], small["v"] = cache["k"], cache["v"]
+            btrow = jax.lax.dynamic_slice_in_dim(cache["pages"], slot, 1,
+                                                 axis=0)
+            logits, new_small = model.prefill(
+                params, {"tokens": tokens}, ctx, small, block_tables=btrow)
+            out = base.slot_put(
+                recur, {"h": new_small["h"], "conv": new_small["conv"]},
+                slot)
+            return logits, {"h": out["h"], "conv": out["conv"],
+                            "k": new_small["k"], "v": new_small["v"],
+                            "pages": cache["pages"]}
         small = base.slot_take(cache, slot)
         logits, new_small = model.prefill(
             params, {"tokens": tokens}, ctx, small)
@@ -463,13 +567,16 @@ class MambaLM:
         x = params["embed"][tokens[:, None]].astype(jnp.bfloat16)
         positions = base.decode_positions(cache_len, x.shape[0])
         kv = (cache["k"], cache["v"]) if cfg.attn_period else None
+        bt = cache.get("pages") if isinstance(cache, dict) else None
         x, hTs, convTs, kvT = self._run_layers(
             params, x, ctx, cache["h"], cache["conv"],
             positions=positions, kv_cache=kv,
-            cache_len=cache_len if kv else None)
+            cache_len=cache_len if kv else None, block_tables=bt)
         x = rms_norm(x, params["ln_f"], cfg.norm_eps)
         logits = base.lm_logits(x[:, 0], params["embed"], cfg.softcap_final, vocab=cfg.vocab)
         new_cache = {"h": hTs, "conv": convTs}
         if cfg.attn_period:
             new_cache["k"], new_cache["v"] = kvT
+        if bt is not None:
+            new_cache["pages"] = cache["pages"]
         return logits, new_cache

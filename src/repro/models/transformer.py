@@ -101,12 +101,13 @@ class TransformerLM:
         return shard(x, "data", None, "model")
 
     def _layer_apply(self, lp, x, ctx: Ctx, window, *, positions,
-                     kv_cache=None, cache_len=None):
+                     kv_cache=None, cache_len=None, block_tables=None):
         cfg = self.cfg
         h = base.rms_norm(x, lp["ln_attn"], cfg.norm_eps)
         attn_out, new_cache = base.attn_apply(
             lp["attn"], h, ctx.fold(1), cfg, positions=positions,
-            window=window, kv_cache=kv_cache, cache_len=cache_len)
+            window=window, kv_cache=kv_cache, cache_len=cache_len,
+            block_tables=block_tables)
         x = x + attn_out
         h = base.rms_norm(x, lp["ln_mlp"], cfg.norm_eps)
         if cfg.n_experts:
@@ -162,14 +163,31 @@ class TransformerLM:
     # serving: KV cache, prefill, decode
     # ------------------------------------------------------------------
     def init_cache(self, batch_size: int, max_len: int, dtype=jnp.bfloat16,
-                   kv_quant: str | None = None):
+                   kv_quant: str | None = None,
+                   pages: tuple[int, int] | None = None):
         """Preallocated KV cache.  ``kv_quant="mixfp4"`` holds it packed:
         one 1-D-blocked QTensor per K/V whose children carry a leading
         layer axis ((L, B, S, Hkv, dh//2) payload + (..., dh//16) scale
         bytes, 4.5 bits/value in HBM) that ``lax.scan`` slices layer-by-
         layer; decode reads it through the fused Pallas attention kernel
-        without ever materializing the dense tensor (docs/serving.md)."""
+        without ever materializing the dense tensor (docs/serving.md).
+
+        ``pages=(num_pages, page_len)`` builds the *paged* layout instead
+        (serving.kvpool): K/V children become physical page slabs
+        ((L, P, page_len, Hkv, ...)) shared by every request, plus a
+        ``"pages"`` block table (B, max_len//page_len) int32 mapping each
+        batch lane's logical page order to slab rows.  The zeroed table
+        points every lane at page 0, the pool's trash page."""
         cfg = self.cfg
+        if pages is not None:
+            if kv_quant != "mixfp4":
+                raise ValueError("paged KV (pages=) requires "
+                                 f"kv_quant='mixfp4', got {kv_quant!r}")
+            num_pages, page_len = pages
+            if page_len % 16 or max_len % page_len:
+                raise ValueError(
+                    f"page_len={page_len} must be a multiple of 16 and "
+                    f"divide max_len={max_len}")
         shape = (cfg.n_layers, batch_size, max_len, cfg.n_kv_heads, cfg.dh)
         if kv_quant is None or kv_quant == "bf16":
             return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
@@ -180,18 +198,25 @@ class TransformerLM:
             raise ValueError(
                 f"kv_quant='mixfp4' needs head_dim % 16 == 0, got {cfg.dh}")
 
+        rows = (shape[1:-1] if pages is None
+                else (num_pages, page_len, cfg.n_kv_heads))
+
         def packed():
             # zero payload/scale bytes decode to exact zeros (scale 0)
             return qtensor.QTensor(
-                jnp.zeros((*shape[:-1], cfg.dh // 2), jnp.uint8),
-                jnp.zeros((*shape[:-1], cfg.dh // 16), jnp.uint8),
+                jnp.zeros((cfg.n_layers, *rows, cfg.dh // 2), jnp.uint8),
+                jnp.zeros((cfg.n_layers, *rows, cfg.dh // 16), jnp.uint8),
                 # per-layer scale32 so scan slices it with the layer axis;
                 # all rows share base.KV_SCALE32 (incremental row writes)
                 jnp.full((cfg.n_layers,), base.KV_SCALE32, jnp.float32),
                 method="mixfp4", layout=qtensor.BlockLayout1D(-1, 16),
-                shape=shape[1:], dtype="float32")
+                shape=(*rows, cfg.dh), dtype="float32")
 
-        return {"k": packed(), "v": packed()}
+        cache = {"k": packed(), "v": packed()}
+        if pages is not None:
+            cache["pages"] = jnp.zeros(
+                (batch_size, max_len // page_len), jnp.int32)
+        return cache
 
     def cache_specs(self):
         """Dense-cache PartitionSpecs for the dryrun serve cells: shard
@@ -208,7 +233,7 @@ class TransformerLM:
         return {"k": spec, "v": spec}
 
     def _run_layers_cached(self, params, x, ctx: Ctx, cache_k, cache_v,
-                           cache_len, positions):
+                           cache_len, positions, block_tables=None):
         cfg = self.cfg
         windows = jnp.asarray(self.layer_windows())
         lkeys = jax.random.split(ctx.key, cfg.n_layers)
@@ -218,7 +243,8 @@ class TransformerLM:
             lctx = ctx.with_key(lk)
             x, _, new_cache = self._layer_apply(
                 lp, x, lctx, w, positions=positions,
-                kv_cache=(ck, cv), cache_len=cache_len)
+                kv_cache=(ck, cv), cache_len=cache_len,
+                block_tables=block_tables)  # scan-invariant (shared by L)
             return x, new_cache
 
         x, (new_k, new_v) = jax.lax.scan(
@@ -241,7 +267,13 @@ class TransformerLM:
         """Zero slot ``i``'s cache rows so a freshly admitted request starts
         from position 0 with no stale K/V (continuous batching).  On the
         packed cache this zeroes the slot's payload/scale *bytes* (zero
-        bytes decode to exact zeros; scale32 is shared, untouched)."""
+        bytes decode to exact zeros; scale32 is shared, untouched).  On the
+        *paged* cache only the lane's block-table row is cleared (-> the
+        trash page): pool bytes are never zeroed — stale rows are unreachable
+        once unmapped, and every mapped row is either freshly written or a
+        shared immutable prefix page (serving.kvpool)."""
+        if "pages" in cache:
+            return dict(cache, pages=cache["pages"].at[i].set(0))
         return base._map_slot_arrays(lambda a: a.at[:, i].set(0), cache)
 
     def slot_state(self, cache, i: int):
@@ -255,7 +287,7 @@ class TransformerLM:
             lambda a, s: a.at[:, i].set(s), cache, state)
 
     def prefill_slot(self, params, tokens, ctx: Ctx, cache, slot,
-                     true_len=None):
+                     true_len=None, start_pos=None):
         """Batched single-slot prefill: run the whole prompt in ONE call.
 
         tokens (1, P) int32; ``slot`` selects the cache batch row.  The
@@ -275,6 +307,14 @@ class TransformerLM:
         rows hold junk but are masked by the per-slot length at decode and
         overwritten row-by-row before ever becoming valid — so the result
         is bitwise the exact-length call's.
+
+        On a *paged* cache (``"pages"`` in the cache dict) the pool slabs
+        have no batch axis: the slot's view is its block-table ROW, prompt
+        rows scatter straight into the request's own pages, and
+        ``start_pos`` (dynamic int32, default 0) starts the prefill past a
+        prefix already served from cached pages (serving.kvpool) —
+        ``tokens`` then holds only the prompt *suffix* and positions /
+        causality shift by ``start_pos``.
         """
         cfg = self.cfg
         p_len = tokens.shape[1]
@@ -284,13 +324,23 @@ class TransformerLM:
             # unchunked block for awkward prompt lengths (P is a static
             # shape — each prompt length compiles its own prefill anyway)
             model = TransformerLM(cfg.replace(attn_chunk=p_len))
-        small = base.slot_take(cache, slot)
+        paged = isinstance(cache, dict) and "pages" in cache
+        start = jnp.int32(0) if start_pos is None \
+            else jnp.asarray(start_pos, jnp.int32)
         x = params["embed"][tokens].astype(jnp.bfloat16)
         if cfg.emb_scale:
             x = x * math.sqrt(cfg.d_model)
-        positions = jnp.arange(p_len)[None, :]
-        x, nk, nv = model._run_layers_cached(
-            params, x, ctx, small["k"], small["v"], jnp.int32(0), positions)
+        positions = start + jnp.arange(p_len)[None, :]
+        if paged:
+            btrow = jax.lax.dynamic_slice_in_dim(
+                cache["pages"], slot, 1, axis=0)       # (1, max_pages)
+            x, nk, nv = model._run_layers_cached(
+                params, x, ctx, cache["k"], cache["v"], start, positions,
+                block_tables=btrow)
+        else:
+            small = base.slot_take(cache, slot)
+            x, nk, nv = model._run_layers_cached(
+                params, x, ctx, small["k"], small["v"], start, positions)
         if true_len is None:
             x_last = x[:, -1]
         else:
@@ -299,6 +349,8 @@ class TransformerLM:
                 keepdims=False)
         logits = base.lm_logits(x_last, params["embed"], cfg.softcap_final,
                                 vocab=cfg.vocab)
+        if paged:  # pool writes landed in this request's pages directly
+            return logits, {"k": nk, "v": nv, "pages": cache["pages"]}
         return logits, base.slot_put(cache, {"k": nk, "v": nv}, slot)
 
     def decode_step(self, params, tokens, ctx: Ctx, cache, cache_len):
@@ -313,8 +365,12 @@ class TransformerLM:
         if cfg.emb_scale:
             x = x * math.sqrt(cfg.d_model)
         positions = base.decode_positions(cache_len, x.shape[0])
+        paged = isinstance(cache, dict) and "pages" in cache
         x, nk, nv = self._run_layers_cached(
-            params, x, ctx, cache["k"], cache["v"], cache_len, positions)
+            params, x, ctx, cache["k"], cache["v"], cache_len, positions,
+            block_tables=cache["pages"] if paged else None)
         logits = base.lm_logits(x[:, 0], params["embed"], cfg.softcap_final,
                                 vocab=cfg.vocab)
+        if paged:
+            return logits, {"k": nk, "v": nv, "pages": cache["pages"]}
         return logits, {"k": nk, "v": nv}

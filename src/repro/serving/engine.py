@@ -71,8 +71,27 @@ from repro.checkpoint.manager import CheckpointManager
 from repro.core import qtensor
 from repro.distributed import sharding as dist_sharding
 from repro.models.base import ArchConfig, Ctx, build_model, pack_projections
+from repro.serving.kvpool import KVPool
 
 _TRANSFORMER_FAMILIES = ("dense", "moe", "vlm")
+
+
+def _prepad_group(act_quant: str) -> str:
+    """Tuner path whose tile grid the engine pre-pads packed weights onto.
+    Both W4A4 spellings share one tuner cache entry ('w4a4'), so the fused
+    kernel and the 2-pass composition see identical storage — preserving
+    their bitwise-comparability."""
+    return "w4a4" if act_quant in ("mixfp4", "mixfp4-2pass") else "w4a16"
+
+
+def _prepad_tree(params, group: str, m: int):
+    """Pre-pad every 2-D packed projection onto the tuner grid for ``m``
+    decode rows (qtensor.prepad_for_tiles), so the per-step ``qmm``
+    dispatch stops re-padding packed bytes inside every jitted call."""
+    is_qt = lambda x: isinstance(x, qtensor.QTensor)
+    return jax.tree.map(
+        lambda l: qtensor.prepad_for_tiles(l, group, m) if is_qt(l) else l,
+        params, is_leaf=is_qt)
 
 
 def _packed_stats(tree) -> tuple[int, int]:
@@ -108,7 +127,8 @@ class ServeEngine:
                  max_len: int = 512, pack_weights: bool = True,
                  method: str = "mixfp4", kv_quant: str | None = None,
                  act_quant: str | None = None, mesh=None,
-                 prefill_buckets: str | None = "auto"):
+                 prefill_buckets: str | None = "auto",
+                 kv_pool: int | None = None, kv_page_len: int = 16):
         if cfg.family == "encdec":
             raise ValueError(
                 "ServeEngine has no source-encoding path (requests carry "
@@ -118,10 +138,28 @@ class ServeEngine:
         if kv_quant not in (None, "bf16", "mixfp4"):
             raise ValueError(f"unknown kv_quant {kv_quant!r} "
                              "(expected None, 'bf16' or 'mixfp4')")
-        if kv_quant == "mixfp4" and cfg.family not in _TRANSFORMER_FAMILIES:
+        has_kv = (cfg.family in _TRANSFORMER_FAMILIES
+                  or (cfg.family == "hybrid" and cfg.attn_period))
+        if kv_quant == "mixfp4" and not has_kv:
             raise ValueError(
-                f"kv_quant='mixfp4' packs the transformer KV cache; family "
-                f"{cfg.family!r} has no (or not only) a KV cache to pack")
+                f"kv_quant='mixfp4' packs the attention KV cache; family "
+                f"{cfg.family!r} has no KV cache to pack (transformers and "
+                "the shared-attention hybrid do)")
+        if kv_pool is not None:
+            if kv_quant != "mixfp4":
+                raise ValueError(
+                    "kv_pool= is the paged *packed* KV path; it requires "
+                    f"kv_quant='mixfp4' (got {kv_quant!r})")
+            if mesh is not None:
+                raise ValueError(
+                    "kv_pool= with mesh= is not wired yet: the paged "
+                    "attention kernel's block-table prefetch has no "
+                    "shard_map spec (the fixed-slot packed cache serves "
+                    "sharded engines)")
+            if kv_page_len % 16 or max_len % kv_page_len:
+                raise ValueError(
+                    f"kv_page_len={kv_page_len} must be a multiple of 16 "
+                    f"(the MixFP4 block) and divide max_len={max_len}")
         if act_quant not in (None, "bf16", "mixfp4", "mixfp4-2pass",
                              "mixfp4-qdq"):
             raise ValueError(
@@ -181,15 +219,44 @@ class ServeEngine:
             self.packed_bytes = self.dense_bytes = 0
         self.compression = (self.dense_bytes / self.packed_bytes
                             if self.packed_bytes else 1.0)
-        if self.kv_quant == "mixfp4":
-            self.cache = self.model.init_cache(batch_size, max_len,
-                                               kv_quant="mixfp4")
+        if pack_weights and mesh is None:
+            # pre-pad packed projections onto the decode-shape tuner grid
+            # (storage only; stats above keep the logical wire bytes)
+            self.params = _prepad_tree(
+                self.params, _prepad_group(self.act_quant), batch_size)
+        # paged KV pool (kv_pool = number of physical pages; page 0 is the
+        # pool's trash page).  Prefix caching needs suffix prefill to be
+        # bitwise-equal to full prefill, i.e. ROW-INDEPENDENT prefill:
+        # the hybrid's SSM state recurs over the whole prompt, and MoE's
+        # capacity router couples rows (cap = f(token count), so a short
+        # suffix competes for different expert capacity than the full
+        # prompt did).  Only the dense transformer family qualifies; the
+        # others ride the pool as a plain page allocator.
+        self.kv_pool_pages = kv_pool
+        self.kv_page_len = kv_page_len
+        if kv_pool is not None:
+            self.kv_pool = KVPool(
+                kv_pool, kv_page_len,
+                enable_prefix=cfg.family == "dense")
+            self.cache = self.model.init_cache(
+                batch_size, max_len, kv_quant="mixfp4",
+                pages=(kv_pool, kv_page_len))
+            self.block_tables = np.zeros(
+                (batch_size, max_len // kv_page_len), np.int32)
+            self._slot_pages: list = [None] * batch_size
+            self._copy_page = jax.jit(self._cow_copy)
         else:
-            self.cache = self.model.init_cache(batch_size, max_len)
+            self.kv_pool = None
+            if self.kv_quant == "mixfp4":
+                self.cache = self.model.init_cache(batch_size, max_len,
+                                                   kv_quant="mixfp4")
+            else:
+                self.cache = self.model.init_cache(batch_size, max_len)
         self.lengths = np.zeros((batch_size,), np.int32)
         self.slots: list[Request | None] = [None] * batch_size
         self.prefill_dispatches = 0   # jit dispatches spent on admissions
         self.admissions = 0
+        self.max_concurrent = 0       # peak active slots seen by step()
         # prompt-length bucketing (transformer families): pad prompts up a
         # pow-2/64-step ladder so admissions reuse one compiled prefill per
         # bucket instead of compiling per distinct length
@@ -204,16 +271,45 @@ class ServeEngine:
         self._prefill_lens: set = set()
         self._decode = jax.jit(
             lambda p, t, c, l: self.model.decode_step(p, t, self.ctx, c, l))
-        if self.prefill_buckets:
+        # prefix-caching prefills take the suffix start as a dynamic
+        # operand (prefix-cached admissions prefill only tokens[shared:]);
+        # plain-allocator pools (hybrid/MoE) always start at 0
+        paged_sfx = (self.kv_pool is not None
+                     and self.kv_pool.enable_prefix)
+        if self.prefill_buckets and paged_sfx:
+            self._prefill = jax.jit(
+                lambda p, t, c, i, n, s0: self.model.prefill_slot(
+                    p, t, self.ctx, c, i, true_len=n, start_pos=s0))
+        elif self.prefill_buckets:
             self._prefill = jax.jit(
                 lambda p, t, c, i, n: self.model.prefill_slot(
                     p, t, self.ctx, c, i, true_len=n))
+        elif paged_sfx:
+            self._prefill = jax.jit(
+                lambda p, t, c, i, s0: self.model.prefill_slot(
+                    p, t, self.ctx, c, i, start_pos=s0))
         else:
             # one dispatch per admission; recompiles per distinct prompt
             # length (prefill shapes)
             self._prefill = jax.jit(
                 lambda p, t, c, i: self.model.prefill_slot(
                     p, t, self.ctx, c, i))
+        self._paged_suffix = paged_sfx
+
+    # ------------------------------------------------------------------
+    # paged-pool device helpers
+    # ------------------------------------------------------------------
+    def _cow_copy(self, cache, src, dst):
+        """Copy page ``src``'s packed bytes into page ``dst`` in both K and
+        V slabs — the eager copy-on-write step of a partial prefix hit
+        (serving.kvpool).  Page axis is axis 1 of every child (behind the
+        layer/app axis)."""
+        def cp(qt):
+            return qtensor.QTensor(
+                qt.payload.at[:, dst].set(qt.payload[:, src]),
+                qt.scales.at[:, dst].set(qt.scales[:, src]),
+                qt.scale32, qt.method, qt.layout, qt.shape, qt.dtype)
+        return dict(cache, k=cp(cache["k"]), v=cp(cache["v"]))
 
     def _mesh_ctx(self):
         """Ambient-mesh context for jit traces: activates the models'
@@ -283,6 +379,9 @@ class ServeEngine:
         self.packed_bytes, self.dense_bytes = _packed_stats(restored)
         self.compression = (self.dense_bytes / self.packed_bytes
                             if self.packed_bytes else 1.0)
+        if self.mesh is None:
+            self.params = _prepad_tree(
+                self.params, _prepad_group(self.act_quant), self.batch_size)
 
     # ------------------------------------------------------------------
     def add_request(self, req: Request) -> bool:
@@ -299,16 +398,43 @@ class ServeEngine:
                 f"request {req.uid} needs {len(req.prompt)} prompt + "
                 f"{req.max_new_tokens} new tokens but the cache holds "
                 f"max_len={self.max_len}")
-        for i, slot in enumerate(self.slots):
-            if slot is None:
-                self.slots[i] = req
-                # a reused slot starts over at position 0 with zeroed cache
-                # rows — no KV / SSM state leaks from the previous occupant
-                self.lengths[i] = 0
-                self.cache = self.model.reset_slot(self.cache, i)
-                self._prefill_slot(i, req)
-                return True
-        return False
+        free = next((i for i, s in enumerate(self.slots) if s is None), None)
+        if free is None:
+            return False
+        i = free
+        if self.kv_pool is not None:
+            # admit by PAGE availability too: map cached prefix pages,
+            # allocate the rest (evicting LRU cached pages as needed).  A
+            # pool that cannot cover the request leaves it unadmitted.
+            adm = self.kv_pool.acquire(req.prompt, req.max_new_tokens)
+            if adm is None:
+                return False
+            self.slots[i] = req
+            self.lengths[i] = 0
+            self.cache = self.model.reset_slot(self.cache, i)
+            self._slot_pages[i] = adm.pages
+            row = np.zeros((self.block_tables.shape[1],), np.int32)
+            row[:len(adm.pages)] = adm.pages
+            self.block_tables[i] = row
+            self.cache = dict(self.cache,
+                              pages=jnp.asarray(self.block_tables))
+            if adm.cow is not None:
+                src, dst = adm.cow
+                self.cache = self._copy_page(self.cache, jnp.int32(src),
+                                             jnp.int32(dst))
+            self._prefill_slot(i, req, start_pos=adm.shared_len)
+            # register the prompt's pages for future prefix hits (their
+            # bytes are final now: eager COW means no shared page is ever
+            # written after this point)
+            self.kv_pool.insert(req.prompt, adm.pages)
+            return True
+        self.slots[i] = req
+        # a reused slot starts over at position 0 with zeroed cache
+        # rows — no KV / SSM state leaks from the previous occupant
+        self.lengths[i] = 0
+        self.cache = self.model.reset_slot(self.cache, i)
+        self._prefill_slot(i, req)
+        return True
 
     @staticmethod
     def bucket_len(p_len: int, max_len: int) -> int:
@@ -321,7 +447,7 @@ class ServeEngine:
             b = -(-p_len // 64) * 64
         return min(b, max_len)
 
-    def _prefill_slot(self, i: int, req: Request):
+    def _prefill_slot(self, i: int, req: Request, start_pos: int = 0):
         """Single-slot batched prefill: ONE jit dispatch runs the whole
         prompt through ``model.prefill_slot`` at (1, P) shapes, writing all
         of slot ``i``'s cache rows at once.  Other slots' batch rows are
@@ -333,13 +459,19 @@ class ServeEngine:
         ladder (suffix zeros) and the true length rides along as a dynamic
         operand, so nearby prompt lengths share one compiled prefill; the
         emitted token and the real cache rows are bitwise those of the
-        exact-length call."""
+        exact-length call.
+
+        ``start_pos > 0`` (paged transformers only) is a prefix-cache hit:
+        the first ``start_pos`` prompt tokens are already served by mapped
+        pool pages, so only the prompt *suffix* runs — the admission's
+        prefill cost shrinks by the shared prefix."""
         p_len = len(req.prompt)
-        toks = np.asarray(req.prompt, np.int32)
+        toks = np.asarray(req.prompt, np.int32)[start_pos:]
+        s_len = len(toks)  # >= 1: the pool's match stops at p_len - 1
         if self.prefill_buckets:
-            pb = self.bucket_len(p_len, self.max_len)
-            if pb > p_len:
-                toks = np.pad(toks, (0, pb - p_len))
+            pb = self.bucket_len(s_len, self.max_len - start_pos)
+            if pb > s_len:
+                toks = np.pad(toks, (0, pb - s_len))
         shape_key = len(toks)
         if shape_key in self._prefill_lens:
             self.prefill_cache_hits += 1
@@ -348,10 +480,18 @@ class ServeEngine:
             self.prefill_compiles += 1
         tokens = jnp.asarray(toks[None, :])
         with self._mesh_ctx():
-            if self.prefill_buckets:
+            if self.prefill_buckets and self._paged_suffix:
                 logits, self.cache = self._prefill(
                     self.params, tokens, self.cache, jnp.int32(i),
-                    jnp.int32(p_len))
+                    jnp.int32(s_len), jnp.int32(start_pos))
+            elif self.prefill_buckets:
+                logits, self.cache = self._prefill(
+                    self.params, tokens, self.cache, jnp.int32(i),
+                    jnp.int32(s_len))
+            elif self._paged_suffix:
+                logits, self.cache = self._prefill(
+                    self.params, tokens, self.cache, jnp.int32(i),
+                    jnp.int32(start_pos))
             else:
                 logits, self.cache = self._prefill(
                     self.params, tokens, self.cache, jnp.int32(i))
@@ -359,6 +499,28 @@ class ServeEngine:
         req._next = int(jnp.argmax(logits[0]))
         self.prefill_dispatches += 1
         self.admissions += 1
+
+    def _finish_slot(self, i: int):
+        """Free slot ``i``.  A paged engine also releases the request's
+        pages back to the pool (tree-registered pages park in the LRU,
+        still servable as prefix hits) and points the slot's block-table
+        row at the trash page — the inactive lane's decode scatters must
+        never land in pages the pool may re-grant."""
+        self.slots[i] = None
+        if self.kv_pool is not None:
+            pages = self._slot_pages[i]
+            if pages:
+                self.kv_pool.release(pages)
+            self._slot_pages[i] = None
+            self.block_tables[i] = 0
+            self.lengths[i] = 0
+            self.cache = dict(
+                self.cache, pages=self.cache["pages"].at[i].set(0))
+
+    def pool_report(self) -> dict | None:
+        """Pool occupancy / prefix-hit / eviction counters (None when the
+        engine is not paged)."""
+        return None if self.kv_pool is None else self.kv_pool.stats()
 
     def step(self) -> list[tuple[int, int]]:
         """One decode step for all active slots (each at its own cache
@@ -370,6 +532,8 @@ class ServeEngine:
         toks = np.zeros((self.batch_size,), np.int32)
         out = []
         active = []
+        n_live = sum(r is not None for r in self.slots)
+        self.max_concurrent = max(self.max_concurrent, n_live)
         for i, req in enumerate(self.slots):
             if req is None or req.done:
                 continue
@@ -383,7 +547,7 @@ class ServeEngine:
                 out.append((req.uid, req._next))
                 if len(req.generated) >= req.max_new_tokens:
                     req.done = True
-                    self.slots[i] = None
+                    self._finish_slot(i)
                     continue
             toks[i] = req.generated[-1]
             active.append(i)
@@ -403,5 +567,5 @@ class ServeEngine:
             out.append((req.uid, tok))
             if len(req.generated) >= req.max_new_tokens:
                 req.done = True
-                self.slots[i] = None
+                self._finish_slot(i)
         return out

@@ -92,3 +92,111 @@ def test_quantize_kv_rows_pinned_scale32_roundtrip():
                                       np.asarray(p_t))
         np.testing.assert_array_equal(np.asarray(s_all[:, t:t + 1]),
                                       np.asarray(s_t))
+
+
+# ---------------------------------------------------------------------------
+# Paged decode: block-table pool slabs vs the fixed-slot kernel (PR-6)
+# ---------------------------------------------------------------------------
+def _page_slabs(payload, scales, page_len, seed):
+    """Scatter a fixed (B, S, ...) packed cache into randomly-permuted pool
+    slabs (P, page_len, ...) + the block tables that map them back.  Page 0
+    stays zeroed — the pool's trash page."""
+    b, s = payload.shape[:2]
+    mp = s // page_len
+    bt = 1 + np.random.RandomState(seed).permutation(b * mp).reshape(b, mp)
+    slab_p = np.zeros((1 + b * mp, page_len) + payload.shape[2:],
+                      np.asarray(payload).dtype)
+    slab_s = np.zeros((1 + b * mp, page_len) + scales.shape[2:],
+                      np.asarray(scales).dtype)
+    for i in range(b):
+        for j in range(mp):
+            sl = slice(j * page_len, (j + 1) * page_len)
+            slab_p[bt[i, j]] = payload[i, sl]
+            slab_s[bt[i, j]] = scales[i, sl]
+    return jnp.asarray(slab_p), jnp.asarray(slab_s), jnp.asarray(bt, jnp.int32)
+
+
+PAGED_CASES = [
+    # (b, s, hkv, group, dh, window, softcap, page_len, bs)
+    (2, 64, 2, 2, 32, 0, 0.0, 16, 16),      # bs == page_len
+    (2, 64, 2, 2, 32, 0, 0.0, 32, 16),      # bs < page_len: sub-page blocks
+    (2, 64, 1, 4, 48, 7, 30.0, 16, 32),     # bs > page_len + SWA + softcap
+    (1, 32, 2, 1, 32, 0, 0.0, 16, None),    # tuner-default key block
+]
+
+
+@pytest.mark.parametrize("case", PAGED_CASES)
+def test_attn_decode_paged_bitwise_matches_fixed(case):
+    """Acceptance: the paged kernel over permuted pool slabs must be
+    BITWISE-identical to the fixed-slot kernel on the same logical rows —
+    the block-table gather happens in BlockSpec index maps, the flash body
+    is shared, and a matched key-block size means the same reduction
+    order."""
+    b, s, hkv, g, dh, window, softcap, page_len, bs = case
+    h = hkv * g
+    keys = jax.random.split(jax.random.PRNGKey(int(sum(case[:7]))), 3)
+    q = jax.random.normal(keys[0], (b, h, dh), jnp.float32)
+    _, kp, ks = _packed_kv(keys[1], b, s, hkv, dh)
+    _, vp, vs = _packed_kv(keys[2], b, s, hkv, dh)
+    lengths = jnp.asarray(
+        np.random.RandomState(s).randint(1, s + 1, (b,)), jnp.int32)
+    fixed = ops.attn_decode_packed(q, kp, ks, vp, vs, lengths,
+                                   window=window, softcap=softcap,
+                                   interpret=True, bs=bs)
+    kpp, kps, bt = _page_slabs(kp, ks, page_len, seed=s)
+    vpp, vps, bt2 = _page_slabs(vp, vs, page_len, seed=s)
+    np.testing.assert_array_equal(np.asarray(bt), np.asarray(bt2))
+    paged = ops.attn_decode_paged(q, kpp, kps, vpp, vps, bt, lengths,
+                                  window=window, softcap=softcap,
+                                  interpret=True, bs=bs)
+    np.testing.assert_array_equal(np.asarray(paged), np.asarray(fixed))
+
+
+def test_attn_decode_paged_matches_ref_gather():
+    """The paged reference (gather logical view, then the dequant oracle)
+    agrees with the paged kernel to f32 tolerance — an independent check
+    that the index maps really read the pages the table names."""
+    b, s, hkv, g, dh, page_len = 2, 48, 2, 2, 32, 16
+    h = hkv * g
+    keys = jax.random.split(jax.random.PRNGKey(9), 3)
+    q = jax.random.normal(keys[0], (b, h, dh), jnp.float32)
+    _, kp, ks = _packed_kv(keys[1], b, s, hkv, dh)
+    _, vp, vs = _packed_kv(keys[2], b, s, hkv, dh)
+    kpp, kps, bt = _page_slabs(kp, ks, page_len, seed=7)
+    vpp, vps, _ = _page_slabs(vp, vs, page_len, seed=7)
+    lengths = jnp.asarray([33, 48], jnp.int32)
+    got = ops.attn_decode_paged(q, kpp, kps, vpp, vps, bt, lengths,
+                                interpret=True, bs=16)
+    want = ref.ref_attn_decode_packed(q, kpp, kps, vpp, vps, lengths,
+                                      block_tables=bt)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-5)
+
+
+def test_attn_decode_paged_trash_page_masked():
+    """Rows in trailing trash-page table entries (page 0) must never leak
+    into the output: a table whose tail columns point at a garbage-filled
+    page 0 gives the same result as one pointing at real-but-masked
+    pages."""
+    b, s, hkv, dh, page_len = 1, 32, 2, 32, 16
+    keys = jax.random.split(jax.random.PRNGKey(11), 3)
+    q = jax.random.normal(keys[0], (b, 2 * hkv, dh), jnp.float32)
+    _, kp, ks = _packed_kv(keys[1], b, s, hkv, dh)
+    _, vp, vs = _packed_kv(keys[2], b, s, hkv, dh)
+    kpp, kps, bt = _page_slabs(kp, ks, page_len, seed=3)
+    vpp, vps, _ = _page_slabs(vp, vs, page_len, seed=3)
+    lengths = jnp.asarray([13], jnp.int32)   # only page 1 of 2 is valid
+    base_out = ops.attn_decode_paged(q, kpp, kps, vpp, vps, bt, lengths,
+                                     interpret=True, bs=16)
+    # fill the trash page with junk WIRE bytes (an unrelated quantized
+    # cache: inactive-lane scatters write real encoder output, never
+    # arbitrary bit patterns) and point the tail column at it
+    _, jp, js = _packed_kv(jax.random.PRNGKey(99), 1, page_len, hkv, dh,
+                           scale=3.0)
+    kpp = kpp.at[0].set(jp[0])
+    vpp = vpp.at[0].set(jp[0])
+    kps = kps.at[0].set(js[0])
+    vps = vps.at[0].set(js[0])
+    bt_trash = jnp.asarray(np.array([[int(bt[0, 0]), 0]]), jnp.int32)
+    out = ops.attn_decode_paged(q, kpp, kps, vpp, vps, bt_trash, lengths,
+                                interpret=True, bs=16)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(base_out))

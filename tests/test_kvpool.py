@@ -1,0 +1,164 @@
+"""Unit tests for the host-side paged-KV pool bookkeeping (serving.kvpool).
+
+Pure Python/numpy — no jax.  The device-side halves (page-slab cache
+layout, block-table scatter/gather, the paged attention kernel) are
+covered by tests/test_serving.py and tests/test_attn_kernel.py; here we
+pin the allocator contract the engine relies on: refcounts, eager COW,
+the >=1-suffix rule, LRU eviction of tree leaves, and rollback on
+allocation failure.
+"""
+import pytest
+
+from repro.serving.kvpool import Admission, KVPool
+
+
+def test_ctor_validation():
+    with pytest.raises(ValueError):
+        KVPool(1, 4)  # page 0 is the trash page; need >= 2
+    with pytest.raises(ValueError):
+        KVPool(4, 0)
+
+
+def test_pages_needed_counts_highest_written_row():
+    pool = KVPool(8, 4)
+    # rows written: prompt + max_new - 1 (the last sampled token is never
+    # written back)
+    assert pool.pages_needed(4, 1) == 1
+    assert pool.pages_needed(4, 2) == 2   # row 4 spills into page 2
+    assert pool.pages_needed(5, 4) == 2   # rows 0..7
+    assert pool.pages_needed(1, 0) == 1   # max_new clamped to >= 1
+
+
+def test_alloc_free_refcount_roundtrip():
+    pool = KVPool(6, 4, enable_prefix=False)
+    adm = pool.acquire([1, 2, 3, 4, 5], 4)  # rows 0..7 -> 2 pages
+    assert adm == Admission(pages=[1, 2], shared_len=0, cow=None)
+    assert pool.pages_active == 2 and pool.pages_free == 3
+    pool.release(adm.pages)
+    # enable_prefix=False never tree-registers, so release -> free list
+    assert pool.pages_active == 0 and pool.pages_free == 5
+    assert pool.pages_cached == 0
+    # double release trips the refcount assertion
+    with pytest.raises(AssertionError):
+        pool.release(adm.pages)
+
+
+def test_full_chunk_prefix_hit_shares_pages():
+    pool = KVPool(8, 4)
+    prompt = list(range(10))
+    a = pool.acquire(prompt, 1)
+    assert a.shared_len == 0 and a.pages == [1, 2, 3]
+    pool.insert(prompt, a.pages)
+    # same-prefix admission while A is still live: full chunks shared,
+    # refcount 2 on the shared pages
+    b = pool.acquire(prompt[:8] + [97, 98], 1)
+    assert b.pages[:2] == [1, 2] and b.shared_len == 8
+    assert b.cow is None  # tail diverges at the page boundary
+    assert pool._ref[1] == 2 and pool._ref[2] == 2
+    assert pool.prefix_hits == 2 and pool.prefix_hit_tokens == 8
+    pool.release(a.pages)
+    # shared pages still pinned by B
+    assert pool._ref[1] == 1 and pool.pages_cached == 1  # page 3 -> LRU
+    pool.release(b.pages)
+    assert pool.pages_active == 0
+
+
+def test_partial_hit_takes_eager_cow():
+    pool = KVPool(6, 4)
+    prompt = list(range(11))
+    a = pool.acquire(prompt, 1)
+    pool.insert(prompt, a.pages)   # pages 1,2 full chunks; 3 partial (8,9,10)
+    pool.release(a.pages)
+    # B shares a 9-token prefix: 2 full pages + 1 row of the partial page.
+    # The partial hit COWs page 3's bytes into the fresh page 4.
+    b = pool.acquire(prompt[:9] + [90, 91], 1)
+    assert b == Admission(pages=[1, 2, 4], shared_len=9, cow=(3, 4))
+    assert pool.cow_copies == 1
+    # source page stays parked in the LRU (readable by future admissions),
+    # the COW destination is owned by B alone
+    assert pool._ref[3] == 0 and pool._ref[4] == 1
+    pool.release(b.pages)
+    assert pool.pages_active == 0
+
+
+def test_one_suffix_token_always_prefills():
+    pool = KVPool(8, 4)
+    prompt = list(range(8))  # exactly two full chunks
+    a = pool.acquire(prompt, 1)
+    pool.insert(prompt, a.pages)
+    pool.release(a.pages)
+    # identical prompt: the match is capped at len-1 so the admission has
+    # at least one token to prefill (logits to sample from).  Chunk 1 is a
+    # full hit; chunk 2 can only match 3 of its 4 rows, so it COWs.
+    b = pool.acquire(prompt, 1)
+    assert b.shared_len < len(prompt)
+    assert b == Admission(pages=[1, 3], shared_len=7, cow=(2, 3))
+    pool.release(b.pages)
+
+
+def test_lru_evicts_leaf_first_and_misses_recompute():
+    pool = KVPool(5, 4)  # 4 usable pages
+    p1 = list(range(8))          # chain: page1 -> page2
+    a = pool.acquire(p1, 1)
+    pool.insert(p1, a.pages)
+    pool.release(a.pages)        # both parked in LRU
+    assert pool.pages_cached == 2 and pool.pages_free == 2
+    # a 4-page admission must evict; the chain leaf (page 2) goes first,
+    # the parent (page 1) only once it too is a leaf
+    b = pool.acquire([50 + i for i in range(13)], 4)
+    assert b is not None and b.shared_len == 0
+    assert pool.evictions == 2 and pool.pages_cached == 0
+    pool.release(b.pages)
+    # the evicted prefix now misses: full re-prefill
+    c = pool.acquire(p1 + [99], 1)
+    assert c.shared_len == 0
+
+
+def test_acquire_failure_rolls_back_everything():
+    pool = KVPool(5, 4)
+    prompt = list(range(8))
+    a = pool.acquire(prompt, 1)
+    pool.insert(prompt, a.pages)
+    # A still live: its 2 pages are pinned, 2 free remain.  A same-prefix
+    # request needing 2 shared + 3 fresh pages cannot be covered even by
+    # eviction (nothing evictable), and must consume NOTHING.
+    before = (set(pool._free), list(pool._ref))
+    b = pool.acquire(prompt + list(range(100, 107)), 4)
+    assert b is None and pool.alloc_failures == 1
+    assert (set(pool._free), list(pool._ref)) == before
+    pool.release(a.pages)
+
+
+def test_insert_existing_nodes_win():
+    pool = KVPool(8, 4)
+    prompt = list(range(9))
+    # two identical prompts admitted concurrently, BEFORE either insert:
+    # both get fully fresh pages (no tree yet)
+    a = pool.acquire(prompt, 1)
+    b = pool.acquire(prompt, 1)
+    assert b.shared_len == 0 and not set(a.pages) & set(b.pages)
+    pool.insert(prompt, a.pages)
+    # B registers second: its (root, chunk) is already claimed by A's page,
+    # so B's duplicates stay untracked and free on release
+    pool.insert(prompt, b.pages)
+    pool.release(b.pages)
+    assert all(pool._ref[p] == 0 and p not in pool._parent
+               for p in b.pages)
+    assert all(p in pool._free for p in b.pages)
+    pool.release(a.pages)
+    assert pool.pages_active == 0
+    # A's pages survive as servable prefix cache
+    c = pool.acquire(prompt[:8] + [55], 1)
+    assert c.shared_len == 8 and c.pages[:2] == a.pages[:2]
+    pool.release(c.pages)
+
+
+def test_stats_shape():
+    pool = KVPool(6, 16)
+    s = pool.stats()
+    assert s["pages_total"] == 5 and s["page_len"] == 16
+    for key in ("pages_free", "pages_cached", "pages_active", "occupancy",
+                "prefix_hits", "prefix_hit_tokens", "evictions",
+                "cow_copies", "alloc_failures"):
+        assert key in s
+    assert s["occupancy"] == 0.0

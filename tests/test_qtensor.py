@@ -303,3 +303,54 @@ def test_checkpoint_roundtrip_packed_tree(tmp_path):
                                   np.asarray(tree["ln"]))
     np.testing.assert_array_equal(
         np.asarray(qt.dequantize()), np.asarray(qt0.dequantize()))
+
+
+# ---------------------------------------------------------------------------
+# prepad_for_tiles: cache padded operands at pack time (PR-6 satellite)
+# ---------------------------------------------------------------------------
+def test_prepad_for_tiles_reaches_tuner_fixed_point():
+    """Off-grid (K, N) storage must be padded until the tuner's
+    (k_pad, n_pad) choice equals the storage itself — so qmm stops
+    re-padding inside every jitted call — while the logical shape and the
+    wire bytes of the logical region are untouched."""
+    from repro.kernels import tuning
+    w = _rand((40, 24), 21, 0.3)      # off-grid both dims
+    qt = quantize(w, QuantSpec("mixfp4", BlockLayout2D()))
+    pp = qtensor.prepad_for_tiles(qt, "w4a16", 8)
+    assert pp.shape == qt.shape       # logical shape preserved
+    kp, np_ = 2 * pp.payload.shape[0], pp.payload.shape[1]
+    ch = tuning.select_tiles("w4a16", 8, kp, np_)
+    assert (ch.k_pad, ch.n_pad) == (kp, np_)   # fixed point reached
+    # original bytes live unchanged in the top-left region; padding is 0
+    op, os_ = np.asarray(qt.payload), np.asarray(qt.scales)
+    np.testing.assert_array_equal(
+        np.asarray(pp.payload)[:op.shape[0], :op.shape[1]], op)
+    np.testing.assert_array_equal(
+        np.asarray(pp.scales)[:os_.shape[0], :os_.shape[1]], os_)
+    assert np.all(np.asarray(pp.payload)[op.shape[0]:] == 0)
+    # a second pass is a no-op (the engine re-prepads after load_weights)
+    assert qtensor.prepad_for_tiles(pp, "w4a16", 8) is pp
+
+
+def test_prepad_for_tiles_preserves_qmm_bitwise():
+    """qmm over the prepadded weight must be BITWISE what qmm computes
+    over the original (it pads to the same tuner grid internally)."""
+    x = _rand((8, 40), 22)
+    qt = quantize(_rand((40, 24), 23, 0.3),
+                  QuantSpec("mixfp4", BlockLayout2D()))
+    pp = qtensor.prepad_for_tiles(qt, "w4a16", 8)
+    np.testing.assert_array_equal(
+        np.asarray(qmm(x, qt, interpret=True)),
+        np.asarray(qmm(x, pp, interpret=True)))
+
+
+def test_prepad_for_tiles_passes_through_non_2d():
+    """Stacked (scan) QTensors and 1-D row layouts are not tile-padded:
+    they pass through untouched."""
+    stacked = qtensor.stack([
+        quantize(_rand((32, 16), i, 0.3), QuantSpec("mixfp4",
+                                                    BlockLayout2D()))
+        for i in range(2)])
+    assert qtensor.prepad_for_tiles(stacked, "w4a16", 4) is stacked
+    rows = qtensor.quantize_rows(_rand((4, 32), 3), interpret=True)
+    assert qtensor.prepad_for_tiles(rows, "w4a4", 4) is rows

@@ -508,7 +508,7 @@ def test_serving_bench_emits_expected_json(tmp_path):
     on_disk = json.loads(out.read_text())
     assert on_disk.keys() == results.keys()
     for key in ("config", "cache_bytes", "decode_step_us", "prefill",
-                "act_quant"):
+                "act_quant", "kv_pool"):
         assert key in on_disk, key
     assert set(on_disk["decode_step_us"]) == {"bf16", "mixfp4"}
     assert on_disk["cache_bytes"]["ratio"] <= 0.3
@@ -523,6 +523,13 @@ def test_serving_bench_emits_expected_json(tmp_path):
     assert aq["gemm_dispatches_per_projection"]["w4a16"] == 1.0
     assert aq["gemm_dispatches_per_projection"]["w4a4"] == 1.0
     assert aq["gemm_dispatches_per_projection"]["w4a4_2pass"] == 2.0
+    # the paged pool section: paged==fixed streams, real prefix hits
+    kp = on_disk["kv_pool"]
+    assert kp["paged_matches_fixed"] is True
+    assert kp["max_concurrent_requests"] >= 1
+    assert kp["prefix_hit_rate"] > 0.0
+    assert kp["cache_hit_tokens_per_s"] > 0.0
+    assert kp["pool"]["pages_active"] == 0
 
 
 # ---------------------------------------------------------------------------
@@ -778,3 +785,146 @@ def test_act_quant_2pass_accepted_and_validated(small_cfg):
     with pytest.raises(ValueError, match="prefill_buckets"):
         ServeEngine(small_cfg, params, batch_size=1, max_len=8,
                     prefill_buckets="pow3")
+
+# ---------------------------------------------------------------------------
+# Paged packed-KV pool: block-table serving, COW prefix caching (PR-6,
+# serving.kvpool + docs/serving.md)
+# ---------------------------------------------------------------------------
+def _run_streams(eng, prompts, n_new=4):
+    """Admit prompts as capacity frees up (continuous batching) and
+    collect each request's full token stream."""
+    pending = [Request(uid=i, prompt=np.asarray(p, np.int32),
+                       max_new_tokens=n_new) for i, p in enumerate(prompts)]
+    streams = {r.uid: [] for r in pending}
+    guard = 0
+    while pending or any(s is not None for s in eng.slots):
+        while pending and eng.add_request(pending[0]):
+            pending.pop(0)
+        for uid, tok in eng.step():
+            streams[uid].append(tok)
+        guard += 1
+        assert guard < 500, "engine made no progress"
+    return streams
+
+
+@pytest.mark.parametrize("family", ["dense", "moe", "hybrid"])
+def test_paged_stream_matches_fixed(family):
+    """Acceptance: the paged engine (block tables + pool + prefix caching)
+    must emit token streams IDENTICAL to the fixed-slot packed-KV engine
+    for every family with a KV cache.  The fixed-slot path is the bitwise
+    oracle: the paged kernel reads the same wire bytes through block-table
+    indirection, and suffix-only prefill after a prefix hit lands on the
+    same logits (pinned KV_SCALE32 makes pages write-order independent)."""
+    cfg, seed = _family_cfg(family)
+    params, _ = build_model(cfg).init(jax.random.PRNGKey(seed))
+    rng = np.random.RandomState(seed)
+    shared = rng.randint(0, cfg.vocab, 20).tolist()
+    prompts = [shared + rng.randint(0, cfg.vocab, 5).tolist(),
+               shared + rng.randint(0, cfg.vocab, 3).tolist(),
+               rng.randint(0, cfg.vocab, 9).tolist(),
+               shared + rng.randint(0, cfg.vocab, 7).tolist()]
+    fixed = ServeEngine(cfg, params, batch_size=2, max_len=64,
+                        kv_quant="mixfp4")
+    paged = ServeEngine(cfg, params, batch_size=2, max_len=64,
+                        kv_quant="mixfp4", kv_pool=24, kv_page_len=16)
+    sf = _run_streams(fixed, prompts)
+    sp = _run_streams(paged, prompts)
+    assert sf == sp, (family, sf, sp)
+    rep = paged.pool_report()
+    assert rep["pages_active"] == 0          # clean release of every page
+    assert paged.max_concurrent == 2
+    if family == "dense":
+        assert rep["prefix_hits"] > 0 and rep["prefix_hit_tokens"] > 0
+    else:
+        # prefix sharing needs row-independent prefill: the hybrid's SSM
+        # state recurs over the whole prompt, and MoE's capacity router
+        # couples rows (cap = f(token count)) — both pools are plain
+        # allocators, so every admission prefills in full and the stream
+        # equality above is exact
+        assert rep["prefix_hits"] == 0
+
+
+def test_paged_prefix_sharing_ragged_concurrent(small_cfg):
+    """Prefix sharing under ragged CONCURRENT admissions: requests of
+    different lengths sharing an off-page-boundary prefix are admitted
+    into both lanes at once, so shared pages are read by one lane while
+    the other decodes.  Streams must still equal the fixed-slot engine,
+    and the off-boundary tail must take the eager-COW path."""
+    params, _ = build_model(small_cfg).init(jax.random.PRNGKey(13))
+    rng = np.random.RandomState(13)
+    shared = rng.randint(0, small_cfg.vocab, 17).tolist()   # 1 page + 1 row
+    prompts = [shared + rng.randint(0, small_cfg.vocab, k).tolist()
+               for k in (6, 2, 9, 4)]
+    fixed = ServeEngine(small_cfg, params, batch_size=2, max_len=64,
+                        kv_quant="mixfp4")
+    paged = ServeEngine(small_cfg, params, batch_size=2, max_len=64,
+                        kv_quant="mixfp4", kv_pool=32, kv_page_len=16)
+    assert _run_streams(fixed, prompts) == _run_streams(paged, prompts)
+    rep = paged.pool_report()
+    assert rep["prefix_hit_tokens"] > 0
+    assert rep["cow_copies"] > 0      # 17-token prefix: partial-page hits
+    assert rep["pages_active"] == 0
+
+
+def test_paged_admission_defers_until_pages_free(small_cfg):
+    """A pool too small for two concurrent requests must DEFER the second
+    admission (add_request -> False, nothing consumed) instead of failing,
+    then admit it once the first request's pages release."""
+    params, _ = build_model(small_cfg).init(jax.random.PRNGKey(4))
+    # 3 usable pages; each request needs 2 (prompt 20 + 4 new -> 23 rows)
+    eng = ServeEngine(small_cfg, params, batch_size=2, max_len=32,
+                      kv_quant="mixfp4", kv_pool=4, kv_page_len=16)
+    rng = np.random.RandomState(4)
+    prompts = [rng.randint(0, small_cfg.vocab, 20) for _ in range(2)]
+    streams = _run_streams(eng, prompts, n_new=4)
+    assert all(len(v) == 4 for v in streams.values()), streams
+    assert eng.kv_pool.alloc_failures > 0    # second admission deferred
+    assert eng.max_concurrent == 1           # never actually concurrent
+    assert eng.pool_report()["pages_active"] == 0
+
+
+def test_paged_composes_with_w4a4_and_buckets(small_cfg):
+    """kv_pool + act_quant='mixfp4' + bucketed prefill compose: the fused
+    W4A4 stream over the paged cache still matches its 2pass oracle."""
+    params, _ = build_model(small_cfg).init(jax.random.PRNGKey(7))
+    streams = {}
+    for aq in ("mixfp4", "mixfp4-2pass"):
+        eng = ServeEngine(small_cfg, params, batch_size=1, max_len=32,
+                          kv_quant="mixfp4", act_quant=aq,
+                          kv_pool=8, kv_page_len=16,
+                          prefill_buckets="pow2-64")
+        streams[aq] = _serve_one(eng, [9, 8, 7], 5)
+    assert streams["mixfp4"] == streams["mixfp4-2pass"], streams
+
+
+def test_paged_validation(small_cfg):
+    params, _ = build_model(small_cfg).init(jax.random.PRNGKey(0))
+    with pytest.raises(ValueError, match="kv_quant"):
+        ServeEngine(small_cfg, params, batch_size=1, max_len=32, kv_pool=8)
+    with pytest.raises(ValueError, match="multiple of 16"):
+        ServeEngine(small_cfg, params, batch_size=1, max_len=32,
+                    kv_quant="mixfp4", kv_pool=8, kv_page_len=8)
+    with pytest.raises(ValueError, match="multiple of 16"):
+        ServeEngine(small_cfg, params, batch_size=1, max_len=40,
+                    kv_quant="mixfp4", kv_pool=8, kv_page_len=16)
+    ssm_cfg = ArchConfig(name="pv-ssm", family="ssm", n_layers=1,
+                         d_model=64, vocab=64, ssm_state=8, ssm_expand=2,
+                         quant=QuantConfig(method="mixfp4"))
+    ssm_params, _ = build_model(ssm_cfg).init(jax.random.PRNGKey(0))
+    with pytest.raises(ValueError, match="family"):
+        ServeEngine(ssm_cfg, ssm_params, batch_size=1, max_len=32,
+                    kv_quant="mixfp4", kv_pool=8)
+
+
+def test_engine_prepads_weights_to_tuner_grid(small_cfg):
+    """Satellite: packed projections are prepadded to the tile tuner's
+    (k_pad, n_pad) grid at engine init, so off-grid shapes stop re-padding
+    inside every jitted call.  prepad_for_tiles must be a fixed point on
+    the engine's weights, and the streams above prove bitwise safety."""
+    from repro.serving.engine import _prepad_group, _prepad_tree
+    params, _ = build_model(small_cfg).init(jax.random.PRNGKey(0))
+    eng = ServeEngine(small_cfg, params, batch_size=2, max_len=32)
+    again = _prepad_tree(eng.params, _prepad_group(eng.act_quant),
+                         eng.batch_size)
+    for a, b in zip(jax.tree.leaves(eng.params), jax.tree.leaves(again)):
+        assert a is b    # prepad is idempotent: second pass is a no-op
