@@ -40,7 +40,7 @@ import numpy as np
 from benchmarks import common
 from repro.core.qgemm import QuantConfig
 from repro.models.base import ArchConfig, build_model
-from repro.serving.engine import Request, ServeEngine
+from repro.serving.engine import Request, RequestState, ServeEngine
 
 
 def _bench_cfg(tiny: bool) -> ArchConfig:
@@ -259,6 +259,113 @@ def _paged_section(cfg, params, batch: int, max_len: int, *,
     return out
 
 
+def _robustness_section(cfg, params, batch: int, max_len: int, *,
+                        act_quant: str | None = None, n_req: int = 6,
+                        n_new: int = 4) -> dict:
+    """Request-lifecycle robustness under seeded fault injection
+    (serving.faults; asserted by the CI serving-bench-smoke leg):
+
+    * the fault-free-equivalence oracle — a chaos sweep whose surviving
+      requests must stream bitwise-identically to a fault-free run
+      (W4A16 decode is row-independent, so quarantining a poisoned slot
+      cannot move its batchmates),
+    * p50/p99 TTFT and deadline-miss rate under injected slow decode
+      steps on the injector's VIRTUAL clock — deterministic tail-latency
+      structure, not wall time,
+    * retry and degradation counters: transient-prefill backoff retries,
+      and (under ``act_quant='mixfp4'``) the fused -> 2-pass degradation
+      with its stream-preservation bit."""
+    from repro.serving import faults as flt
+
+    rng = np.random.RandomState(2)
+    prompts = [rng.randint(0, cfg.vocab, 4 + i % 3).astype(np.int32)
+               for i in range(n_req)]
+
+    def make_engine(faults=None, **kw):
+        return ServeEngine(cfg, params, batch_size=batch, max_len=max_len,
+                           faults=faults, **kw)
+
+    out: dict = {"n_requests": n_req, "n_new": n_new}
+
+    # 1. fault-free-equivalence oracle (chaos sweep over seeded schedules)
+    rep = flt.chaos_sweep(make_engine, prompts, seeds=(0, 1, 2),
+                          max_new_tokens=n_new)
+    out["fault_free_equivalent"] = rep["ok"]
+    out["chaos_schedules"] = len(rep["schedules"])
+    out["chaos_events"] = sum(s["events"] for s in rep["schedules"])
+    common.emit("serving_chaos_oracle", 0.0,
+                f"fault_free_equivalent={rep['ok']} "
+                f"schedules={out['chaos_schedules']} "
+                f"events={out['chaos_events']}")
+
+    # 2. TTFT tail + deadline-miss rate under injected slow decode steps.
+    # The engine runs on the injector's virtual clock: time advances ONLY
+    # by the injected delays, so queueing structure (n_req > batch) and
+    # the percentiles are pure functions of the seed.  The last request
+    # carries a deliberately tight per-request deadline, so at least one
+    # deadline miss is part of the oracle.
+    inj = flt.FaultInjector(0, [
+        flt.FaultRule("decode", "slow", prob=1.0, delay_ms=25.0)])
+    eng = make_engine(faults=inj, deadline_ms=1e6)
+    reqs = [Request(uid=i, prompt=p, max_new_tokens=n_new)
+            for i, p in enumerate(prompts)]
+    reqs[-1].deadline_ms = 10.0           # < one slow step: must expire
+    for r in reqs:
+        eng.submit(r)
+    guard = 0
+    while eng.has_work():
+        eng.step()
+        guard += 1
+        assert guard < 500, "slow-step drive made no progress"
+    ttfts = [r.ttft_ms() for r in reqs if r.ttft_ms() is not None]
+    missed = sum(r.state is RequestState.EXPIRED for r in reqs)
+    out["ttft_ms"] = {
+        "p50": float(np.percentile(ttfts, 50)) if ttfts else None,
+        "p99": float(np.percentile(ttfts, 99)) if ttfts else None,
+        "n": len(ttfts),
+    }
+    out["deadline_miss_rate"] = missed / n_req
+    out["injected_slow_ms"] = int(eng.counters.get("injected_slow_ms", 0))
+    common.emit("serving_ttft_under_slow", out["ttft_ms"]["p99"] or 0.0,
+                f"p50={out['ttft_ms']['p50']} "
+                f"deadline_miss_rate={out['deadline_miss_rate']:.2f} "
+                f"(virtual clock, {out['injected_slow_ms']}ms injected)")
+
+    # 3. transient-prefill retries: a transient fault on the first two
+    # admissions must clear under capped exponential backoff with every
+    # stream intact
+    inj = flt.FaultInjector(0, [
+        flt.FaultRule("prefill", "transient", at=(0, 2))])
+    eng = make_engine(faults=inj)
+    res = flt.drive(eng, prompts, max_new_tokens=n_new)
+    out["retries"] = {
+        "prefill": int(eng.counters.get("retries:prefill", 0)),
+        "all_finished": all(str(s) == "FINISHED"
+                            for s in res["states"].values()),
+    }
+
+    # 4. degradation ladder: fused W4A4 dispatch failure -> 2-pass
+    # fallback, stream bitwise-preserved (shared 'w4a4' tuner grid)
+    if act_quant == "mixfp4":
+        oracle = flt.drive(make_engine(act_quant="mixfp4"), prompts,
+                           max_new_tokens=n_new)
+        inj = flt.FaultInjector(0, [
+            flt.FaultRule("decode", "dispatch", at=(1,), times=1)])
+        eng = make_engine(faults=inj, act_quant="mixfp4")
+        got = flt.drive(eng, prompts, max_new_tokens=n_new)
+        out["degradation"] = {
+            "fused_to_2pass": int(
+                eng.counters.get("degraded_fused_to_2pass", 0)),
+            "stream_preserved": got["streams"] == oracle["streams"],
+            "act_quant_after": eng.act_quant,
+        }
+        common.emit(
+            "serving_degradation", 0.0,
+            f"fused_to_2pass={out['degradation']['fused_to_2pass']} "
+            f"stream_preserved={out['degradation']['stream_preserved']}")
+    return out
+
+
 def bench_serving(out_path: str = "BENCH_serving.json", *,
                   tiny: bool = False, act_quant: str | None = None) -> dict:
     cfg = _bench_cfg(tiny)
@@ -320,6 +427,9 @@ def bench_serving(out_path: str = "BENCH_serving.json", *,
                                                   max_len, prompt)
 
     results["kv_pool"] = _paged_section(cfg, params, batch, max_len)
+
+    results["robustness"] = _robustness_section(cfg, params, batch, max_len,
+                                                act_quant=act_quant)
 
     with open(out_path, "w") as f:
         json.dump(results, f, indent=2, sort_keys=True)

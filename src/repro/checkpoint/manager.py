@@ -30,7 +30,89 @@ import jax
 import ml_dtypes
 import numpy as np
 
-__all__ = ["CheckpointManager"]
+__all__ = ["CheckpointManager", "packed_checksums", "verify_packed_tree"]
+
+
+# ---------------------------------------------------------------------------
+# Packed-tree integrity.  The MixFP4 wire format keeps the per-block
+# micro-format bit in the SIGN of the E4M3 scale byte, so a single
+# corrupted scale byte silently flips a block between E1M2/INT4 decode —
+# integrity must be checked per *array*, not just per flattened leaf.
+# 0x80 (negative-zero E4M3) is additionally non-canonical by construction:
+# the packers never emit it (a zero-magnitude scale byte never carries the
+# type bit — the PR-4 canonicalization), so its presence in a scale plane
+# is proof of corruption even when the checksum of the corrupted bytes
+# self-consistently "verifies".
+# ---------------------------------------------------------------------------
+_NEG_ZERO_E4M3 = 0x80
+
+
+def _named_qtensors(tree):
+    """Yield ('a/b/c', QTensor) pairs for every QTensor in a nested-dict
+    parameter tree (the packed serve/checkpoint layout)."""
+    from repro.core import qtensor
+
+    def walk(node, path):
+        if isinstance(node, qtensor.QTensor):
+            yield "/".join(path) or "<root>", node
+        elif isinstance(node, dict):
+            for k in sorted(node):
+                yield from walk(node[k], path + [str(k)])
+        elif isinstance(node, (list, tuple)):
+            for j, v in enumerate(node):
+                yield from walk(v, path + [str(j)])
+    yield from walk(tree, [])
+
+
+def _sha16(arr) -> str:
+    return hashlib.sha256(
+        np.asarray(jax.device_get(arr)).tobytes()).hexdigest()[:16]
+
+
+def packed_checksums(tree) -> dict:
+    """Per-array payload/scale digests: {'path': {'payload': sha16,
+    'scales': sha16, 'scale32': sha16}} over every QTensor in ``tree``."""
+    out = {}
+    for name, qt in _named_qtensors(tree):
+        entry = {"payload": _sha16(qt.payload), "scales": _sha16(qt.scales)}
+        if qt.scale32 is not None:
+            entry["scale32"] = _sha16(qt.scale32)
+        out[name] = entry
+    return out
+
+
+def verify_packed_tree(tree, checksums: dict | None = None):
+    """Validate a restored packed tree.
+
+    * Every scale plane is scanned for the non-canonical 0x80
+      negative-zero E4M3 byte (format-bit invariant) — raises ValueError
+      naming the offending array.
+    * When per-array ``checksums`` (from a ``save_packed`` manifest) are
+      given, each array's payload/scale digests are recomputed and
+      compared — raises IOError naming the first mismatching array.
+    """
+    for name, qt in _named_qtensors(tree):
+        scales = np.asarray(jax.device_get(qt.scales))
+        if scales.dtype == np.uint8 and np.any(scales == _NEG_ZERO_E4M3):
+            raise ValueError(
+                f"corrupt scale plane in packed array {name!r}: contains "
+                f"the non-canonical 0x80 negative-zero E4M3 byte (the "
+                "MixFP4 packers never emit it — a zero-magnitude scale "
+                "byte never carries the type-in-sign format bit), so the "
+                "block would misdecode as the wrong micro-format")
+        if checksums is not None:
+            want = checksums.get(name)
+            if want is None:
+                continue        # array added after the checkpoint was cut
+            got = {"payload": _sha16(qt.payload), "scales": _sha16(qt.scales)}
+            if qt.scale32 is not None and "scale32" in want:
+                got["scale32"] = _sha16(qt.scale32)
+            for plane, digest in got.items():
+                if want.get(plane, digest) != digest:
+                    raise IOError(
+                        f"packed checksum mismatch on array {name!r} "
+                        f"({plane} plane): manifest {want[plane]} != "
+                        f"restored {digest}")
 
 # numpy can't round-trip the ML dtypes through .npy; leaves are stored as
 # flat uint8 with (shape, dtype) in the manifest.
@@ -170,6 +252,9 @@ class CheckpointManager:
         from repro.core import qtensor
         extra = dict(extra or {})
         extra["pytree_spec"] = qtensor.tree_spec(tree)
+        # per-ARRAY payload/scale digests (the flat per-leaf shas above
+        # can't name which projection went bad)
+        extra["packed_checksums"] = packed_checksums(tree)
         self.save(step, tree, extra=extra, blocking=blocking)
 
     def packed_spec(self, step: int | None = None) -> tuple[int, dict]:
@@ -190,14 +275,25 @@ class CheckpointManager:
                              "(no pytree_spec in manifest)")
         return step, spec
 
-    def restore_packed(self, step: int | None = None, **kw):
+    def restore_packed(self, step: int | None = None, *,
+                       verify_packed: bool = True, **kw):
         """Restore a packed QTensor tree from the manifest spec alone.
         ``shardings=`` (a matching tree, e.g. from
         ``distributed.sharding.packed_restore_shardings``) places each
-        payload/scales leaf straight onto its mesh shard."""
+        payload/scales leaf straight onto its mesh shard.
+
+        ``verify_packed`` (default on) re-derives each array's
+        payload/scale digests against the manifest's ``packed_checksums``
+        and scans every scale plane for the non-canonical 0x80
+        negative-zero E4M3 byte — a corruption class the digests alone
+        cannot catch when the corrupt bytes were what got checksummed."""
         from repro.core import qtensor
         step, spec = self.packed_spec(step)
         like = qtensor.tree_like(spec)
         tree, extra = self.restore(step, like, **kw)
         extra.pop("pytree_spec", None)
+        if verify_packed:
+            verify_packed_tree(tree, extra.pop("packed_checksums", None))
+        else:
+            extra.pop("packed_checksums", None)
         return tree, extra

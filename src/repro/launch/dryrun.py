@@ -34,6 +34,7 @@ from repro import configs
 from repro.configs import shapes as shp
 from repro.core.qgemm import QuantConfig
 from repro.distributed.sharding import prepend_pod, sanitize_specs
+from repro.serving.engine import engine_robustness_spec
 from repro.launch import steps as steps_lib
 from repro.launch.flops import entry_flops
 from repro.launch.hlo_analysis import parse_collectives
@@ -385,6 +386,10 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str,
             batch=shp.SHAPES[shape_name].batch,
             max_len=max(shp.SHAPES[shape_name].seq, kv_page_len),
             num_pages=kv_pool, page_len=kv_page_len),
+        # request-lifecycle configuration a production engine of this cell
+        # would run under: queue bounds, deadline defaults, and which
+        # degradation-ladder rungs are armed (serving.engine)
+        "robustness": engine_robustness_spec(kv_pool=kv_pool),
     }
     _write(rec, out_dir)
     print(f"[dryrun] OK {arch} {shape_name} {mesh_kind} "

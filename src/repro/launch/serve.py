@@ -57,7 +57,8 @@ from repro.core import qtensor
 from repro.core.qgemm import QuantConfig
 from repro.launch.mesh import make_host_mesh
 from repro.models.base import build_model, param_count
-from repro.serving.engine import Request, ServeEngine
+from repro.serving.engine import QueueFullError, Request, ServeEngine
+from repro.serving.faults import parse_faults
 
 
 def main(argv=None):
@@ -107,6 +108,30 @@ def main(argv=None):
                          "instead of compiling per distinct prompt length "
                          "(transformer families; 'auto' enables it there "
                          "and disables it for SSM/hybrid)")
+    ap.add_argument("--max-queue", type=int, default=64, metavar="N",
+                    help="bounded admission queue: submissions beyond N "
+                         "waiting requests are rejected with backpressure "
+                         "(typed reason 'queue_full') instead of growing "
+                         "an unbounded backlog")
+    ap.add_argument("--deadline-ms", type=float, default=None, metavar="MS",
+                    help="default per-request deadline: a request not "
+                         "FINISHED within MS of submission lands EXPIRED "
+                         "(typed reason 'deadline'), its slot and pool "
+                         "pages released")
+    ap.add_argument("--ttft-budget-ms", type=float, default=None,
+                    metavar="MS",
+                    help="default time-to-first-token budget: a request "
+                         "with no first token within MS lands EXPIRED "
+                         "(reason 'ttft_deadline')")
+    ap.add_argument("--inject-faults", default=None, metavar="SEED:SPEC",
+                    help="deterministic seeded fault injection at the "
+                         "engine's host/device boundaries, e.g. "
+                         "'7:decode=nan@3,pool_acquire=deny@p0.1' "
+                         "(serving.faults.parse_faults; sites prefill/"
+                         "decode/cow_copy/pool_acquire/checkpoint_read, "
+                         "kinds error/transient/nan/slow/dispatch/deny). "
+                         "The engine then runs on the injector's virtual "
+                         "clock")
     ap.add_argument("--save-weights", default=None, metavar="DIR",
                     help="write the packed QTensor weight tree as a "
                          "checkpoint and exit")
@@ -146,13 +171,23 @@ def main(argv=None):
         print(f"[serve] host mesh {dict(mesh.shape)}: sharded packed "
               f"serving (column-parallel projections, expert-sharded MoE "
               f"stacks; decode bitwise-identical to single-device)")
+    injector = (parse_faults(args.inject_faults)
+                if args.inject_faults else None)
     engine = ServeEngine(cfg, params, batch_size=args.batch,
                          max_len=args.max_len,
                          pack_weights=not args.no_pack,
                          kv_quant=args.kv_quant, act_quant=args.act_quant,
                          mesh=mesh, prefill_buckets=args.prefill_buckets,
                          kv_pool=args.kv_pool or None,
-                         kv_page_len=args.kv_page_len)
+                         kv_page_len=args.kv_page_len,
+                         max_queue=args.max_queue,
+                         deadline_ms=args.deadline_ms,
+                         ttft_budget_ms=args.ttft_budget_ms,
+                         faults=injector)
+    if injector is not None:
+        print(f"[serve] fault injection armed: seed {injector.seed}, "
+              f"{len(injector.rules)} rule(s); engine on the injector's "
+              "virtual clock")
     del params  # projections now live ONLY as packed QTensors in the engine
     if mesh is not None:
         shards = sorted({
@@ -205,13 +240,18 @@ def main(argv=None):
                             rng.randint(0, cfg.vocab, 6).astype(np.int32)]),
                        max_new_tokens=args.new_tokens)
                for i in range(args.requests)]
-    t0, n_tok, active = time.time(), 0, 0
-    while pending or active:
-        while pending and engine.add_request(pending[0]):
+    t0, n_tok = time.time(), 0
+    # requests ride the bounded admission queue: submit until backpressure,
+    # then step (step() itself pumps QUEUED requests into free slots,
+    # expires deadlines, and crosses the fault boundaries)
+    while pending or engine.has_work():
+        while pending:
+            try:
+                engine.submit(pending[0])
+            except QueueFullError:
+                break
             pending.pop(0)
-        out = engine.step()
-        n_tok += len(out)
-        active = sum(s is not None for s in engine.slots)
+        n_tok += len(engine.step())
     dt = time.time() - t0
     print(f"[serve] {args.requests} requests, {n_tok} tokens, "
           f"{n_tok/max(dt,1e-9):.1f} tok/s")
@@ -229,6 +269,21 @@ def main(argv=None):
               f"evictions, {rep['alloc_failures']} admission deferrals; "
               f"final occupancy {rep['occupancy']:.2f} "
               f"({rep['pages_cached']} cached / {rep['pages_free']} free)")
+    rob = engine.robustness_report()
+    states = rob["request_states"]
+    print(f"[serve] lifecycle: {states} "
+          f"(queue bound {rob['queue']['max_queue']}, deadline "
+          f"{args.deadline_ms or 'off'} ms, ttft budget "
+          f"{args.ttft_budget_ms or 'off'} ms)")
+    notable = {k: v for k, v in rob["counters"].items()
+               if k.split(":")[0] in ("failed", "expired", "cancelled",
+                                      "rejected") or k.startswith(
+                   ("retries", "degraded", "deferred", "injected"))}
+    if notable:
+        print(f"[serve] robustness counters: {notable}")
+    if injector is not None:
+        print(f"[serve] injector fired {len(injector.log)} event(s): "
+              f"{injector.summary()['by_kind']}")
 
 
 if __name__ == "__main__":

@@ -59,8 +59,10 @@ its PartitionSpec story is the open ROADMAP item (docs/serving.md).
 """
 from __future__ import annotations
 
+import collections
 import contextlib
 import dataclasses
+import enum
 from typing import Any
 
 import jax
@@ -71,9 +73,129 @@ from repro.checkpoint.manager import CheckpointManager
 from repro.core import qtensor
 from repro.distributed import sharding as dist_sharding
 from repro.models.base import ArchConfig, Ctx, build_model, pack_projections
+from repro.serving.faults import InjectedFault, SystemClock
 from repro.serving.kvpool import KVPool
 
 _TRANSFORMER_FAMILIES = ("dense", "moe", "vlm")
+
+
+class RequestState(str, enum.Enum):
+    """Explicit request lifecycle.  QUEUED -> PREFILLING -> RUNNING is the
+    happy path; the four terminal states are mutually exclusive and each
+    lands with a typed ``finish_reason`` in ``engine.counters``."""
+    QUEUED = "QUEUED"
+    PREFILLING = "PREFILLING"
+    RUNNING = "RUNNING"
+    FINISHED = "FINISHED"
+    FAILED = "FAILED"
+    CANCELLED = "CANCELLED"
+    EXPIRED = "EXPIRED"
+
+    def __str__(self) -> str:          # "FINISHED", not "RequestState...."
+        return self.value
+
+    @property
+    def terminal(self) -> bool:
+        return self in (RequestState.FINISHED, RequestState.FAILED,
+                        RequestState.CANCELLED, RequestState.EXPIRED)
+
+
+# Typed rejection reasons (request never entered the queue) --------------
+REJECT_EMPTY_PROMPT = "empty_prompt"
+REJECT_BAD_MAX_NEW = "bad_max_new_tokens"
+REJECT_TOO_LONG = "too_long"
+REJECT_OVER_POOL_CAPACITY = "over_pool_capacity"
+REJECT_QUEUE_FULL = "queue_full"
+
+# Typed terminal reasons -------------------------------------------------
+REASON_MAX_NEW = "max_new_tokens"          # FINISHED
+REASON_NAN_LOGITS = "nan_logits"           # FAILED: poisoned/overflowed row
+REASON_INJECTED = "injected_fault"         # FAILED: injected fatal fault
+REASON_PREFILL_ERROR = "prefill_error"     # FAILED: admission prefill raised
+REASON_COW_ERROR = "cow_error"             # FAILED: COW page copy raised
+REASON_POOL_ERROR = "pool_error"           # FAILED: page acquisition raised
+REASON_RETRIES = "retries_exhausted"       # FAILED: transient never cleared
+REASON_DEADLINE = "deadline"               # EXPIRED: total deadline passed
+REASON_TTFT = "ttft_deadline"              # EXPIRED: no first token in budget
+REASON_CANCELLED = "user_cancel"           # CANCELLED
+
+
+class RequestValidationError(ValueError):
+    """A request rejected before touching any engine state (slot, pool
+    page, prefix tree).  Subclasses ValueError so historical callers'
+    ``except ValueError`` handling keeps working."""
+
+    def __init__(self, reason: str, message: str):
+        super().__init__(message)
+        self.reason = reason
+
+
+class QueueFullError(RuntimeError):
+    """Backpressure: the bounded admission queue is full.  Callers should
+    shed load or retry later; the engine state is untouched."""
+
+    reason = REJECT_QUEUE_FULL
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: np.ndarray           # (len,) int32
+    max_new_tokens: int = 16
+    generated: list = dataclasses.field(default_factory=list)
+    done: bool = False
+    # First greedy token, produced by the admission prefill and emitted by
+    # the first step() — None until the request has been admitted.  (It
+    # used to be injected dynamically by _prefill_slot, so step() on a
+    # request that skipped prefill raised AttributeError.)
+    _next: int | None = None
+    # lifecycle ----------------------------------------------------------
+    deadline_ms: float | None = None       # total budget from submission
+    ttft_budget_ms: float | None = None    # budget to the FIRST token
+    state: RequestState = RequestState.QUEUED
+    finish_reason: str | None = None
+    error: Exception | None = dataclasses.field(default=None, repr=False)
+    submitted_at: float | None = None      # engine-clock seconds
+    first_token_at: float | None = None
+    _deferrals: int = 0                    # pool-exhaustion re-queues
+    _retry_at: float = 0.0                 # backoff gate for re-admission
+
+    def ttft_ms(self) -> float | None:
+        if self.submitted_at is None or self.first_token_at is None:
+            return None
+        return (self.first_token_at - self.submitted_at) * 1e3
+
+
+def engine_robustness_spec(*, max_queue: int = 64,
+                           deadline_ms: float | None = None,
+                           ttft_budget_ms: float | None = None,
+                           degrade_after_deferrals: int | None = None,
+                           kv_pool: int | None = None,
+                           act_quant: str | None = None) -> dict:
+    """Pure description of an engine's robustness configuration — the
+    queue bound, deadline defaults, and which rungs of the degradation
+    ladder are armed.  Used by the launch dryrun report (no engine
+    build) and mirrored live by ``ServeEngine.robustness_report``."""
+    ladder = []
+    if act_quant == "mixfp4":
+        ladder.append({"from": "fused W4A4 GEMM", "to": "2-pass W4A4",
+                       "trigger": "failed fused dispatch",
+                       "bitwise_preserving": True})
+    if kv_pool is not None:
+        ladder.append({"from": "paged attention", "to": "fixed-slot",
+                       "trigger": (f"admission deferred "
+                                   f">= {degrade_after_deferrals} times"
+                                   if degrade_after_deferrals
+                                   else "disarmed (degrade_after_deferrals"
+                                        "=None)"),
+                       "bitwise_preserving": kv_pool is not None})
+    return {
+        "queue": {"max_queue": max_queue},
+        "deadlines": {"deadline_ms": deadline_ms,
+                      "ttft_budget_ms": ttft_budget_ms},
+        "degradation_ladder": ladder,
+        "states": [s.value for s in RequestState],
+    }
 
 
 def _prepad_group(act_quant: str) -> str:
@@ -106,20 +228,6 @@ def _packed_stats(tree) -> tuple[int, int]:
     return packed, dense
 
 
-@dataclasses.dataclass
-class Request:
-    uid: int
-    prompt: np.ndarray           # (len,) int32
-    max_new_tokens: int = 16
-    generated: list = dataclasses.field(default_factory=list)
-    done: bool = False
-    # First greedy token, produced by the admission prefill and emitted by
-    # the first step() — None until the request has been admitted.  (It
-    # used to be injected dynamically by _prefill_slot, so step() on a
-    # request that skipped prefill raised AttributeError.)
-    _next: int | None = None
-
-
 class ServeEngine:
     """Greedy continuous-batching decoder for the transformer families."""
 
@@ -128,7 +236,17 @@ class ServeEngine:
                  method: str = "mixfp4", kv_quant: str | None = None,
                  act_quant: str | None = None, mesh=None,
                  prefill_buckets: str | None = "auto",
-                 kv_pool: int | None = None, kv_page_len: int = 16):
+                 kv_pool: int | None = None, kv_page_len: int = 16,
+                 max_queue: int = 64, deadline_ms: float | None = None,
+                 ttft_budget_ms: float | None = None, faults=None,
+                 clock=None, degrade_after_deferrals: int | None = None,
+                 retry_max: int = 3, retry_base_ms: float = 10.0,
+                 retry_cap_ms: float = 1000.0):
+        if max_queue < 1:
+            raise ValueError(f"max_queue={max_queue} must be >= 1")
+        if degrade_after_deferrals is not None and degrade_after_deferrals < 1:
+            raise ValueError("degrade_after_deferrals must be None "
+                             "(disarmed) or >= 1")
         if cfg.family == "encdec":
             raise ValueError(
                 "ServeEngine has no source-encoding path (requests carry "
@@ -257,6 +375,29 @@ class ServeEngine:
         self.prefill_dispatches = 0   # jit dispatches spent on admissions
         self.admissions = 0
         self.max_concurrent = 0       # peak active slots seen by step()
+        # request lifecycle: bounded admission queue, deadline defaults,
+        # seeded fault injector (None in production), retry policy.  With
+        # an injector installed the engine runs on ITS clock (a virtual
+        # clock by default), so deadlines / TTFT / backoff are pure
+        # functions of the fault schedule.
+        self.max_queue = max_queue
+        self.deadline_ms = deadline_ms
+        self.ttft_budget_ms = ttft_budget_ms
+        self.faults = faults
+        if clock is not None:
+            self.clock = clock
+        elif faults is not None:
+            self.clock = faults.clock
+        else:
+            self.clock = SystemClock()
+        self.degrade_after_deferrals = degrade_after_deferrals
+        self.retry_max = retry_max
+        self.retry_base_ms = retry_base_ms
+        self.retry_cap_ms = retry_cap_ms
+        self.queue: collections.deque[Request] = collections.deque()
+        self.requests: dict[int, Request] = {}   # uid -> every seen request
+        self.counters: collections.Counter = collections.Counter()
+        self._step_poison: set = set()
         # prompt-length bucketing (transformer families): pad prompts up a
         # pow-2/64-step ladder so admissions reuse one compiled prefill per
         # bucket instead of compiling per distinct length
@@ -269,13 +410,21 @@ class ServeEngine:
         self.prefill_compiles = 0      # distinct prefill shapes traced
         self.prefill_cache_hits = 0    # admissions that reused a shape
         self._prefill_lens: set = set()
+        self._paged_suffix = (self.kv_pool is not None
+                              and self.kv_pool.enable_prefix)
+        self._build_jits()
+
+    def _build_jits(self):
+        """(Re)build the decode/prefill jit closures for the engine's
+        CURRENT ``ctx``/``_paged_suffix``.  Called at init and again by the
+        degradation rungs (fused -> 2-pass rebinds ctx.act_quant; paged ->
+        fixed-slot drops the block-table operand)."""
         self._decode = jax.jit(
             lambda p, t, c, l: self.model.decode_step(p, t, self.ctx, c, l))
         # prefix-caching prefills take the suffix start as a dynamic
         # operand (prefix-cached admissions prefill only tokens[shared:]);
         # plain-allocator pools (hybrid/MoE) always start at 0
-        paged_sfx = (self.kv_pool is not None
-                     and self.kv_pool.enable_prefix)
+        paged_sfx = self._paged_suffix
         if self.prefill_buckets and paged_sfx:
             self._prefill = jax.jit(
                 lambda p, t, c, i, n, s0: self.model.prefill_slot(
@@ -294,7 +443,6 @@ class ServeEngine:
             self._prefill = jax.jit(
                 lambda p, t, c, i: self.model.prefill_slot(
                     p, t, self.ctx, c, i))
-        self._paged_suffix = paged_sfx
 
     # ------------------------------------------------------------------
     # paged-pool device helpers
@@ -345,7 +493,12 @@ class ServeEngine:
         are read — no replicated intermediate tree)."""
         mgr = CheckpointManager(directory)
         if self.mesh is None:
-            restored, _ = mgr.restore_packed(step)
+            # checkpoint-restore I/O is the canonical transient failure
+            # (flaky network filesystems): capped-backoff retries behind
+            # the 'checkpoint_read' fault boundary
+            restored, _ = self._with_retries(
+                "checkpoint_read", lambda: mgr.restore_packed(step),
+                retryable=(OSError,))
         else:
             step, spec = mgr.packed_spec(step)
             like = qtensor.tree_like(spec)
@@ -360,7 +513,10 @@ class ServeEngine:
                 specs = dist_sharding.serve_packed_specs(like, self.mesh)
                 shardings = dist_sharding.packed_restore_shardings(
                     like, specs, self.mesh)
-                restored, _ = mgr.restore_packed(step, shardings=shardings)
+                restored, _ = self._with_retries(
+                    "checkpoint_read",
+                    lambda: mgr.restore_packed(step, shardings=shardings),
+                    retryable=(OSError,))
             else:
                 # pre-child-shape manifest (dummy-leaf skeleton): restore
                 # replicated first, then derive the layout from the
@@ -384,57 +540,396 @@ class ServeEngine:
                 self.params, _prepad_group(self.act_quant), self.batch_size)
 
     # ------------------------------------------------------------------
-    def add_request(self, req: Request) -> bool:
+    # request lifecycle: validation, bounded queue, admission, faults
+    # ------------------------------------------------------------------
+    def _validate(self, req: Request):
+        """Reject malformed requests BEFORE any engine state is touched —
+        no slot, no pool page, no prefix-tree refcount.  (The over-pool-
+        capacity check in particular used to be discovered only inside
+        ``kv_pool.acquire``, i.e. after walking the prefix tree.)"""
         if len(req.prompt) == 0:
-            raise ValueError("empty prompt: a request must carry at least "
-                             "one prompt token")
+            self.counters[f"rejected:{REJECT_EMPTY_PROMPT}"] += 1
+            raise RequestValidationError(
+                REJECT_EMPTY_PROMPT,
+                "empty prompt: a request must carry at least one prompt "
+                "token")
         if req.max_new_tokens < 1:
-            raise ValueError("max_new_tokens must be >= 1 (the prefill "
-                             "itself produces the first token)")
+            self.counters[f"rejected:{REJECT_BAD_MAX_NEW}"] += 1
+            raise RequestValidationError(
+                REJECT_BAD_MAX_NEW,
+                "max_new_tokens must be >= 1 (the prefill itself produces "
+                "the first token)")
         # the final generated token is emitted but never fed back, so the
         # highest cache position written is prompt + max_new - 2
         if len(req.prompt) + req.max_new_tokens - 1 > self.max_len:
-            raise ValueError(
+            self.counters[f"rejected:{REJECT_TOO_LONG}"] += 1
+            raise RequestValidationError(
+                REJECT_TOO_LONG,
                 f"request {req.uid} needs {len(req.prompt)} prompt + "
                 f"{req.max_new_tokens} new tokens but the cache holds "
                 f"max_len={self.max_len}")
+        if self.kv_pool is not None:
+            need = self.kv_pool.pages_needed(len(req.prompt),
+                                             req.max_new_tokens)
+            if need > self.kv_pool.pages_total:
+                self.counters[f"rejected:{REJECT_OVER_POOL_CAPACITY}"] += 1
+                raise RequestValidationError(
+                    REJECT_OVER_POOL_CAPACITY,
+                    f"request {req.uid} needs {need} pool pages but the "
+                    f"pool holds {self.kv_pool.pages_total} (deferring it "
+                    "would livelock: no amount of draining frees enough)")
+
+    def submit(self, req: Request):
+        """Enqueue a request on the bounded admission queue (strict FIFO).
+        Raises :class:`RequestValidationError` / :class:`QueueFullError`
+        with a typed reason; on success the request is QUEUED and will be
+        admitted by a later ``step()`` as slots and pool pages free up."""
+        self._validate(req)
+        if len(self.queue) >= self.max_queue:
+            self.counters[f"rejected:{REJECT_QUEUE_FULL}"] += 1
+            raise QueueFullError(
+                f"admission queue is full ({self.max_queue} requests); "
+                "shed load or retry after a drain")
+        req.state = RequestState.QUEUED
+        req.submitted_at = self.clock()
+        self.requests[req.uid] = req
+        self.queue.append(req)
+        self.counters["submitted"] += 1
+
+    def cancel(self, uid: int) -> bool:
+        """Cancel a queued or in-flight request.  Returns True if the
+        request transitioned to CANCELLED (slot and pool pages released);
+        False if it is unknown or already terminal."""
+        req = self.requests.get(uid)
+        if req is None or req.state.terminal:
+            return False
+        if req.state is RequestState.QUEUED:
+            with contextlib.suppress(ValueError):
+                self.queue.remove(req)
+            self._mark_terminal(req, RequestState.CANCELLED,
+                                REASON_CANCELLED)
+            return True
+        i = next(i for i, s in enumerate(self.slots) if s is req)
+        self._finish_request(i, RequestState.CANCELLED, REASON_CANCELLED)
+        return True
+
+    def has_work(self) -> bool:
+        return bool(self.queue) or any(
+            s is not None and not s.done for s in self.slots)
+
+    # -- fault hooks / clock -------------------------------------------
+    def _fire(self, site: str, *, uid: int | None = None, scoped=True):
+        """Cross one injector boundary.  ``scoped`` sites victimize the
+        request passed as ``uid``; the decode site victimizes among all
+        active requests.  Returns the FaultAction (or None)."""
+        if self.faults is None:
+            return None
+        active = () if scoped else tuple(
+            r.uid for r in self.slots if r is not None and not r.done)
+        act = self.faults.fire(site, uid=uid, active_uids=active)
+        if act.delay_ms:
+            self.counters["injected_slow_ms"] += int(act.delay_ms)
+        return act
+
+    def _sleep(self, seconds: float):
+        """Backoff sleep on the engine clock: a virtual clock advances
+        deterministically, the system clock really sleeps (capped)."""
+        self.clock.sleep(seconds)
+
+    def _backoff_s(self, attempt: int) -> float:
+        """Capped exponential backoff: base * 2^(attempt-1), in seconds."""
+        return min(self.retry_base_ms * 2.0 ** max(attempt - 1, 0),
+                   self.retry_cap_ms) / 1e3
+
+    def _with_retries(self, site: str, fn, *, uid=None, retryable=()):
+        """Run ``fn`` behind the ``site`` fault boundary with capped
+        exponential backoff on transient failures (injected transients and
+        any real exception type in ``retryable``, e.g. OSError for
+        checkpoint reads).  Non-transient faults propagate immediately;
+        exhausting the budget re-raises the last failure."""
+        attempt = 0
+        while True:
+            try:
+                act = self._fire(site, uid=uid)
+                if act is not None and act.error is not None:
+                    raise act.error
+                return fn() if fn is not None else act
+            except InjectedFault as e:
+                if not e.transient:
+                    raise
+                last = e
+            except retryable as e:
+                last = e
+            attempt += 1
+            if attempt > self.retry_max:
+                self.counters[f"retries_exhausted:{site}"] += 1
+                raise last
+            self.counters[f"retries:{site}"] += 1
+            self._sleep(self._backoff_s(attempt))
+
+    # -- admission ------------------------------------------------------
+    def add_request(self, req: Request) -> bool:
+        """Direct (queue-bypassing) admission — the historical API.
+        Returns True when the request was CONSUMED (admitted, or failed
+        terminally by an injected admission fault), False when the caller
+        should retry later (no free slot / pool exhausted)."""
+        self._validate(req)
+        if req.submitted_at is None:
+            req.submitted_at = self.clock()
+        self.requests[req.uid] = req
+        res = self._try_admit(req)
+        if res == "deferred":
+            req._deferrals += 1
+            self.counters["deferred_admissions"] += 1
+        return res in ("admitted", "failed")
+
+    def _try_admit(self, req: Request) -> str:
+        """Try to place ``req`` in a free slot: 'admitted', 'no_slot',
+        'deferred' (pool exhausted — retryable), or 'failed' (a fatal
+        admission fault consumed the request; its slot and pages were
+        rolled back and it is terminally FAILED)."""
         free = next((i for i, s in enumerate(self.slots) if s is None), None)
         if free is None:
-            return False
+            return "no_slot"
         i = free
-        if self.kv_pool is not None:
-            # admit by PAGE availability too: map cached prefix pages,
-            # allocate the rest (evicting LRU cached pages as needed).  A
-            # pool that cannot cover the request leaves it unadmitted.
-            adm = self.kv_pool.acquire(req.prompt, req.max_new_tokens)
-            if adm is None:
-                return False
+        if self.kv_pool is None:
             self.slots[i] = req
+            req.state = RequestState.PREFILLING
+            # a reused slot starts over at position 0 with zeroed cache
+            # rows — no KV / SSM state leaks from the previous occupant
             self.lengths[i] = 0
             self.cache = self.model.reset_slot(self.cache, i)
-            self._slot_pages[i] = adm.pages
-            row = np.zeros((self.block_tables.shape[1],), np.int32)
-            row[:len(adm.pages)] = adm.pages
-            self.block_tables[i] = row
-            self.cache = dict(self.cache,
-                              pages=jnp.asarray(self.block_tables))
-            if adm.cow is not None:
-                src, dst = adm.cow
-                self.cache = self._copy_page(self.cache, jnp.int32(src),
-                                             jnp.int32(dst))
-            self._prefill_slot(i, req, start_pos=adm.shared_len)
-            # register the prompt's pages for future prefix hits (their
-            # bytes are final now: eager COW means no shared page is ever
-            # written after this point)
-            self.kv_pool.insert(req.prompt, adm.pages)
-            return True
+            if not self._guarded_prefill(i, req):
+                return "failed"
+            req.state = RequestState.RUNNING
+            return "admitted"
+        # paged path: admit by PAGE availability too — map cached prefix
+        # pages, allocate the rest (evicting LRU cached pages as needed).
+        # A pool that cannot cover the request defers it.
+        act = self._fire("pool_acquire", uid=req.uid)
+        if act is not None and act.error is not None:
+            if act.error.transient:
+                return "deferred"      # backs off like real exhaustion
+            self._mark_terminal(req, RequestState.FAILED, REASON_POOL_ERROR,
+                                error=act.error)
+            return "failed"
+        denied = act is not None and act.deny
+        adm = None if denied else self.kv_pool.acquire(req.prompt,
+                                                       req.max_new_tokens)
+        if denied:
+            self.counters["injected_pool_denials"] += 1
+        if adm is None:
+            return "deferred"
         self.slots[i] = req
-        # a reused slot starts over at position 0 with zeroed cache
-        # rows — no KV / SSM state leaks from the previous occupant
+        req.state = RequestState.PREFILLING
         self.lengths[i] = 0
         self.cache = self.model.reset_slot(self.cache, i)
-        self._prefill_slot(i, req)
-        return True
+        self._slot_pages[i] = adm.pages
+        row = np.zeros((self.block_tables.shape[1],), np.int32)
+        row[:len(adm.pages)] = adm.pages
+        self.block_tables[i] = row
+        self.cache = dict(self.cache,
+                          pages=jnp.asarray(self.block_tables))
+        if adm.cow is not None:
+            cow_act = self._fire("cow_copy", uid=req.uid)
+            if cow_act is not None and cow_act.error is not None:
+                # pool-page failure mid-COW: quarantine via the same
+                # rollback as any admission fault — _finish_slot releases
+                # the acquired pages (kvpool.release unwinds refcounts for
+                # pages never registered in the tree too)
+                self._finish_request(i, RequestState.FAILED,
+                                     REASON_COW_ERROR, error=cow_act.error)
+                return "failed"
+            src, dst = adm.cow
+            self.cache = self._copy_page(self.cache, jnp.int32(src),
+                                         jnp.int32(dst))
+        if not self._guarded_prefill(i, req, start_pos=adm.shared_len):
+            return "failed"
+        # register the prompt's pages for future prefix hits (their
+        # bytes are final now: eager COW means no shared page is ever
+        # written after this point)
+        self.kv_pool.insert(req.prompt, adm.pages)
+        req.state = RequestState.RUNNING
+        return "admitted"
+
+    def _guarded_prefill(self, i: int, req: Request, start_pos: int = 0):
+        """Admission prefill behind the 'prefill' fault boundary.  On a
+        fatal fault the slot is quarantined (pages released, prefix-tree
+        refcounts unwound, block-table row pointed at the trash page) and
+        the request lands FAILED with a typed reason; a REAL prefill
+        exception additionally propagates after the same rollback, so the
+        engine never holds a half-admitted slot."""
+        try:
+            self._with_retries("prefill", None, uid=req.uid)
+            self._prefill_slot(i, req, start_pos=start_pos)
+            return True
+        except InjectedFault as e:
+            reason = REASON_RETRIES if e.transient else REASON_INJECTED
+            self._finish_request(i, RequestState.FAILED, reason, error=e)
+            return False
+        except Exception as e:
+            self._finish_request(i, RequestState.FAILED,
+                                 REASON_PREFILL_ERROR, error=e)
+            raise
+
+    # -- queue pump / deadlines ----------------------------------------
+    def _pump(self):
+        """Admit from the bounded queue in strict FIFO order.  A deferred
+        head (pool exhausted) backs off exponentially; while it backs off
+        nothing behind it is admitted (FIFO fairness).  An IDLE engine
+        sleeps the clock up to the head's retry gate instead of spinning —
+        with a virtual clock this is what makes deferred admissions
+        livelock-free."""
+        while self.queue:
+            head = self.queue[0]
+            if head.state is not RequestState.QUEUED:
+                self.queue.popleft()       # cancelled/expired while queued
+                continue
+            now = self.clock()
+            if head._retry_at > now:
+                if any(s is not None for s in self.slots):
+                    return                 # let the batch drain first
+                self._sleep(head._retry_at - now)
+                continue
+            res = self._try_admit(head)
+            if res in ("admitted", "failed"):
+                self.queue.popleft()
+                continue
+            if res == "no_slot":
+                return
+            # deferred: pool exhausted past what a drain may free
+            head._deferrals += 1
+            self.counters["deferred_admissions"] += 1
+            if (self.degrade_after_deferrals is not None
+                    and head._deferrals >= self.degrade_after_deferrals
+                    and self.kv_pool is not None):
+                self._degrade_to_fixed_slot()
+                continue                   # re-admit on the fixed path
+            head._retry_at = self.clock() + self._backoff_s(head._deferrals)
+            return
+
+    def _deadline_for(self, req: Request) -> float | None:
+        return req.deadline_ms if req.deadline_ms is not None \
+            else self.deadline_ms
+
+    def _ttft_for(self, req: Request) -> float | None:
+        return req.ttft_budget_ms if req.ttft_budget_ms is not None \
+            else self.ttft_budget_ms
+
+    def _expire_deadlines(self):
+        """Expire queued and in-flight requests past their total deadline,
+        and first-token-less requests past their TTFT budget."""
+        now = self.clock()
+
+        def over(req, budget_ms):
+            return (budget_ms is not None and req.submitted_at is not None
+                    and (now - req.submitted_at) * 1e3 > budget_ms)
+
+        for req in [r for r in self.queue
+                    if r.state is RequestState.QUEUED]:
+            if over(req, self._deadline_for(req)) \
+                    or over(req, self._ttft_for(req)):
+                reason = (REASON_DEADLINE
+                          if over(req, self._deadline_for(req))
+                          else REASON_TTFT)
+                with contextlib.suppress(ValueError):
+                    self.queue.remove(req)
+                self._mark_terminal(req, RequestState.EXPIRED, reason)
+        for i, req in enumerate(self.slots):
+            if req is None or req.done:
+                continue
+            if over(req, self._deadline_for(req)):
+                self._finish_request(i, RequestState.EXPIRED,
+                                     REASON_DEADLINE)
+            elif req.first_token_at is None and over(req, self._ttft_for(req)):
+                self._finish_request(i, RequestState.EXPIRED, REASON_TTFT)
+
+    # -- graceful degradation ------------------------------------------
+    def _degrade_fused(self, err=None):
+        """Fused W4A4 dispatch failed: fall back to the explicit
+        quantize_rows -> W4A4-kernel two-dispatch composition.  The fused
+        path is bitwise-identical to it by construction (PR 5, shared
+        'w4a4' tuner group + prepadded storage), so the stream is
+        preserved exactly — only dispatch count and latency change."""
+        if self.act_quant != "mixfp4":
+            raise RuntimeError(
+                "fused-dispatch degradation requested but the engine is "
+                f"not on the fused W4A4 path (act_quant={self.act_quant!r})"
+            ) from err
+        self.act_quant = "mixfp4-2pass"
+        self.ctx = Ctx(jax.random.PRNGKey(0), self.cfg.quant, mesh=self.mesh,
+                       act_quant=self.act_quant)
+        self._prefill_lens.clear()
+        self._build_jits()
+        self.counters["degraded_fused_to_2pass"] += 1
+
+    def _degrade_to_fixed_slot(self):
+        """Pool exhaustion past the deferral budget: abandon the paged
+        pool for the fixed-slot packed KV cache.  Every in-flight request
+        is migrated by re-prefilling its full token history
+        (prompt ++ generated[:-1]) into the fresh cache — greedy decode
+        makes that replay value-preserving (bitwise for the dense family,
+        the one with prefix sharing enabled; PR 2/6 replay-bitwise
+        property), and the invariant lengths = p_len + len(generated) - 1
+        is exactly the history length."""
+        live = [(i, r) for i, r in enumerate(self.slots) if r is not None]
+        self.kv_pool = None
+        self.kv_pool_pages = None
+        self._paged_suffix = False
+        self.cache = self.model.init_cache(self.batch_size, self.max_len,
+                                           kv_quant="mixfp4")
+        self._prefill_lens.clear()
+        self._build_jits()
+        self.counters["degraded_paged_to_fixed"] += 1
+        for i, req in live:
+            history = np.asarray(req.prompt, np.int32)
+            if req.generated:
+                history = np.concatenate(
+                    [history, np.asarray(req.generated[:-1], np.int32)])
+            self.cache = self.model.reset_slot(self.cache, i)
+            shim = Request(uid=req.uid, prompt=history,
+                           max_new_tokens=req.max_new_tokens)
+            self._prefill_slot(i, shim)     # lengths[i] = len(history)
+            if not req.generated:
+                req._next = shim._next      # first token not emitted yet
+
+    def robustness_report(self) -> dict:
+        """Live robustness state: queue depth/bounds, deadline config,
+        degradation ladder position, lifecycle counters, and terminal
+        state totals.  The static shape mirrors
+        :func:`engine_robustness_spec`."""
+        spec = engine_robustness_spec(
+            max_queue=self.max_queue, deadline_ms=self.deadline_ms,
+            ttft_budget_ms=self.ttft_budget_ms,
+            degrade_after_deferrals=self.degrade_after_deferrals,
+            kv_pool=self.kv_pool_pages, act_quant=self.act_quant)
+        states = collections.Counter(
+            str(r.state) for r in self.requests.values())
+        spec["queue"]["depth"] = len(self.queue)
+        spec["counters"] = dict(self.counters)
+        spec["request_states"] = dict(states)
+        spec["act_quant"] = self.act_quant
+        spec["paged"] = self.kv_pool is not None
+        return spec
+
+    # -- terminal transitions ------------------------------------------
+    def _mark_terminal(self, req: Request, state: RequestState, reason: str,
+                       error: Exception | None = None):
+        req.state = state
+        req.finish_reason = reason
+        req.error = error
+        req.done = True
+        self.counters[f"{state.value.lower()}:{reason}"] += 1
+
+    def _finish_request(self, i: int, state: RequestState, reason: str,
+                        error: Exception | None = None):
+        """Terminal transition for the request in slot ``i`` + slot
+        quarantine/rollback: pool pages released (prefix-tree refcounts
+        unwound for registered pages, free-listed for anonymous ones) and
+        the block-table row pointed at the trash page."""
+        req = self.slots[i]
+        self._mark_terminal(req, state, reason, error=error)
+        self._finish_slot(i)
 
     @staticmethod
     def bucket_len(p_len: int, max_len: int) -> int:
@@ -528,7 +1023,19 @@ class ServeEngine:
 
         A freshly prefilled slot first emits ``_next`` — the prefill's own
         argmax IS the first generated token (it used to be fed back but
-        never emitted, shifting the stream by one) — then decodes."""
+        never emitted, shifting the stream by one) — then decodes.
+
+        Lifecycle work rides the same call: deadlines expire first, then
+        the bounded queue pumps admissions into free slots, then the
+        decode dispatch crosses the 'decode' fault boundary (injected
+        slow/transient/dispatch faults; poisoned rows).  A row whose
+        logits are non-finite — really overflowed or injector-poisoned —
+        quarantines ITS slot only: the victim lands FAILED(nan_logits)
+        with no token emitted and the survivors' streams are untouched
+        (decode is row-independent, so they stay bitwise-identical to a
+        fault-free run under W4A16)."""
+        self._expire_deadlines()
+        self._pump()
         toks = np.zeros((self.batch_size,), np.int32)
         out = []
         active = []
@@ -543,29 +1050,84 @@ class ServeEngine:
                         f"request {req.uid} occupies slot {i} but was never "
                         "prefilled (requests enter the batch via "
                         "add_request, which runs the admission prefill)")
+                req.first_token_at = self.clock()
                 req.generated.append(req._next)
                 out.append((req.uid, req._next))
                 if len(req.generated) >= req.max_new_tokens:
-                    req.done = True
-                    self._finish_slot(i)
+                    self._finish_request(i, RequestState.FINISHED,
+                                         REASON_MAX_NEW)
                     continue
             toks[i] = req.generated[-1]
             active.append(i)
         if not active:
             return out
-        with self._mesh_ctx():
-            logits, self.cache = self._decode(
-                self.params, jnp.asarray(toks), self.cache,
-                jnp.asarray(self.lengths.copy()))
-        # one vectorized argmax + host transfer per step, not one per slot
+        logits = self._guarded_decode(toks, active)
+        # one vectorized argmax + host transfer per step, not one per
+        # slot; the finiteness reduction rides the same device round-trip
         next_toks = np.asarray(jnp.argmax(logits, axis=-1))
+        nan_rows = np.asarray(jnp.any(~jnp.isfinite(logits), axis=-1))
         for i in active:
-            tok = int(next_toks[i])
             req = self.slots[i]
+            if req is None or req.done:
+                continue               # quarantined by a mid-step fault
+            if req.uid in self._step_poison or bool(nan_rows[i]):
+                self._finish_request(i, RequestState.FAILED,
+                                     REASON_NAN_LOGITS)
+                continue
+            tok = int(next_toks[i])
             req.generated.append(tok)
             self.lengths[i] += 1
             out.append((req.uid, tok))
             if len(req.generated) >= req.max_new_tokens:
-                req.done = True
-                self._finish_slot(i)
+                self._finish_request(i, RequestState.FINISHED,
+                                     REASON_MAX_NEW)
         return out
+
+    def _guarded_decode(self, toks, active):
+        """The decode dispatch behind the 'decode' fault boundary.
+        Injected 'slow' faults advance the clock (TTFT/deadline pressure),
+        'dispatch' faults trigger the fused -> 2-pass degradation (or a
+        backoff retry off the fused path), transients back off and retry,
+        and a fatal fault quarantines its victim's slot, then decodes the
+        survivors."""
+        self._step_poison = set()
+        attempt = 0
+        spins = 0
+        while True:
+            spins += 1
+            if spins > self.retry_max + self.batch_size + 8:
+                raise RuntimeError(
+                    "decode fault boundary did not converge (a schedule "
+                    "that fires fatally on every occurrence can starve "
+                    "the dispatch); refusing to spin")
+            act = self._fire("decode", scoped=False)
+            if act is not None:
+                self._step_poison |= set(act.poison_uids)
+                err = act.error
+                if err is not None:
+                    if err.kind == "dispatch" and self.act_quant == "mixfp4":
+                        self._degrade_fused(err)
+                        continue
+                    if err.kind == "dispatch" or err.transient:
+                        attempt += 1
+                        if attempt > self.retry_max:
+                            self.counters["retries_exhausted:decode"] += 1
+                            raise err
+                        self.counters["retries:decode"] += 1
+                        self._sleep(self._backoff_s(attempt))
+                        continue
+                    # fatal, request-scoped (an injected host-transfer
+                    # failure): quarantine the victim, decode the rest
+                    victim = next(
+                        (i for i in active
+                         if self.slots[i] is not None
+                         and self.slots[i].uid == err.uid), None)
+                    if victim is not None:
+                        self._finish_request(victim, RequestState.FAILED,
+                                             REASON_INJECTED, error=err)
+                    continue
+            with self._mesh_ctx():
+                logits, self.cache = self._decode(
+                    self.params, jnp.asarray(toks), self.cache,
+                    jnp.asarray(self.lengths.copy()))
+            return logits

@@ -1,0 +1,447 @@
+"""Request-lifecycle hardening + seeded fault injection (serving.faults).
+
+Covers the explicit request state machine (bounded queue, cancel,
+deadlines), the typed-rejection validation ordering (no pool/prefix-tree
+state touched by a rejected request), capped-backoff retries at the
+prefill/decode/checkpoint_read boundaries, poison-request isolation for
+all four model families (N-1 surviving streams bitwise-identical to the
+fault-free oracle under W4A16; same-schedule batch-determinism under
+W4A4), and both rungs of the degradation ladder (fused W4A4 -> 2-pass,
+paged -> fixed-slot) preserving the emitted streams.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.core.qgemm import QuantConfig
+from repro.models.base import ArchConfig, build_model
+from repro.serving import faults as flt
+from repro.serving.engine import (REASON_CANCELLED, REASON_DEADLINE,
+                                  REASON_MAX_NEW, REASON_NAN_LOGITS,
+                                  REASON_RETRIES, REASON_TTFT,
+                                  QueueFullError, Request,
+                                  RequestState, RequestValidationError,
+                                  ServeEngine)
+from repro.serving.faults import (FaultInjector, FaultRule, InjectedFault,
+                                  VirtualClock, parse_faults)
+
+
+# ---------------------------------------------------------------------------
+# injector unit tests (no engine, no jax dispatch)
+# ---------------------------------------------------------------------------
+def test_fault_rule_validation():
+    with pytest.raises(ValueError, match="fault site"):
+        FaultRule("warp_drive", "error")
+    with pytest.raises(ValueError, match="fault kind"):
+        FaultRule("decode", "bogus")
+    with pytest.raises(ValueError, match="deny"):
+        FaultRule("decode", "deny")      # deny only makes sense at the pool
+    FaultRule("pool_acquire", "deny")    # and there it is fine
+
+
+def test_injector_is_deterministic():
+    """Same seed + rules + fire sequence -> identical event logs (the
+    basis of every bitwise chaos assertion)."""
+    def run(seed):
+        inj = FaultInjector(seed, [
+            FaultRule("decode", "nan", prob=0.5),
+            FaultRule("decode", "slow", prob=0.5, delay_ms=10.0),
+            FaultRule("prefill", "error", at=(1,)),
+        ])
+        for n in range(6):
+            inj.fire("decode", active_uids=(0, 1, 2))
+            inj.fire("prefill", uid=n)
+        return [(e["site"], e["occurrence"], e["kind"], e["uid"])
+                for e in inj.log]
+    assert run(3) == run(3)
+    assert len(run(3)) > 0
+
+
+def test_injector_times_cap_and_victim_scoping():
+    inj = FaultInjector(0, [FaultRule("decode", "nan", prob=1.0, times=1)])
+    a1 = inj.fire("decode", active_uids=(7, 8))
+    a2 = inj.fire("decode", active_uids=(7, 8))
+    assert len(a1.poison_uids) == 1 and set(a1.poison_uids) <= {7, 8}
+    assert not a2.poison_uids            # times=1 spent
+    assert inj.fatal_victims() == set(a1.poison_uids)
+
+
+def test_slow_faults_advance_the_virtual_clock():
+    inj = FaultInjector(0, [FaultRule("decode", "slow", prob=1.0,
+                                      delay_ms=10.0)])
+    for _ in range(3):
+        inj.fire("decode")
+    assert inj.clock() == pytest.approx(0.030)
+
+
+def test_parse_faults_grammar():
+    inj = parse_faults("7:decode=nan@3,decode=slow:25@p0.2,"
+                       "pool_acquire=deny@p0.1,prefill=transient@0#4")
+    assert inj.seed == 7
+    by = {(r.site, r.kind): r for r in inj.rules}
+    assert by[("decode", "nan")].at == (3,)
+    assert by[("decode", "slow")].prob == 0.2
+    assert by[("decode", "slow")].delay_ms == 25.0
+    assert by[("pool_acquire", "deny")].prob == 0.1
+    assert by[("prefill", "transient")].uid == 4
+    # an omitted @when means "every occurrence"
+    assert parse_faults("0:decode=slow").rules[0].prob == 1.0
+
+
+def test_parse_faults_rejects_malformed_specs():
+    with pytest.raises(ValueError, match="fault spec"):
+        parse_faults("decode=nan")           # no seed
+    with pytest.raises(ValueError, match="fault kind"):
+        parse_faults("7:decode=bogus")
+    with pytest.raises(ValueError, match="fault site"):
+        parse_faults("7:warp=nan")
+    with pytest.raises(ValueError, match="fault rule"):
+        parse_faults("7:decode")             # no kind at all
+
+
+# ---------------------------------------------------------------------------
+# engine fixtures
+# ---------------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def dense_cfg():
+    return ArchConfig(name="faults-dense", family="dense", n_layers=2,
+                      d_model=64, n_heads=2, n_kv_heads=2, d_ff=128,
+                      vocab=64, attn_chunk=64,
+                      quant=QuantConfig(method="mixfp4"))
+
+
+@pytest.fixture(scope="module")
+def dense_params(dense_cfg):
+    params, _ = build_model(dense_cfg).init(jax.random.PRNGKey(0))
+    return params
+
+
+def _prompts(vocab, lens, seed=0):
+    rng = np.random.RandomState(seed)
+    return [rng.randint(0, vocab, n).astype(np.int32) for n in lens]
+
+
+# ---------------------------------------------------------------------------
+# state machine / bounded queue / cancel / deadlines
+# ---------------------------------------------------------------------------
+def test_state_machine_happy_path(dense_cfg, dense_params):
+    eng = ServeEngine(dense_cfg, dense_params, batch_size=2, max_len=32,
+                      clock=VirtualClock())
+    req = Request(uid=0, prompt=_prompts(64, [4])[0], max_new_tokens=2)
+    assert req.state is RequestState.QUEUED and not req.state.terminal
+    eng.submit(req)
+    assert req.submitted_at is not None
+    streams = []
+    while eng.has_work():
+        streams.extend(eng.step())
+    assert req.state is RequestState.FINISHED and req.state.terminal
+    assert req.finish_reason == REASON_MAX_NEW
+    assert len(streams) == 2
+    assert req.ttft_ms() is not None and req.ttft_ms() >= 0.0
+    assert eng.counters["submitted"] == 1
+    assert eng.counters[f"finished:{REASON_MAX_NEW}"] == 1
+    assert eng.robustness_report()["request_states"] == {"FINISHED": 1}
+
+
+def test_bounded_queue_backpressure(dense_cfg, dense_params):
+    eng = ServeEngine(dense_cfg, dense_params, batch_size=1, max_len=32,
+                      max_queue=1, clock=VirtualClock())
+    p = _prompts(64, [3, 3, 3])
+    eng.submit(Request(uid=0, prompt=p[0], max_new_tokens=1))
+    with pytest.raises(QueueFullError, match="queue is full"):
+        eng.submit(Request(uid=1, prompt=p[1], max_new_tokens=1))
+    assert eng.counters["rejected:queue_full"] == 1
+    # the rejected request never entered the engine's books
+    assert 1 not in eng.requests and len(eng.queue) == 1
+    # draining frees the queue for a later submit
+    while eng.has_work():
+        eng.step()
+    eng.submit(Request(uid=2, prompt=p[2], max_new_tokens=1))
+    while eng.has_work():
+        eng.step()
+    assert eng.requests[2].state is RequestState.FINISHED
+
+
+def test_cancel_queued_and_running(dense_cfg, dense_params):
+    eng = ServeEngine(dense_cfg, dense_params, batch_size=1, max_len=32,
+                      clock=VirtualClock())
+    p = _prompts(64, [3, 3])
+    a = Request(uid=0, prompt=p[0], max_new_tokens=8)
+    b = Request(uid=1, prompt=p[1], max_new_tokens=8)
+    eng.submit(a)
+    eng.submit(b)                       # waits behind a (batch_size=1)
+    assert eng.cancel(1)                # cancelled while QUEUED
+    assert b.state is RequestState.CANCELLED
+    assert b.finish_reason == REASON_CANCELLED
+    eng.step()                          # admits + first token for a
+    assert a.state is RequestState.RUNNING
+    assert eng.cancel(0)                # cancelled while RUNNING
+    assert a.state is RequestState.CANCELLED
+    assert eng.slots == [None]          # slot quarantined/released
+    assert not eng.cancel(0)            # already terminal
+    assert not eng.cancel(99)           # unknown uid
+    assert eng.counters[f"cancelled:{REASON_CANCELLED}"] == 2
+    assert not eng.has_work()
+
+
+def test_deadline_and_ttft_expiry(dense_cfg, dense_params):
+    clk = VirtualClock()
+    eng = ServeEngine(dense_cfg, dense_params, batch_size=2, max_len=32,
+                      clock=clk)
+    p = _prompts(64, [3, 3, 4])
+    # queued expiry: both budgets checked before any admission work
+    a = Request(uid=0, prompt=p[0], max_new_tokens=4, deadline_ms=50.0)
+    b = Request(uid=1, prompt=p[1], max_new_tokens=4, ttft_budget_ms=20.0)
+    eng.submit(a)
+    eng.submit(b)
+    clk.advance(0.1)                    # 100 ms > both budgets
+    eng.step()
+    assert a.state is RequestState.EXPIRED
+    assert a.finish_reason == REASON_DEADLINE
+    assert b.state is RequestState.EXPIRED
+    assert b.finish_reason == REASON_TTFT
+    assert eng.counters[f"expired:{REASON_DEADLINE}"] == 1
+    assert eng.counters[f"expired:{REASON_TTFT}"] == 1
+    # in-flight expiry: the slot is freed, the stream stops
+    c = Request(uid=2, prompt=p[2], max_new_tokens=16, deadline_ms=200.0)
+    eng.submit(c)
+    eng.step()                          # admitted, first token emitted
+    assert c.state is RequestState.RUNNING and len(c.generated) >= 1
+    clk.advance(0.5)
+    eng.step()
+    assert c.state is RequestState.EXPIRED
+    assert c.finish_reason == REASON_DEADLINE
+    assert eng.slots == [None, None] and not eng.has_work()
+    # a request that GOT its first token in time is not TTFT-expired
+    assert c.ttft_ms() is not None and c.ttft_ms() <= 200.0
+
+
+# ---------------------------------------------------------------------------
+# validation ordering: a rejected request touches NO engine state
+# ---------------------------------------------------------------------------
+def test_rejections_leave_pool_and_slots_untouched(dense_cfg, dense_params):
+    """Regression for the validation-ordering fix: every typed rejection
+    must fire BEFORE any pool page / prefix-tree / slot state is touched
+    (the over-pool-capacity case used to be discovered inside
+    ``kv_pool.acquire``, after walking the prefix tree)."""
+    eng = ServeEngine(dense_cfg, dense_params, batch_size=2, max_len=32,
+                      kv_quant="mixfp4", kv_pool=2, kv_page_len=16,
+                      clock=VirtualClock())
+    assert eng.kv_pool.pages_total == 1      # page 0 is the trash page
+    before = eng.pool_report()
+    cases = [
+        (Request(uid=0, prompt=np.zeros((0,), np.int32)),
+         "empty_prompt"),
+        (Request(uid=1, prompt=np.array([1], np.int32), max_new_tokens=0),
+         "bad_max_new_tokens"),
+        (Request(uid=2, prompt=np.arange(40, dtype=np.int32) % 8,
+                 max_new_tokens=4),
+         "too_long"),
+        # 15 prompt + 4 new - 1 = 18 positions = 2 pages > pages_total=1:
+        # no amount of draining can ever satisfy it -> typed rejection,
+        # not an admission-deferral livelock
+        (Request(uid=3, prompt=np.arange(15, dtype=np.int32) % 8,
+                 max_new_tokens=4),
+         "over_pool_capacity"),
+    ]
+    for req, reason in cases:
+        with pytest.raises(RequestValidationError) as ei:
+            eng.submit(req)
+        assert ei.value.reason == reason
+        assert eng.counters[f"rejected:{reason}"] == 1
+        assert eng.pool_report() == before, reason
+    assert eng.slots == [None, None]
+    assert not eng.queue and not eng.requests
+    # RequestValidationError subclasses ValueError: historical callers'
+    # except-clauses keep working
+    with pytest.raises(ValueError, match="empty prompt"):
+        eng.add_request(Request(uid=4, prompt=np.zeros((0,), np.int32)))
+
+
+# ---------------------------------------------------------------------------
+# retries: capped exponential backoff at the fault boundaries
+# ---------------------------------------------------------------------------
+def test_prefill_transient_retries_then_succeeds(dense_cfg, dense_params):
+    inj = FaultInjector(0, [FaultRule("prefill", "transient", at=(0, 1))])
+    eng = ServeEngine(dense_cfg, dense_params, batch_size=1, max_len=32,
+                      faults=inj)
+    req = Request(uid=0, prompt=_prompts(64, [4])[0], max_new_tokens=2)
+    eng.submit(req)
+    while eng.has_work():
+        eng.step()
+    assert req.state is RequestState.FINISHED
+    assert eng.counters["retries:prefill"] == 2
+    assert "retries_exhausted:prefill" not in eng.counters
+    # backoff ran on the injector's virtual clock: 10ms + 20ms
+    assert inj.clock() == pytest.approx(0.030)
+
+
+def test_prefill_retries_exhausted_fails_typed(dense_cfg, dense_params):
+    inj = FaultInjector(0, [FaultRule("prefill", "transient", prob=1.0)])
+    eng = ServeEngine(dense_cfg, dense_params, batch_size=1, max_len=32,
+                      faults=inj, retry_max=2)
+    req = Request(uid=0, prompt=_prompts(64, [4])[0], max_new_tokens=2)
+    eng.submit(req)
+    eng.step()
+    assert req.state is RequestState.FAILED
+    assert req.finish_reason == REASON_RETRIES
+    assert isinstance(req.error, InjectedFault) and req.error.transient
+    assert eng.counters["retries:prefill"] == 2
+    assert eng.counters["retries_exhausted:prefill"] == 1
+    assert eng.slots == [None] and not eng.has_work()
+
+
+def test_checkpoint_read_transient_retried(dense_cfg, dense_params,
+                                           tmp_path):
+    src = ServeEngine(dense_cfg, dense_params, batch_size=1, max_len=16)
+    src.save_weights(str(tmp_path))
+    inj = FaultInjector(0, [FaultRule("checkpoint_read", "transient",
+                                      at=(0,))])
+    eng = ServeEngine(dense_cfg, dense_params, batch_size=1, max_len=16,
+                      faults=inj)
+    eng.load_weights(str(tmp_path))
+    assert eng.counters["retries:checkpoint_read"] == 1
+    for x, y in zip(jax.tree.leaves(src.params), jax.tree.leaves(eng.params)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+# ---------------------------------------------------------------------------
+# poison isolation: every family, survivors bitwise vs the fault-free run
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("family", ["dense", "moe", "ssm", "hybrid"])
+def test_poison_isolation_per_family(family):
+    """A NaN-poisoned request quarantines ITS slot only: under W4A16
+    decode is row-independent, so the N-1 surviving streams must be
+    bitwise-identical to the fault-free oracle's for every family.  (MoE
+    rides at batch 2, below the capacity-coupling threshold.)"""
+    cfg, seed = flt._family_cfg(family)
+    params, _ = build_model(cfg).init(jax.random.PRNGKey(seed))
+    prompts = _prompts(cfg.vocab, [4, 5], seed=seed)
+
+    def mk(faults=None):
+        return ServeEngine(cfg, params, batch_size=2, max_len=32,
+                           faults=faults)
+
+    oracle = flt.drive(mk(), prompts, max_new_tokens=4)
+    inj = FaultInjector(seed, [FaultRule("decode", "nan", at=(1,))])
+    got = flt.drive(mk(faults=inj), prompts, max_new_tokens=4)
+    victims = inj.fatal_victims()
+    assert len(victims) == 1
+    (victim,) = victims
+    assert got["states"][victim] is RequestState.FAILED
+    assert got["reasons"][victim] == REASON_NAN_LOGITS
+    # the victim's stream is a strict prefix (no token from the poisoned
+    # step), every survivor's is bitwise the oracle's
+    assert got["streams"][victim] == \
+        oracle["streams"][victim][:len(got["streams"][victim])]
+    assert len(got["streams"][victim]) < len(oracle["streams"][victim])
+    for uid in got["streams"]:
+        if uid == victim:
+            continue
+        assert got["states"][uid] is RequestState.FINISHED
+        assert got["streams"][uid] == oracle["streams"][uid], family
+
+
+def test_w4a4_same_schedule_is_batch_deterministic(dense_cfg, dense_params):
+    """Under W4A4 the quantized activation bytes couple batchmates
+    (per-tensor scales), so survivors are NOT promised bitwise identity
+    with the fault-free run — the promise is determinism: replaying the
+    same seeded schedule reproduces every stream and terminal state."""
+    prompts = _prompts(64, [4, 5])
+    rules = lambda: [FaultRule("decode", "nan", at=(1,)),
+                     FaultRule("decode", "slow", prob=0.3, delay_ms=5.0)]
+
+    def run():
+        eng = ServeEngine(dense_cfg, dense_params, batch_size=2, max_len=32,
+                          act_quant="mixfp4",
+                          faults=FaultInjector(7, rules()))
+        return flt.drive(eng, prompts, max_new_tokens=4)
+
+    a, b = run(), run()
+    assert a["streams"] == b["streams"]
+    assert a["states"] == b["states"]
+    assert a["reasons"] == b["reasons"]
+    assert sum(s is RequestState.FAILED for s in a["states"].values()) == 1
+
+
+# ---------------------------------------------------------------------------
+# graceful degradation: both rungs preserve the emitted streams
+# ---------------------------------------------------------------------------
+def test_fused_dispatch_degrades_to_2pass_bitwise(dense_cfg, dense_params):
+    prompts = _prompts(64, [4, 5])
+
+    def mk(faults=None):
+        return ServeEngine(dense_cfg, dense_params, batch_size=2,
+                           max_len=32, act_quant="mixfp4", faults=faults)
+
+    oracle = flt.drive(mk(), prompts, max_new_tokens=4)
+    inj = FaultInjector(0, [FaultRule("decode", "dispatch", at=(1,),
+                                      times=1)])
+    eng = mk(faults=inj)
+    got = flt.drive(eng, prompts, max_new_tokens=4)
+    # the fused kernel is bitwise-identical to the 2-pass composition
+    # (shared tuner group + prepadded storage), so mid-stream fallback
+    # changes dispatch count only — never a token
+    assert got["streams"] == oracle["streams"]
+    assert all(s is RequestState.FINISHED for s in got["states"].values())
+    assert eng.act_quant == "mixfp4-2pass"
+    assert eng.counters["degraded_fused_to_2pass"] == 1
+
+
+def test_pool_exhaustion_degrades_to_fixed_slot(dense_cfg, dense_params):
+    """Admissions deferred past the budget abandon the paged pool: every
+    in-flight request migrates by re-prefilling its token history, which
+    greedy decode makes stream-preserving (the replay-bitwise property),
+    and the deferred request admits on the fixed-slot path."""
+    prompts = _prompts(64, [15, 15])
+
+    def fixed():
+        return ServeEngine(dense_cfg, dense_params, batch_size=2,
+                           max_len=32, kv_quant="mixfp4",
+                           clock=VirtualClock())
+
+    oracle = flt.drive(fixed(), prompts, max_new_tokens=4)
+    # 15 prompt + 4 new - 1 = 18 positions = 2 pages each; the pool holds
+    # 2 usable pages, so the second admission defers while the first runs
+    eng = ServeEngine(dense_cfg, dense_params, batch_size=2, max_len=32,
+                      kv_quant="mixfp4", kv_pool=3, kv_page_len=16,
+                      degrade_after_deferrals=1, clock=VirtualClock())
+    a = Request(uid=0, prompt=prompts[0], max_new_tokens=4)
+    b = Request(uid=1, prompt=prompts[1], max_new_tokens=4)
+    eng.submit(a)
+    streams = {0: [], 1: []}
+    for _ in range(2):                   # a generates mid-flight tokens
+        for uid, tok in eng.step():
+            streams[uid].append(tok)
+    eng.submit(b)
+    guard = 0
+    while eng.has_work():
+        for uid, tok in eng.step():
+            streams[uid].append(tok)
+        guard += 1
+        assert guard < 50
+    assert eng.counters["degraded_paged_to_fixed"] == 1
+    assert eng.kv_pool is None           # pool abandoned
+    assert streams == oracle["streams"]
+    assert a.state is RequestState.FINISHED
+    assert b.state is RequestState.FINISHED
+
+
+# ---------------------------------------------------------------------------
+# chaos harness smoke: the sweep's own invariants hold on the paged engine
+# ---------------------------------------------------------------------------
+def test_chaos_sweep_paged_dense_smoke(dense_cfg, dense_params):
+    prompts = _prompts(64, [4, 5, 6])
+
+    def mk(faults=None):
+        return ServeEngine(dense_cfg, dense_params, batch_size=2,
+                           max_len=32, kv_quant="mixfp4", kv_pool=9,
+                           kv_page_len=16, faults=faults)
+
+    report = flt.chaos_sweep(mk, prompts, seeds=(0,), max_new_tokens=3)
+    assert report["ok"]
+    (sched,) = report["schedules"]
+    assert sched["events"] >= 1 and not sched["violations"]
+    # every injected fatal fault resolved to a typed terminal counter
+    assert any(k.startswith(("failed:", "finished:"))
+               for k in sched["counters"])
