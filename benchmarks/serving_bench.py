@@ -23,7 +23,13 @@ per commit:
 * paged packed-KV pool vs fixed-slot serving under a shared-prefix
   workload: the paged==fixed token-stream oracle, peak request
   concurrency, prefix-hit rate, and cache-hit token throughput
-  (``results["kv_pool"]``; also asserted by the CI leg).
+  (``results["kv_pool"]``; also asserted by the CI leg),
+* the serving front-end under deterministic seeded Poisson open-loop
+  load, chunked-prefill scheduler on vs off: sustained req/s, p50/p99
+  TTFT and inter-token latency (virtual clock), the stall-free-decode
+  assertion (no step spends more than the chunk budget on prefill) and
+  the chunked==unchunked stream oracle (``results["frontend"]``;
+  asserted by the CI leg).
 
 Run:  PYTHONPATH=src python -m benchmarks.serving_bench [--tiny] [--out F]
       [--act-quant mixfp4]
@@ -366,6 +372,107 @@ def _robustness_section(cfg, params, batch: int, max_len: int, *,
     return out
 
 
+def _frontend_section(cfg, params, batch: int, max_len: int, *,
+                      chunk: int = 8, n_req: int = 12,
+                      rate_per_s: float = 200.0, n_new: int = 4,
+                      seed: int = 0) -> dict:
+    """Open-loop Poisson load through the serving front-end's scheduler
+    (serving.scheduler), scheduler on vs off — deterministic by
+    construction: arrivals are a seeded exponential process and the
+    engines run on a VIRTUAL clock that advances a fixed quantum per
+    step, so every latency percentile is a pure function of the seed.
+
+    The workload mixes short prompts with two near-max-length ones — the
+    classic decode-stall drivers.  Asserted by the CI serving-bench-smoke
+    and frontend-smoke legs:
+
+    * ``stall_free_decode`` — with the chunked-prefill scheduler on, NO
+      step spends more than ``chunk`` prompt tokens of prefill
+      (``engine.max_prefill_tokens_per_step``), so in-flight decodes are
+      never delayed by more than the chunk budget;
+    * ``stall_without_scheduler`` — the whole-prompt engine provably DOES
+      stall: its worst step spends the long prompt's full length;
+    * ``chunked_matches_unchunked`` — both modes emit bitwise-identical
+      per-request token streams (W4A16 decode is row-independent and
+      chunked prefill is bitwise whole-prompt prefill);
+    * sustained req/s and p50/p99 TTFT / inter-token latency per mode
+      (virtual milliseconds) from the engine's metrics histograms."""
+    from repro.serving.faults import VirtualClock
+
+    rng = np.random.RandomState(seed)
+    lens = [4 + int(rng.randint(0, 3)) for _ in range(n_req)]
+    long_len = max_len - n_new - 1
+    lens[n_req // 3] = long_len
+    lens[(2 * n_req) // 3] = long_len
+    prompts = [rng.randint(0, cfg.vocab, L).astype(np.int32) for L in lens]
+    arrivals = np.cumsum(rng.exponential(1.0 / rate_per_s, size=n_req))
+    step_s = 0.005   # virtual decode-step quantum
+
+    def drive(prefill_chunk):
+        clock = VirtualClock()
+        eng = ServeEngine(cfg, params, batch_size=batch, max_len=max_len,
+                          kv_quant="mixfp4", prefill_chunk=prefill_chunk,
+                          clock=clock)
+        reqs = [Request(uid=i, prompt=p, max_new_tokens=n_new)
+                for i, p in enumerate(prompts)]
+        nxt = 0
+        guard = 0
+        while nxt < n_req or eng.has_work():
+            while nxt < n_req and arrivals[nxt] <= clock():
+                eng.submit(reqs[nxt])
+                nxt += 1
+            eng.step()
+            clock.advance(step_s)
+            guard += 1
+            assert guard < 20000, "frontend drive made no progress"
+        streams = {r.uid: list(r.generated) for r in reqs}
+        rep = eng.metrics_report()
+        finished = sum(r.state is RequestState.FINISHED for r in reqs)
+        elapsed_s = max(clock(), 1e-9)
+        hist = rep["histograms"]
+        mode = {
+            "finished": finished,
+            "sustained_req_per_s": finished / elapsed_s,
+            "elapsed_virtual_s": elapsed_s,
+            "ttft_ms": {k: hist["ttft_ms"][k] for k in ("p50", "p99")},
+            "itl_ms": {k: hist["itl_ms"][k] for k in ("p50", "p99")},
+            "max_prefill_tokens_per_step":
+                eng.max_prefill_tokens_per_step,
+        }
+        if prefill_chunk is not None:
+            mode["scheduler"] = rep["scheduler"]
+        return streams, mode
+
+    s_on, on = drive(chunk)
+    s_off, off = drive(None)
+    out = {
+        "n_requests": n_req,
+        "n_new": n_new,
+        "long_prompt_len": long_len,
+        "prefill_chunk": chunk,
+        "rate_per_s": rate_per_s,
+        "seed": seed,
+        "scheduler_on": on,
+        "scheduler_off": off,
+        "chunked_matches_unchunked": s_on == s_off,
+        "stall_free_decode":
+            on["max_prefill_tokens_per_step"] <= chunk,
+        "stall_without_scheduler":
+            off["max_prefill_tokens_per_step"] >= long_len,
+    }
+    common.emit("serving_frontend_stall", 0.0,
+                f"max_prefill/step on={on['max_prefill_tokens_per_step']} "
+                f"off={off['max_prefill_tokens_per_step']} "
+                f"(chunk={chunk}, long={long_len}) "
+                f"chunked_matches_unchunked="
+                f"{out['chunked_matches_unchunked']}")
+    common.emit("serving_frontend_load", on["sustained_req_per_s"],
+                f"poisson rate={rate_per_s}/s "
+                f"ttft_p99={on['ttft_ms']['p99']:.1f}ms(virtual) "
+                f"itl_p99={on['itl_ms']['p99']:.1f}ms(virtual)")
+    return out
+
+
 def bench_serving(out_path: str = "BENCH_serving.json", *,
                   tiny: bool = False, act_quant: str | None = None) -> dict:
     cfg = _bench_cfg(tiny)
@@ -430,6 +537,8 @@ def bench_serving(out_path: str = "BENCH_serving.json", *,
 
     results["robustness"] = _robustness_section(cfg, params, batch, max_len,
                                                 act_quant=act_quant)
+
+    results["frontend"] = _frontend_section(cfg, params, batch, max_len)
 
     with open(out_path, "w") as f:
         json.dump(results, f, indent=2, sort_keys=True)

@@ -108,6 +108,22 @@ def main(argv=None):
                          "instead of compiling per distinct prompt length "
                          "(transformer families; 'auto' enables it there "
                          "and disables it for SSM/hybrid)")
+    ap.add_argument("--prefill-chunk", type=int, default=0, metavar="TOKENS",
+                    help="chunked-prefill scheduling (serving.scheduler): "
+                         "split each admission's prefill into TOKENS-token "
+                         "chunks interleaved with decode steps, so long "
+                         "prompts never stall the decode batch by more "
+                         "than the chunk budget (transformer families; "
+                         "bitwise-identical to whole-prompt prefill and "
+                         "ONE compiled prefill shape total; replaces "
+                         "--prefill-buckets)")
+    ap.add_argument("--http-port", type=int, default=None, metavar="PORT",
+                    help="serve over HTTP instead of running the local "
+                         "demo drive: POST /generate streams SSE token "
+                         "frames (client disconnect cancels the request), "
+                         "GET /metrics scrapes Prometheus text, "
+                         "GET /healthz is liveness (serving.server; "
+                         "port 0 binds an ephemeral port)")
     ap.add_argument("--max-queue", type=int, default=64, metavar="N",
                     help="bounded admission queue: submissions beyond N "
                          "waiting requests are rejected with backpressure "
@@ -178,6 +194,7 @@ def main(argv=None):
                          pack_weights=not args.no_pack,
                          kv_quant=args.kv_quant, act_quant=args.act_quant,
                          mesh=mesh, prefill_buckets=args.prefill_buckets,
+                         prefill_chunk=args.prefill_chunk or None,
                          kv_pool=args.kv_pool or None,
                          kv_page_len=args.kv_page_len,
                          max_queue=args.max_queue,
@@ -223,10 +240,28 @@ def main(argv=None):
               f"{engine.kv_cache_bytes() / 1024:.0f} KiB "
               f"(bf16 would be {bf16_kib:.0f} KiB), decode reads it "
               f"through the fused attention kernel")
+    if engine.prefill_chunk:
+        print(f"[serve] chunked-prefill scheduler armed: admissions "
+              f"prefill {engine.prefill_chunk} tokens/step interleaved "
+              f"with decode (ONE compiled prefill shape; bitwise vs "
+              f"whole-prompt)")
     if args.save_weights:
         engine.save_weights(args.save_weights)
         print(f"[serve] packed QTensor weights checkpointed to "
               f"{args.save_weights}")
+        return
+
+    if args.http_port is not None:
+        from repro.serving.server import ServingServer
+        with ServingServer(engine, port=args.http_port) as srv:
+            print(f"[serve] HTTP front-end on http://127.0.0.1:{srv.port} "
+                  f"— POST /generate (SSE token stream), GET /metrics "
+                  f"(Prometheus), GET /healthz; Ctrl-C to stop")
+            try:
+                while True:
+                    time.sleep(1.0)
+            except KeyboardInterrupt:
+                print("[serve] shutting down")
         return
 
     rng = np.random.RandomState(args.seed)

@@ -514,7 +514,7 @@ class MambaLM:
             lambda a, s: a.at[:, i].set(s.astype(a.dtype)), cache, state)
 
     def prefill_slot(self, params, tokens, ctx: Ctx, cache, slot,
-                     true_len=None):
+                     true_len=None, start_pos=None):
         """Batched single-slot prefill: slice the cache to the slot's batch
         row, run the whole prompt through the chunked-scan prefill in ONE
         call, and scatter the row back.  Only slot ``slot``'s recurrent
@@ -526,6 +526,13 @@ class MambaLM:
                 "prompt-length bucketing (true_len) is transformer-only: "
                 "the SSM recurrent state advances for every padded suffix "
                 "token, so a bucketed prompt would corrupt the slot state")
+        if start_pos is not None:
+            raise ValueError(
+                "chunked/suffix prefill (start_pos) is transformer-only: "
+                "resuming an SSM prompt mid-way needs the recurrent state "
+                "checkpointed at the chunk boundary, which this cache does "
+                "not carry (ROADMAP carry-over) — prefill hybrids from "
+                "position 0 in one call")
         cfg = self.cfg
         p_len = tokens.shape[1]
         # chunked scans/attention need p_len % chunk == 0 once p_len exceeds

@@ -1,1 +1,3 @@
 from repro.serving.engine import ServeEngine
+from repro.serving.metrics import MetricsRegistry, render_prometheus
+from repro.serving.scheduler import ChunkedPrefillScheduler

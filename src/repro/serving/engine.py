@@ -75,6 +75,8 @@ from repro.distributed import sharding as dist_sharding
 from repro.models.base import ArchConfig, Ctx, build_model, pack_projections
 from repro.serving.faults import InjectedFault, SystemClock
 from repro.serving.kvpool import KVPool
+from repro.serving.metrics import MetricsRegistry
+from repro.serving.scheduler import ChunkedPrefillScheduler
 
 _TRANSFORMER_FAMILIES = ("dense", "moe", "vlm")
 
@@ -157,6 +159,7 @@ class Request:
     error: Exception | None = dataclasses.field(default=None, repr=False)
     submitted_at: float | None = None      # engine-clock seconds
     first_token_at: float | None = None
+    _last_token_at: float | None = None    # ITL anchor (metrics)
     _deferrals: int = 0                    # pool-exhaustion re-queues
     _retry_at: float = 0.0                 # backoff gate for re-admission
 
@@ -236,6 +239,7 @@ class ServeEngine:
                  method: str = "mixfp4", kv_quant: str | None = None,
                  act_quant: str | None = None, mesh=None,
                  prefill_buckets: str | None = "auto",
+                 prefill_chunk: int | None = None,
                  kv_pool: int | None = None, kv_page_len: int = 16,
                  max_queue: int = 64, deadline_ms: float | None = None,
                  ttft_budget_ms: float | None = None, faults=None,
@@ -303,6 +307,27 @@ class ServeEngine:
                 "beyond the true length are masked/overwritten); the SSM "
                 f"recurrent state of family {cfg.family!r} advances for "
                 "every padded token")
+        if prefill_chunk is not None:
+            if cfg.family not in _TRANSFORMER_FAMILIES:
+                raise ValueError(
+                    "prefill_chunk= splits an admission's prefill into "
+                    "fixed-token-budget chunks interleaved with decode, "
+                    "which is only sound for the transformer families "
+                    "(KV rows quantize write-order-independently and the "
+                    "padded final chunk is masked); the SSM recurrent "
+                    f"state of family {cfg.family!r} advances per token "
+                    "and has no start_pos resume path (ROADMAP "
+                    "carry-over: needs state checkpoints at chunk "
+                    "boundaries)")
+            if prefill_chunk < 1:
+                raise ValueError(
+                    f"prefill_chunk={prefill_chunk} must be >= 1 token")
+            if prefill_buckets == "pow2-64":
+                raise ValueError(
+                    "prefill_chunk= already runs every chunk at ONE "
+                    "static shape (the chunk budget); it replaces the "
+                    "prefill_buckets ladder — drop "
+                    "prefill_buckets='pow2-64'")
         if mesh is not None and not pack_weights:
             raise ValueError(
                 "mesh serving is the sharded *packed* path (QTensor "
@@ -404,6 +429,7 @@ class ServeEngine:
         if prefill_buckets == "auto":
             prefill_buckets = ("pow2-64"
                                if cfg.family in _TRANSFORMER_FAMILIES
+                               and prefill_chunk is None
                                else None)
         self.prefill_buckets = (None if prefill_buckets in (None, "off")
                                 else prefill_buckets)
@@ -412,6 +438,17 @@ class ServeEngine:
         self._prefill_lens: set = set()
         self._paged_suffix = (self.kv_pool is not None
                               and self.kv_pool.enable_prefix)
+        # chunked-prefill scheduler (serving.scheduler): admissions enqueue
+        # a PrefillJob instead of prefilling inline, and step() spends at
+        # most prefill_chunk prompt tokens per step before decoding
+        self.prefill_chunk = prefill_chunk
+        self.scheduler = (ChunkedPrefillScheduler(prefill_chunk)
+                          if prefill_chunk is not None else None)
+        # observability (serving.metrics): the engine worker is the only
+        # writer; readers take snapshot dicts via metrics_report()
+        self.metrics = MetricsRegistry()
+        self._step_prefill_tokens = 0   # prompt tokens spent this step
+        self.max_prefill_tokens_per_step = 0
         self._build_jits()
 
     def _build_jits(self):
@@ -443,6 +480,13 @@ class ServeEngine:
             self._prefill = jax.jit(
                 lambda p, t, c, i: self.model.prefill_slot(
                     p, t, self.ctx, c, i))
+        # chunked prefill always rides true_len (the final partial chunk
+        # pads up to the budget) + start_pos (the chunk cursor) — ONE
+        # compiled prefill executable for the whole engine
+        if getattr(self, "scheduler", None) is not None:
+            self._chunk_prefill = jax.jit(
+                lambda p, t, c, i, n, s0: self.model.prefill_slot(
+                    p, t, self.ctx, c, i, true_len=n, start_pos=s0))
 
     # ------------------------------------------------------------------
     # paged-pool device helpers
@@ -699,6 +743,15 @@ class ServeEngine:
             # rows — no KV / SSM state leaks from the previous occupant
             self.lengths[i] = 0
             self.cache = self.model.reset_slot(self.cache, i)
+            if self.scheduler is not None:
+                # chunked admission: the slot is held but no prefill runs
+                # here — step() drains the job one chunk at a time.  While
+                # PREFILLING, lengths[i] tracks the chunk cursor so the
+                # batched decode's junk scatter for this lane always lands
+                # at the NEXT chunk's start row, where it is masked until
+                # overwritten by that chunk's real write.
+                self.scheduler.enqueue(req.uid, i, req, len(req.prompt))
+                return "admitted"
             if not self._guarded_prefill(i, req):
                 return "failed"
             req.state = RequestState.RUNNING
@@ -743,6 +796,15 @@ class ServeEngine:
             src, dst = adm.cow
             self.cache = self._copy_page(self.cache, jnp.int32(src),
                                          jnp.int32(dst))
+        if self.scheduler is not None:
+            # chunked admission (pages mapped, prefix COW done): prefill
+            # starts at the cached-prefix cursor; kv_pool.insert is
+            # DEFERRED to job completion — no page may be registered for
+            # prefix hits until its bytes are final.
+            self.scheduler.enqueue(req.uid, i, req, len(req.prompt),
+                                   start_pos=adm.shared_len)
+            self.lengths[i] = adm.shared_len
+            return "admitted"
         if not self._guarded_prefill(i, req, start_pos=adm.shared_len):
             return "failed"
         # register the prompt's pages for future prefix hits (their
@@ -882,6 +944,15 @@ class ServeEngine:
         self._build_jits()
         self.counters["degraded_paged_to_fixed"] += 1
         for i, req in live:
+            if (self.scheduler is not None
+                    and req.state is RequestState.PREFILLING):
+                # a mid-prefill chunk job restarts from position 0 on the
+                # fresh fixed-slot cache (its cached-prefix rows lived in
+                # the abandoned pool pages)
+                self.cache = self.model.reset_slot(self.cache, i)
+                self.lengths[i] = 0
+                self.scheduler.restart(req.uid, 0)
+                continue
             history = np.asarray(req.prompt, np.int32)
             if req.generated:
                 history = np.concatenate(
@@ -929,6 +1000,8 @@ class ServeEngine:
         the block-table row pointed at the trash page."""
         req = self.slots[i]
         self._mark_terminal(req, state, reason, error=error)
+        if self.scheduler is not None:
+            self.scheduler.drop(req.uid)   # forget any mid-prefill cursor
         self._finish_slot(i)
 
     @staticmethod
@@ -994,6 +1067,10 @@ class ServeEngine:
         req._next = int(jnp.argmax(logits[0]))
         self.prefill_dispatches += 1
         self.admissions += 1
+        # per-step prefill-token ledger: without the chunk scheduler a
+        # whole prompt lands in one step — this is exactly the decode
+        # stall the frontend benchmark quantifies
+        self._step_prefill_tokens += s_len
 
     def _finish_slot(self, i: int):
         """Free slot ``i``.  A paged engine also releases the request's
@@ -1017,6 +1094,121 @@ class ServeEngine:
         engine is not paged)."""
         return None if self.kv_pool is None else self.kv_pool.stats()
 
+    # -- chunked prefill (serving.scheduler) ---------------------------
+    def _sched_run_chunk(self):
+        """Spend this step's chunk budget on the FIFO-head prefill job:
+        ONE jit dispatch runs ``chunk`` prompt tokens from the job cursor
+        (the final partial chunk pads up to the budget and rides
+        ``true_len`` masking, so every chunk shares one compiled
+        executable).  Runs behind the 'prefill' fault boundary with the
+        same quarantine/rollback as the whole-prompt path.  On job
+        completion the request flips RUNNING with its first token staged
+        in ``_next`` — the emit loop right after this call emits it, so a
+        chunked admission's stream is positioned exactly like an
+        unchunked one's."""
+        job = self.scheduler.head()
+        if job is None:
+            return
+        req, i = job.req, job.slot
+        start = job.cursor
+        n_real = min(self.scheduler.chunk, job.p_len - start)
+        # never let start + chunk cross max_len: dynamic_update_slice
+        # CLAMPS out-of-range starts, which would silently shift rows
+        pad_to = min(self.scheduler.chunk, self.max_len - start)
+        toks = np.asarray(req.prompt, np.int32)[start:start + n_real]
+        if pad_to > n_real:
+            toks = np.pad(toks, (0, pad_to - n_real))
+        if len(toks) in self._prefill_lens:
+            self.prefill_cache_hits += 1
+        else:
+            self._prefill_lens.add(len(toks))
+            self.prefill_compiles += 1
+        try:
+            self._with_retries("prefill", None, uid=req.uid)
+        except InjectedFault as e:
+            reason = REASON_RETRIES if e.transient else REASON_INJECTED
+            self._finish_request(i, RequestState.FAILED, reason, error=e)
+            return
+        tokens = jnp.asarray(toks[None, :])
+        try:
+            with self._mesh_ctx():
+                logits, self.cache = self._chunk_prefill(
+                    self.params, tokens, self.cache, jnp.int32(i),
+                    jnp.int32(n_real), jnp.int32(start))
+        except Exception as e:
+            self._finish_request(i, RequestState.FAILED,
+                                 REASON_PREFILL_ERROR, error=e)
+            raise
+        self.prefill_dispatches += 1
+        self._step_prefill_tokens += n_real
+        if self.scheduler.advance(job, n_real):
+            self.lengths[i] = job.p_len
+            req._next = int(jnp.argmax(logits[0]))
+            if self.kv_pool is not None:
+                # pages are final now — register them for prefix hits
+                # (deferred from _try_admit; no-op for plain allocators)
+                self.kv_pool.insert(req.prompt, self._slot_pages[i])
+            req.state = RequestState.RUNNING
+            self.admissions += 1
+        else:
+            # mid-prefill: lengths tracks the cursor so this lane's junk
+            # decode scatter lands at the next chunk's start row
+            self.lengths[i] = job.cursor
+
+    def _note_step(self, decode_rows: int):
+        """End-of-step bookkeeping: the prefill-token ledger (counters +
+        scheduler step_log) and the live metrics gauges.  The ledger
+        resets HERE, not at step start: direct ``add_request`` calls
+        between steps prefill outside ``step()`` and their tokens belong
+        to the step whose decode they delayed (the next one)."""
+        spent = self._step_prefill_tokens
+        self._step_prefill_tokens = 0
+        self.max_prefill_tokens_per_step = max(
+            self.max_prefill_tokens_per_step, spent)
+        if spent:
+            self.counters["prefill_tokens"] += spent
+        self.counters["max_prefill_tokens_per_step"] = \
+            self.max_prefill_tokens_per_step
+        if self.scheduler is not None:
+            self.scheduler.note_step(spent, decode_rows)
+        m = self.metrics
+        m.set_gauge("queue_depth", len(self.queue))
+        m.set_gauge("active_slots", float(
+            sum(s is not None and not s.done for s in self.slots)))
+        if self.kv_pool is not None:
+            st = self.kv_pool.stats()
+            for key in ("pages_active", "prefix_hit_tokens"):
+                if key in st:
+                    m.set_gauge(f"kv_pool.{key}", st[key])
+
+    def metrics_report(self) -> dict:
+        """One JSON-able observability snapshot: lifecycle counters
+        (merged with the registry's), live gauges, TTFT/ITL histogram
+        percentiles, pool stats and the scheduler ledger.  This is what
+        ``GET /metrics`` renders (serving.metrics.render_prometheus) and
+        what the frontend benchmark asserts against."""
+        snap = self.metrics.snapshot()
+        counters = dict(self.counters)
+        counters.update(snap["counters"])
+        gauges = dict(snap["gauges"])
+        gauges.update({
+            "queue_depth": float(len(self.queue)),
+            "active_slots": float(
+                sum(s is not None and not s.done for s in self.slots)),
+            "max_queue": float(self.max_queue),
+            "prefill_compiles": float(self.prefill_compiles),
+            "prefill_cache_hits": float(self.prefill_cache_hits),
+            "max_prefill_tokens_per_step":
+                float(self.max_prefill_tokens_per_step),
+        })
+        report = {"counters": counters, "gauges": gauges,
+                  "histograms": snap["histograms"]}
+        if self.kv_pool is not None:
+            report["kv_pool"] = self.kv_pool.stats()
+        if self.scheduler is not None:
+            report["scheduler"] = self.scheduler.report()
+        return report
+
     def step(self) -> list[tuple[int, int]]:
         """One decode step for all active slots (each at its own cache
         position); returns (uid, token).
@@ -1036,6 +1228,8 @@ class ServeEngine:
         fault-free run under W4A16)."""
         self._expire_deadlines()
         self._pump()
+        if self.scheduler is not None:
+            self._sched_run_chunk()
         toks = np.zeros((self.batch_size,), np.int32)
         out = []
         active = []
@@ -1044,6 +1238,12 @@ class ServeEngine:
         for i, req in enumerate(self.slots):
             if req is None or req.done:
                 continue
+            if req.state is RequestState.PREFILLING:
+                # a chunked admission mid-prefill holds its slot but does
+                # not decode; the batched dispatch's scatter for this lane
+                # writes a junk row at lengths[i] (= the chunk cursor),
+                # which the NEXT chunk overwrites before it is ever read
+                continue
             if not req.generated:
                 if req._next is None:
                     raise RuntimeError(
@@ -1051,6 +1251,8 @@ class ServeEngine:
                         "prefilled (requests enter the batch via "
                         "add_request, which runs the admission prefill)")
                 req.first_token_at = self.clock()
+                req._last_token_at = req.first_token_at
+                self.metrics.observe("ttft_ms", req.ttft_ms())
                 req.generated.append(req._next)
                 out.append((req.uid, req._next))
                 if len(req.generated) >= req.max_new_tokens:
@@ -1060,12 +1262,14 @@ class ServeEngine:
             toks[i] = req.generated[-1]
             active.append(i)
         if not active:
+            self._note_step(0)
             return out
         logits = self._guarded_decode(toks, active)
         # one vectorized argmax + host transfer per step, not one per
         # slot; the finiteness reduction rides the same device round-trip
         next_toks = np.asarray(jnp.argmax(logits, axis=-1))
         nan_rows = np.asarray(jnp.any(~jnp.isfinite(logits), axis=-1))
+        now = self.clock()
         for i in active:
             req = self.slots[i]
             if req is None or req.done:
@@ -1078,9 +1282,14 @@ class ServeEngine:
             req.generated.append(tok)
             self.lengths[i] += 1
             out.append((req.uid, tok))
+            if req._last_token_at is not None:
+                self.metrics.observe("itl_ms",
+                                     (now - req._last_token_at) * 1e3)
+            req._last_token_at = now
             if len(req.generated) >= req.max_new_tokens:
                 self._finish_request(i, RequestState.FINISHED,
                                      REASON_MAX_NEW)
+        self._note_step(len(active))
         return out
 
     def _guarded_decode(self, toks, active):

@@ -1,0 +1,592 @@
+"""Asyncio HTTP front-end streaming tokens per-request over the engine.
+
+This is the transport that gives the packed-MixFP4 engine "the shape of a
+real service" (ROADMAP direction 1): clients POST a prompt and read the
+response token-by-token as SSE-style frames, cancellation follows the TCP
+connection (client hangs up => ``engine.cancel(uid)`` releases the slot and
+pool pages), and the whole observability surface — lifecycle counters,
+TTFT/ITL percentiles, pool occupancy, scheduler ledger — scrapes at
+``GET /metrics`` in Prometheus text format.
+
+Stdlib only (asyncio + sockets + json + threading): the container bakes in
+jax, nothing else — no fastapi/uvicorn/aiohttp.  The HTTP/1.1 surface is
+deliberately tiny (three routes, chunked transfer encoding) and every
+route is exercised by tests/test_server.py and the CI frontend-smoke leg.
+
+Threading model — the part worth reading twice:
+
+* ``EngineWorker`` owns a dedicated daemon thread, and that thread is the
+  ONLY one that touches the engine (jax dispatch, numpy host state, the
+  KV pool's refcounts — none of it is locked, so none of it may be
+  shared).  Other threads talk to it through a command queue
+  (``submit_async`` / ``cancel_async`` / ``call``) and receive tokens
+  through per-uid sink callables the worker invokes as it drains
+  ``engine.step()``.
+* The asyncio loop runs in the caller's thread (or a second daemon thread
+  under :class:`ServingServer`).  Sinks bridge worker -> loop via
+  ``loop.call_soon_threadsafe`` pushing frames onto per-request
+  ``asyncio.Queue``s — the handler coroutine just awaits the queue and
+  writes chunks.
+* Client disconnects surface as EOF on the connection's read side; each
+  streaming handler keeps a concurrent ``reader.read()`` watch task and
+  fires ``cancel_async(uid)`` the moment it completes early.
+
+Frame protocol (SSE-compatible, one JSON object per ``data:`` line):
+
+    data: {"type": "token", "uid": 3, "token": 17, "index": 0}
+    data: {"type": "done",  "uid": 3, "finish_reason": "max_new_tokens",
+           "state": "FINISHED", "n_tokens": 8}
+    data: {"type": "error", "uid": 3, "finish_reason": "nan_logits",
+           "state": "FAILED"}
+
+Exactly one terminal frame (``done`` | ``error``) closes every stream:
+FINISHED and CANCELLED land as ``done`` (a cancel is a client verdict,
+not a server failure), FAILED and EXPIRED as ``error`` — with the typed
+``finish_reason`` the engine counters use, so the chaos tests can assert
+"exactly one typed error frame for the poisoned request" end to end.
+"""
+from __future__ import annotations
+
+import asyncio
+import json
+import queue
+import socket
+import threading
+
+from repro.serving.engine import (QueueFullError, Request, RequestState,
+                                  RequestValidationError, ServeEngine)
+from repro.serving.metrics import render_prometheus
+
+__all__ = ["EngineWorker", "ServingServer", "stream_generate",
+           "scrape_metrics"]
+
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# engine worker thread
+# ---------------------------------------------------------------------------
+class EngineWorker:
+    """Single-threaded executor around a :class:`ServeEngine`.
+
+    All engine access funnels through one daemon thread: commands arrive on
+    a queue, tokens leave through per-uid sink callables.  A sink receives
+    ``("token", token_int)`` per generated token and exactly one terminal
+    ``("done" | "error", request)`` when the request leaves the batch; it
+    runs ON the worker thread, so sinks must be cheap and thread-safe
+    (the server's sinks just ``call_soon_threadsafe`` into the loop).
+    """
+
+    _POLL_S = 0.002   # idle poll for new commands when the batch is empty
+
+    def __init__(self, engine: ServeEngine):
+        self.engine = engine
+        self._cmds: queue.Queue = queue.Queue()
+        self._sinks: dict[int, object] = {}
+        self._emitted: dict[int, int] = {}
+        self._uid_gen = iter(range(1 << 30))
+        self._stop = threading.Event()
+        self._thread = threading.Thread(target=self._run, daemon=True,
+                                        name="mixfp4-engine-worker")
+        self.steps = 0
+
+    # -- lifecycle -----------------------------------------------------
+    def start(self) -> "EngineWorker":
+        self._thread.start()
+        return self
+
+    def stop(self, timeout: float = 10.0):
+        self._stop.set()
+        self._thread.join(timeout=timeout)
+
+    # -- cross-thread API ----------------------------------------------
+    def next_uid(self) -> int:
+        return next(self._uid_gen)
+
+    def submit_async(self, req: Request, sink) -> None:
+        """Enqueue a submit; ``sink`` receives this request's frames.
+        Submission errors (validation / backpressure) surface through the
+        sink as an ``error`` event — the caller never blocks."""
+        self._cmds.put(("submit", req, sink))
+
+    def cancel_async(self, uid: int) -> None:
+        self._cmds.put(("cancel", uid, None))
+
+    def call(self, fn, timeout: float = 30.0):
+        """Run ``fn(engine)`` on the worker thread and return its result —
+        the safe way to snapshot ``metrics_report()`` / ``pool_report()``
+        from the HTTP thread."""
+        done = threading.Event()
+        box: list = [None, None]
+
+        def wrap(engine):
+            try:
+                box[0] = fn(engine)
+            except Exception as e:        # noqa: BLE001 — relayed below
+                box[1] = e
+            done.set()
+
+        self._cmds.put(("call", wrap, None))
+        if not done.wait(timeout):
+            raise TimeoutError("engine worker did not answer in "
+                               f"{timeout}s (wedged step?)")
+        if box[1] is not None:
+            raise box[1]
+        return box[0]
+
+    # -- worker loop ----------------------------------------------------
+    def _drain_cmds(self):
+        while True:
+            try:
+                kind, a, b = self._cmds.get_nowait()
+            except queue.Empty:
+                return
+            if kind == "submit":
+                req, sink = a, b
+                try:
+                    self.engine.submit(req)
+                except (RequestValidationError, QueueFullError) as e:
+                    reason = getattr(e, "reason", "rejected")
+                    sink(("error", _terminal_info(req, reason=reason,
+                                                  state="REJECTED")))
+                    continue
+                self._sinks[req.uid] = sink
+                self._emitted[req.uid] = 0
+            elif kind == "cancel":
+                self.engine.cancel(a)
+            elif kind == "call":
+                a(self.engine)
+
+    def _emit(self, uid: int, token: int):
+        sink = self._sinks.get(uid)
+        if sink is None:
+            return
+        idx = self._emitted.get(uid, 0)
+        self._emitted[uid] = idx + 1
+        sink(("token", {"token": int(token), "index": idx}))
+
+    def _flush_terminal(self):
+        """Exactly-once terminal frames: any sink whose request reached a
+        terminal state gets its ``done``/``error`` event and is dropped."""
+        for uid in list(self._sinks):
+            req = self.engine.requests.get(uid)
+            if req is None or not req.state.terminal:
+                continue
+            sink = self._sinks.pop(uid)
+            self._emitted.pop(uid, None)
+            kind = ("done" if req.state in (RequestState.FINISHED,
+                                            RequestState.CANCELLED)
+                    else "error")
+            sink((kind, _terminal_info(req)))
+
+    def _run(self):
+        while not self._stop.is_set():
+            self._drain_cmds()
+            if not self.engine.has_work():
+                self._flush_terminal()
+                self._stop.wait(self._POLL_S)
+                continue
+            for uid, tok in self.engine.step():
+                self._emit(uid, tok)
+            self.steps += 1
+            self._flush_terminal()
+
+
+def _terminal_info(req: Request, reason: str | None = None,
+                   state: str | None = None) -> dict:
+    info = {
+        "uid": req.uid,
+        "state": state or str(req.state),
+        "finish_reason": reason or req.finish_reason,
+        "n_tokens": len(req.generated),
+    }
+    ttft = req.ttft_ms()
+    if ttft is not None:
+        info["ttft_ms"] = ttft
+    return info
+
+
+# ---------------------------------------------------------------------------
+# minimal HTTP/1.1 plumbing (stdlib asyncio streams)
+# ---------------------------------------------------------------------------
+_MAX_HEADER = 64 * 1024
+_MAX_BODY = 4 * 1024 * 1024
+
+
+async def _read_request(reader) -> tuple[str, str, dict, bytes] | None:
+    try:
+        head = await reader.readuntil(b"\r\n\r\n")
+    except (asyncio.IncompleteReadError, asyncio.LimitOverrunError,
+            ConnectionError):
+        return None
+    if len(head) > _MAX_HEADER:
+        return None
+    lines = head.decode("latin-1").split("\r\n")
+    parts = lines[0].split()
+    if len(parts) != 3:
+        return None
+    method, target = parts[0].upper(), parts[1]
+    headers = {}
+    for line in lines[1:]:
+        if ":" in line:
+            k, v = line.split(":", 1)
+            headers[k.strip().lower()] = v.strip()
+    body = b""
+    n = int(headers.get("content-length", "0") or "0")
+    if n:
+        if n > _MAX_BODY:
+            return None
+        body = await reader.readexactly(n)
+    return method, target, headers, body
+
+
+def _response_head(status: str, ctype: str, *, chunked: bool = False,
+                   length: int | None = None) -> bytes:
+    lines = [f"HTTP/1.1 {status}",
+             f"Content-Type: {ctype}",
+             "Connection: close"]
+    if chunked:
+        lines.append("Transfer-Encoding: chunked")
+    if length is not None:
+        lines.append(f"Content-Length: {length}")
+    return ("\r\n".join(lines) + "\r\n\r\n").encode()
+
+
+async def _send_plain(writer, status: str, payload: bytes,
+                      ctype: str = "application/json"):
+    writer.write(_response_head(status, ctype, length=len(payload)))
+    writer.write(payload)
+    await writer.drain()
+
+
+async def _send_chunk(writer, data: bytes):
+    writer.write(f"{len(data):x}\r\n".encode() + data + b"\r\n")
+    await writer.drain()
+
+
+def _sse(obj: dict) -> bytes:
+    return b"data: " + json.dumps(obj).encode() + b"\n\n"
+
+
+# ---------------------------------------------------------------------------
+# the server
+# ---------------------------------------------------------------------------
+class ServingServer:
+    """HTTP front-end over an :class:`EngineWorker`.
+
+    Routes:
+
+    * ``POST /generate`` — body ``{"prompt": [int...], "max_new_tokens": N,
+      "deadline_ms"?: F, "ttft_budget_ms"?: F}``; streams SSE frames
+      (chunked transfer), one terminal frame, then closes.  A client that
+      hangs up mid-stream cancels its request — slot and pool pages are
+      released (tests/test_server.py pins the regression).
+    * ``GET /metrics`` — Prometheus text rendering of
+      ``engine.metrics_report()``.
+    * ``GET /healthz`` — liveness + step counter.
+
+    Use as a context manager (binds an ephemeral loopback port by
+    default, runs the asyncio loop in a daemon thread)::
+
+        with ServingServer(engine) as srv:
+            for frame in stream_generate("127.0.0.1", srv.port, [1, 2, 3]):
+                ...
+    """
+
+    def __init__(self, engine: ServeEngine, host: str = "127.0.0.1",
+                 port: int = 0):
+        self.worker = EngineWorker(engine)
+        self.host = host
+        self.port = port          # 0 => ephemeral, resolved on start
+        self._loop: asyncio.AbstractEventLoop | None = None
+        self._thread: threading.Thread | None = None
+        self._server: asyncio.base_events.Server | None = None
+        self._started = threading.Event()
+
+    # -- request handlers ----------------------------------------------
+    async def _handle_generate(self, reader, writer, body: bytes):
+        try:
+            spec = json.loads(body.decode() or "{}")
+            prompt = np.asarray(spec["prompt"], np.int32)
+            if prompt.ndim != 1:
+                raise ValueError("prompt must be a flat token list")
+        except (ValueError, KeyError, TypeError) as e:
+            await _send_plain(writer, "400 Bad Request", json.dumps(
+                {"error": f"bad request body: {e}"}).encode())
+            return
+        uid = int(spec.get("uid", self.worker.next_uid()))
+        req = Request(uid=uid, prompt=prompt,
+                      max_new_tokens=int(spec.get("max_new_tokens", 16)),
+                      deadline_ms=spec.get("deadline_ms"),
+                      ttft_budget_ms=spec.get("ttft_budget_ms"))
+        loop = asyncio.get_running_loop()
+        frames: asyncio.Queue = asyncio.Queue()
+
+        def sink(event):   # worker thread -> loop
+            loop.call_soon_threadsafe(frames.put_nowait, event)
+
+        writer.write(_response_head("200 OK", "text/event-stream",
+                                    chunked=True))
+        await writer.drain()
+        self.worker.submit_async(req, sink)
+        # EOF watch: the request line + body are fully read, so the next
+        # (and only) read completing means the client went away
+        eof_watch = asyncio.ensure_future(reader.read(1))
+        try:
+            while True:
+                frame_task = asyncio.ensure_future(frames.get())
+                await asyncio.wait({frame_task, eof_watch},
+                                   return_when=asyncio.FIRST_COMPLETED)
+                if not frame_task.done():
+                    # client disconnected mid-stream
+                    frame_task.cancel()
+                    self.worker.cancel_async(uid)
+                    return
+                kind, payload = frame_task.result()
+                if kind == "token":
+                    await _send_chunk(writer, _sse(
+                        {"type": "token", "uid": uid, **payload}))
+                else:
+                    await _send_chunk(writer, _sse(
+                        {"type": kind, **payload}))
+                    await _send_chunk(writer, b"")   # final 0-chunk
+                    return
+        except ConnectionError:
+            self.worker.cancel_async(uid)
+        finally:
+            eof_watch.cancel()
+
+    async def _handle_metrics(self, writer):
+        report = self.worker.call(lambda eng: eng.metrics_report())
+        await _send_plain(writer, "200 OK",
+                          render_prometheus(report).encode(),
+                          ctype="text/plain; version=0.0.4")
+
+    async def _handle_healthz(self, writer):
+        await _send_plain(writer, "200 OK", json.dumps(
+            {"ok": True, "steps": self.worker.steps}).encode())
+
+    async def _handle_conn(self, reader, writer):
+        try:
+            parsed = await _read_request(reader)
+            if parsed is None:
+                return
+            method, target, _headers, body = parsed
+            if method == "POST" and target == "/generate":
+                await self._handle_generate(reader, writer, body)
+            elif method == "GET" and target == "/metrics":
+                await self._handle_metrics(writer)
+            elif method == "GET" and target == "/healthz":
+                await self._handle_healthz(writer)
+            else:
+                await _send_plain(writer, "404 Not Found",
+                                  b'{"error": "no such route"}')
+        except ConnectionError:
+            pass
+        finally:
+            try:
+                writer.close()
+                await writer.wait_closed()
+            except (ConnectionError, OSError):
+                pass
+
+    # -- loop / thread management --------------------------------------
+    async def _serve(self):
+        self._server = await asyncio.start_server(
+            self._handle_conn, self.host, self.port)
+        self.port = self._server.sockets[0].getsockname()[1]
+        self._started.set()
+        async with self._server:
+            await self._server.serve_forever()
+
+    def _run_loop(self):
+        self._loop = asyncio.new_event_loop()
+        asyncio.set_event_loop(self._loop)
+        try:
+            self._loop.run_until_complete(self._serve())
+        except asyncio.CancelledError:
+            pass
+        finally:
+            self._loop.close()
+
+    def start(self) -> "ServingServer":
+        self.worker.start()
+        self._thread = threading.Thread(target=self._run_loop, daemon=True,
+                                        name="mixfp4-http")
+        self._thread.start()
+        if not self._started.wait(10.0):
+            raise RuntimeError("HTTP server failed to bind in 10s")
+        return self
+
+    def stop(self):
+        if self._loop is not None and self._server is not None:
+            def _shutdown():
+                self._server.close()
+                for task in asyncio.all_tasks(self._loop):
+                    task.cancel()
+            self._loop.call_soon_threadsafe(_shutdown)
+        if self._thread is not None:
+            self._thread.join(timeout=10.0)
+        self.worker.stop()
+
+    def __enter__(self) -> "ServingServer":
+        return self.start()
+
+    def __exit__(self, *exc):
+        self.stop()
+
+
+# ---------------------------------------------------------------------------
+# blocking clients (tests / benchmarks / docs examples)
+# ---------------------------------------------------------------------------
+def stream_generate(host: str, port: int, prompt, *, max_new_tokens: int = 8,
+                    uid: int | None = None, deadline_ms: float | None = None,
+                    ttft_budget_ms: float | None = None,
+                    timeout: float = 120.0, abort_after: int | None = None):
+    """POST /generate and yield decoded SSE frames (dicts) as they arrive.
+
+    ``abort_after=N`` closes the socket right after the N-th token frame —
+    the client-disconnect path the cancel regression test drives."""
+    spec: dict = {"prompt": [int(t) for t in np.asarray(prompt).ravel()],
+                  "max_new_tokens": max_new_tokens}
+    if uid is not None:
+        spec["uid"] = uid
+    if deadline_ms is not None:
+        spec["deadline_ms"] = deadline_ms
+    if ttft_budget_ms is not None:
+        spec["ttft_budget_ms"] = ttft_budget_ms
+    body = json.dumps(spec).encode()
+    with socket.create_connection((host, port), timeout=timeout) as sock:
+        sock.sendall(
+            b"POST /generate HTTP/1.1\r\n"
+            b"Host: " + host.encode() + b"\r\n"
+            b"Content-Type: application/json\r\n"
+            b"Content-Length: " + str(len(body)).encode() + b"\r\n"
+            b"\r\n" + body)
+        buf = b""
+        head_done = False
+        tokens_seen = 0
+        while True:
+            try:
+                data = sock.recv(65536)
+            except TimeoutError:
+                raise TimeoutError(
+                    f"no frame from {host}:{port} in {timeout}s")
+            if not data:
+                return
+            buf += data
+            if not head_done:
+                if b"\r\n\r\n" not in buf:
+                    continue
+                head, buf = buf.split(b"\r\n\r\n", 1)
+                status = head.split(b"\r\n", 1)[0].decode("latin-1")
+                if " 200 " not in status + " ":
+                    # error responses are small JSON bodies; surface them
+                    yield {"type": "http_error", "status": status,
+                           "body": buf.decode("utf-8", "replace")}
+                    return
+                head_done = True
+            # chunked-encoding SSE: frames are "data: {...}\n\n"; chunk
+            # framing never splits our search because we re-scan the
+            # buffer — strip chunk-size lines lazily by searching for
+            # the SSE delimiter in the raw stream
+            while b"\n\n" in buf:
+                raw, buf = buf.split(b"\n\n", 1)
+                start = raw.find(b"data: ")
+                if start < 0:
+                    continue
+                frame = json.loads(raw[start + len(b"data: "):])
+                yield frame
+                if frame.get("type") in ("done", "error"):
+                    return
+                if frame.get("type") == "token":
+                    tokens_seen += 1
+                    if abort_after is not None \
+                            and tokens_seen >= abort_after:
+                        # hard-close mid-stream: the server's EOF watch
+                        # turns this into cancel(uid)
+                        sock.close()
+                        return
+
+
+def scrape_metrics(host: str, port: int, timeout: float = 30.0) -> str:
+    """GET /metrics and return the Prometheus text body."""
+    with socket.create_connection((host, port), timeout=timeout) as sock:
+        sock.sendall(b"GET /metrics HTTP/1.1\r\nHost: " + host.encode()
+                     + b"\r\n\r\n")
+        buf = b""
+        while True:
+            data = sock.recv(65536)
+            if not data:
+                break
+            buf += data
+    head, _, body = buf.partition(b"\r\n\r\n")
+    assert b" 200 " in head.split(b"\r\n", 1)[0], head[:200]
+    return body.decode()
+
+
+# ---------------------------------------------------------------------------
+# CLI selftest (CI frontend-smoke leg)
+# ---------------------------------------------------------------------------
+def _selftest(families: list[str], *, prefill_chunk: int | None = 4,
+              new_tokens: int = 4) -> dict:
+    """Start a loopback server per family, stream one request through
+    HTTP, scrape /metrics, and cross-check the stream against a direct
+    drive of an identical engine.  Returns {family: n_tokens}."""
+    import jax
+
+    from repro.models.base import build_model
+    from repro.serving.faults import _family_cfg
+
+    out = {}
+    for family in families:
+        cfg, seed = _family_cfg(family)
+        params, _ = build_model(cfg).init(jax.random.PRNGKey(seed))
+        chunk = (prefill_chunk
+                 if cfg.family in ("dense", "moe", "vlm") else None)
+        engine = ServeEngine(cfg, params, batch_size=2, max_len=64,
+                             prefill_chunk=chunk)
+        prompt = list(range(1, 9))
+        with ServingServer(engine) as srv:
+            frames = list(stream_generate("127.0.0.1", srv.port, prompt,
+                                          max_new_tokens=new_tokens))
+            metrics_text = scrape_metrics("127.0.0.1", srv.port)
+        toks = [f["token"] for f in frames if f["type"] == "token"]
+        assert frames[-1]["type"] == "done", frames[-1]
+        assert frames[-1]["finish_reason"] == "max_new_tokens", frames[-1]
+        assert len(toks) == new_tokens, (family, toks)
+        assert "mixfp4_ttft_ms_count" in metrics_text, metrics_text[:400]
+        assert "mixfp4_queue_depth" in metrics_text
+        # oracle: direct drive of a fresh identical engine
+        params2, _ = build_model(cfg).init(jax.random.PRNGKey(seed))
+        oracle = ServeEngine(cfg, params2, batch_size=2, max_len=64,
+                             prefill_chunk=chunk)
+        req = Request(uid=0, prompt=np.asarray(prompt, np.int32),
+                      max_new_tokens=new_tokens)
+        oracle.submit(req)
+        got = []
+        while oracle.has_work():
+            got.extend(t for _, t in oracle.step())
+        assert toks == got, (family, toks, got)
+        out[family] = len(toks)
+        print(f"frontend selftest[{family}]: {len(toks)} tokens streamed, "
+              f"metrics scraped OK")
+    return out
+
+
+def main(argv=None):
+    import argparse
+    parser = argparse.ArgumentParser(
+        description="loopback HTTP serving selftest (CI frontend-smoke)")
+    parser.add_argument("--families", default="dense",
+                        help="comma-separated: dense,moe,ssm,hybrid")
+    parser.add_argument("--prefill-chunk", type=int, default=4)
+    parser.add_argument("--new-tokens", type=int, default=4)
+    args = parser.parse_args(argv)
+    _selftest(args.families.split(","), prefill_chunk=args.prefill_chunk,
+              new_tokens=args.new_tokens)
+    print("frontend selftest OK")
+
+
+if __name__ == "__main__":
+    main()

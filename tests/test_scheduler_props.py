@@ -1,0 +1,187 @@
+"""Property tests (hypothesis): chunked prefill is bitwise whole-prompt.
+
+The chunked-prefill scheduler (serving.scheduler) leans on two pinned
+invariants — ``prefill_slot(start_pos=)`` writes only rows
+``[start_pos, start_pos + true_len)`` and the packed KV cache quantizes
+rows against the pinned per-layer KV_SCALE32, so writes are
+write-order-independent.  If either regresses, chunking a prompt would
+change the cache bytes or the decoded stream.  These properties drive
+ONE request (no decode interleaving, so no junk scatters land during the
+prefill) through a chunked engine and a whole-prompt oracle engine over
+random prompt lengths and chunk budgets, and demand
+
+* bitwise-identical KV cache rows ``[0, p_len)`` (raw payload/scale
+  bytes for the packed cache, raw bf16 for the dense cache, gathered
+  through the block table for the paged pool), and
+* the identical greedy token stream (first token included).
+
+Gated behind importorskip so a bare environment still runs the
+deterministic suite in test_scheduler.py / test_server.py.
+"""
+import itertools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.core import qtensor  # noqa: E402
+from repro.core.qgemm import QuantConfig  # noqa: E402
+from repro.models.base import ArchConfig, build_model  # noqa: E402
+from repro.serving.engine import (Request, RequestState,  # noqa: E402
+                                  ServeEngine)
+
+MAX_LEN = 32
+N_NEW = 2
+PAGE_LEN = 16
+
+_CFG = ArchConfig(name="sched-props", family="dense", n_layers=2,
+                  d_model=64, n_heads=2, n_kv_heads=2, d_ff=128,
+                  vocab=64, attn_chunk=64,
+                  quant=QuantConfig(method="mixfp4"))
+
+# Engines are cached across hypothesis examples (slot reuse after drain is
+# already pinned by test_serving.py::test_slot_reuse_no_contamination) so
+# each (kv_quant, chunk) pair compiles its prefill executable exactly once.
+_STATE: dict = {}
+_uid = itertools.count(1)
+
+
+def _params():
+    if "params" not in _STATE:
+        _STATE["params"] = build_model(_CFG).init(jax.random.PRNGKey(0))[0]
+    return _STATE["params"]
+
+
+def _engine(kv_quant, chunk, paged=False):
+    key = (kv_quant, chunk, paged)
+    if key not in _STATE:
+        kw = {}
+        if paged:
+            kw.update(kv_pool=2 * (MAX_LEN // PAGE_LEN) * 2 + 1,
+                      kv_page_len=PAGE_LEN)
+        _STATE[key] = ServeEngine(_CFG, _params(), batch_size=2,
+                                  max_len=MAX_LEN, kv_quant=kv_quant,
+                                  prefill_chunk=chunk, **kw)
+    return _STATE[key]
+
+
+def _drive_one(eng, prompt):
+    """Serve a single request to completion; return its greedy stream."""
+    req = Request(uid=next(_uid), prompt=np.asarray(prompt, np.int32),
+                  max_new_tokens=N_NEW)
+    eng.add_request(req)
+    toks, guard = [], 0
+    while eng.has_work():
+        toks.extend(t for _, t in eng.step())
+        guard += 1
+        assert guard < 500, "single-request drive wedged"
+    assert req.state is RequestState.FINISHED, req.state
+    return toks
+
+
+def _fixed_rows(eng, p_len):
+    """Slot-0 cache rows [0, p_len) as raw bytes (fixed-slot layouts)."""
+    rows = {}
+    for name, leaf in eng.cache.items():
+        if isinstance(leaf, qtensor.QTensor):
+            rows[f"{name}.payload"] = np.asarray(leaf.payload)[:, 0, :p_len]
+            rows[f"{name}.scales"] = np.asarray(leaf.scales)[:, 0, :p_len]
+        else:
+            rows[name] = np.asarray(leaf)[:, 0, :p_len]
+    return rows
+
+
+def _paged_rows(eng, p_len):
+    """Slot-0 logical rows [0, p_len) gathered through the block table."""
+    bt = np.asarray(eng.cache["pages"])[0]
+    pages = bt[(np.arange(p_len)) // PAGE_LEN]
+    offs = np.arange(p_len) % PAGE_LEN
+    rows = {}
+    for name, leaf in eng.cache.items():
+        if name == "pages":
+            continue
+        for part, arr in (("payload", leaf.payload), ("scales", leaf.scales)):
+            slab = np.asarray(arr)                 # (L, P, page_len, Hkv, .)
+            rows[f"{name}.{part}"] = slab[:, pages, offs]
+    return rows
+
+
+def _assert_rows_equal(got, want, label):
+    assert got.keys() == want.keys()
+    for name in want:
+        np.testing.assert_array_equal(
+            got[name], want[name],
+            err_msg=f"[{label}] cache[{name}] rows differ")
+
+
+@pytest.mark.parametrize("kv_quant", [None, "mixfp4"])
+@settings(max_examples=6, deadline=None)
+@given(p_len=st.integers(min_value=1, max_value=MAX_LEN - N_NEW - 1),
+       chunk=st.sampled_from([1, 2, 3, 5, 8, 16]),
+       seed=st.integers(min_value=0, max_value=2**20))
+def test_chunked_prefill_bitwise_fixed_slot(kv_quant, p_len, chunk, seed):
+    """Random (prompt length, chunk budget): the chunked engine's cache
+    rows and stream are bitwise the whole-prompt oracle's — dense bf16
+    cache and packed fixed-slot cache alike."""
+    prompt = np.random.RandomState(seed).randint(
+        0, _CFG.vocab, p_len).astype(np.int32)
+    chunked = _engine(kv_quant, chunk)
+    oracle = _engine(kv_quant, None)
+    got_stream = _drive_one(chunked, prompt)
+    got_rows = _fixed_rows(chunked, p_len)
+    want_stream = _drive_one(oracle, prompt)
+    want_rows = _fixed_rows(oracle, p_len)
+    assert got_stream == want_stream, (p_len, chunk, seed)
+    assert got_stream[0] == want_stream[0]   # first token, explicitly
+    _assert_rows_equal(got_rows, want_rows,
+                       f"kv={kv_quant} p_len={p_len} chunk={chunk}")
+
+
+@settings(max_examples=6, deadline=None)
+@given(p_len=st.integers(min_value=1, max_value=MAX_LEN - N_NEW - 1),
+       chunk=st.sampled_from([3, 5, 8]),
+       seed=st.integers(min_value=0, max_value=2**20))
+def test_chunked_prefill_bitwise_paged(p_len, chunk, seed):
+    """Same property through the paged pool: chunk writes land in the
+    slot's private pages via the block table, and (because engines are
+    reused across examples) later prompts can prefix-hit earlier ones —
+    exercising the start_pos=shared_len suffix-chunk path too."""
+    prompt = np.random.RandomState(seed).randint(
+        0, _CFG.vocab, p_len).astype(np.int32)
+    chunked = _engine("mixfp4", chunk, paged=True)
+    oracle = _engine("mixfp4", None, paged=True)
+    got_stream = _drive_one(chunked, prompt)
+    got_rows = _paged_rows(chunked, p_len)
+    want_stream = _drive_one(oracle, prompt)
+    want_rows = _paged_rows(oracle, p_len)
+    assert got_stream == want_stream, (p_len, chunk, seed)
+    _assert_rows_equal(got_rows, want_rows,
+                       f"paged p_len={p_len} chunk={chunk}")
+    for eng in (chunked, oracle):
+        assert eng.pool_report()["pages_active"] == 0
+
+
+@pytest.mark.parametrize("family,kwargs", [
+    ("ssm", dict(ssm_state=8, ssm_expand=2)),
+    ("hybrid", dict(n_heads=2, n_kv_heads=2, d_ff=128, ssm_state=8,
+                    ssm_expand=2, ssm_version=2, ssm_head_dim=32,
+                    attn_period=2, attn_chunk=64)),
+])
+def test_ssm_hybrid_chunking_rejected(family, kwargs):
+    """SSM/hybrid admissions cannot be chunked (the recurrent state has no
+    start_pos resume path): the engine rejects prefill_chunk= with a typed
+    error, and the model-level start_pos= entry is equally typed."""
+    cfg = ArchConfig(name=f"sched-props-{family}", family=family,
+                     n_layers=2, d_model=64, vocab=64,
+                     quant=QuantConfig(method="mixfp4"), **kwargs)
+    model = build_model(cfg)
+    params, _ = model.init(jax.random.PRNGKey(0))
+    with pytest.raises(ValueError, match="recurrent state.*no start_pos"):
+        ServeEngine(cfg, params, batch_size=1, max_len=16, prefill_chunk=4)
+    with pytest.raises(ValueError, match="start_pos.*transformer-only"):
+        model.prefill_slot(params, jnp.zeros((1, 4), jnp.int32), None,
+                           None, 0, start_pos=4)
