@@ -14,10 +14,13 @@ is precisely the paper's point.
 """
 from __future__ import annotations
 
+import functools
+
 import jax
 import jax.numpy as jnp
+import numpy as np
 
-__all__ = ["fwht", "rht", "rht_signs"]
+__all__ = ["fwht", "rht", "rht_signs", "serve_signs"]
 
 
 def fwht(x: jax.Array, *, axis: int = -1, normalize: bool = True) -> jax.Array:
@@ -46,6 +49,24 @@ def fwht(x: jax.Array, *, axis: int = -1, normalize: bool = True) -> jax.Array:
 def rht_signs(key: jax.Array, n: int, dtype=jnp.float32) -> jax.Array:
     """Random +-1 diagonal for the RHT (one sign per position along the axis)."""
     return jax.random.rademacher(key, (n,), dtype=dtype)
+
+
+@functools.lru_cache(maxsize=None)
+def _serve_signs_np(n: int, seed: int) -> np.ndarray:
+    rng = np.random.default_rng((seed << 32) | n)
+    return np.where(rng.integers(0, 2, n) > 0, 1.0, -1.0).astype(np.float32)
+
+
+def serve_signs(n: int, seed: int = 0x5147) -> jax.Array:
+    """Deterministic ±1 diagonal for the SERVE-TIME activation RHT
+    (``act_rht=`` in the engine): a pure function of the packed K length,
+    so the weight packer (``pack_projections(act_rht=True)``), ``qlinear``'s
+    fused prologue, benchmarks and checkpoints all reconstruct the same
+    ``D`` without threading state — any two projections with the same
+    padded K share one diagonal, which is harmless (orthogonality cancels
+    per GEMM, not across GEMMs).  Host-side numpy so it is reproducible
+    across jax versions/backends and never traced."""
+    return jnp.asarray(_serve_signs_np(int(n), int(seed)))
 
 
 def rht(

@@ -374,7 +374,8 @@ def _quantize_2d(w: jax.Array, spec: QuantSpec, key) -> QTensor:
 
 def quantize_rows(x: jax.Array, *, interpret: bool | None = None,
                   scale32: jax.Array | float | None = None,
-                  pad_to: int | None = None) -> QTensor:
+                  pad_to: int | None = None,
+                  per_row: bool = False) -> QTensor:
     """Fused-kernel 1-D row quantizer (mixfp4/RNE, blocks along the last
     axis of a (M, K) matrix) returning a QTensor — the W4A4 activation
     producer for ``qmm``.  ``scale32`` pins the per-tensor scale (see
@@ -388,7 +389,14 @@ def quantize_rows(x: jax.Array, *, interpret: bool | None = None,
     padded lanes quantize to zero codes and decode to exact zeros, the same
     zero terms the dense W4A16 dispatcher's internal padding contributes,
     and a zero tail never moves a block's absmax, so the real lanes' bytes
-    are unchanged."""
+    are unchanged.
+
+    ``per_row=True`` derives (or pins, via an (M,) ``scale32``) a ROW-LOCAL
+    level-2 scale instead of the per-tensor Alg. 1 reduction — the
+    resulting QTensor carries an (M,) ``scale32`` vector and each row's
+    bytes are a pure function of that row (the W4A4 serving
+    batch-independence contract; ``qmm``/``dequantize`` broadcast the
+    vector).  Zero K-padding still cannot move a row's amax."""
     from repro.kernels import ops  # deferred: kernels import core
 
     assert x.ndim == 2, "quantize_rows expects (M, K)"
@@ -404,6 +412,8 @@ def quantize_rows(x: jax.Array, *, interpret: bool | None = None,
     kw = {} if interpret is None else {"interpret": interpret}
     if scale32 is not None:
         kw["scale32"] = scale32
+    if per_row:
+        kw["per_row"] = True
     payload, scales, s32 = ops.quantize_rows(x32, **kw)
     return QTensor(payload, scales, s32, method="mixfp4",
                    layout=BlockLayout1D(-1, _G),
@@ -500,18 +510,24 @@ def prepad_for_tiles(w: "QTensor", group: str, m: int,
                    w.dtype, w.pspec)
 
 
-def _act_scale32_like_quantize_rows(x2: jax.Array) -> jax.Array:
-    """The per-tensor activation scale exactly as ``mixfp4_quant_rows``
-    derives it (Alg. 1 line 4 — one owner: ``scaling.tensor_scale``, which
-    the quantizer kernel matches bit-for-bit); zero-padding cannot change
-    it, so computing it on the unpadded rows is equivalent."""
-    return scaling.tensor_scale(x2.astype(jnp.float32))
+def _act_scale32_like_quantize_rows(x2: jax.Array,
+                                    per_row: bool = False) -> jax.Array:
+    """The activation scale exactly as ``mixfp4_quant_rows`` derives it
+    (one owner: ``scaling.tensor_scale`` / ``scaling.row_scale``, which the
+    quantizer kernel matches bit-for-bit); zero K-padding cannot change
+    either reduction, so computing it on the unpadded rows is equivalent.
+    ``per_row=True`` returns the (M,) row-local vector (all-zero rows —
+    including M-padding — get scale 1 and quantize to zero codes)."""
+    x2 = x2.astype(jnp.float32)
+    return scaling.row_scale(x2) if per_row else scaling.tensor_scale(x2)
 
 
 def qmm(x: Union[jax.Array, QTensor], w: Union[jax.Array, QTensor], *,
         interpret: bool | None = None, allow_fallback: bool = True,
         fuse_act_quant: bool = False,
-        act_scale32: jax.Array | float | None = None) -> jax.Array:
+        act_scale32: jax.Array | float | None = None,
+        per_row_act: bool = False,
+        act_rht_signs: jax.Array | None = None) -> jax.Array:
     """y = x @ w with quantized operands, f32 output.
 
     Dispatch rules (docs/qtensor.md):
@@ -523,7 +539,15 @@ def qmm(x: Union[jax.Array, QTensor], w: Union[jax.Array, QTensor], *,
         (which remains the oracle).  ``act_scale32`` pins the per-tensor
         activation scale (sharded row-parallel shards must share the
         global scale); default derives it exactly as ``quantize_rows``.
+        ``per_row_act=True`` switches the fused prologue to the per-row
+        scale contract (oracle: ``quantize_rows(per_row=True)`` -> W4A4),
+        and ``act_rht_signs`` (a ±1 vector on the weight's packed Kp grid)
+        additionally fuses the grouped RHT ahead of the quantizer — the
+        weight must have been RHT-transformed along K with the SAME signs
+        at pack time (``models.base.pack_projections(act_rht=True)``).
       * ``x`` 1-D QTensor (last axis), ``w`` 2-D QTensor -> Pallas W4A4.
+        An (M,)-vector ``x.scale32`` (from ``quantize_rows(per_row=True)``)
+        dispatches the per-row GEMM; padded rows ride under scale 1.
       * anything else (1-D weights, stacked batch dims, K mismatch) ->
         qdq-simulated fallback: dequantize + bf16 matmul w/ f32 accum.
 
@@ -586,14 +610,19 @@ def qmm(x: Union[jax.Array, QTensor], w: Union[jax.Array, QTensor], *,
         m = x.payload.shape[0]
         ch = tuning.select_tiles("w4a4", m, kp, np_)
         xp, xs = x.payload, x.scales
+        x32 = x.scale32
+        per_row = getattr(x32, "ndim", 0) == 1
         if ch.m_pad != m or ch.k_pad != kp:
             # padded rows/lanes: zero payload + zero scale bytes decode to
             # exact zeros, the same terms the fused prologue contributes
             xp = jnp.pad(xp, ((0, ch.m_pad - m), (0, (ch.k_pad - kp) // 2)))
             xs = jnp.pad(xs, ((0, ch.m_pad - m), (0, (ch.k_pad - kp) // _G)))
-        wp, ws = _pad_weight_operands(w, ch)
-        y = ops.gemm_w4a4(xp, xs, x.scale32, wp, ws, w.scale32,
-                          bm=ch.bm, bn=ch.bn, bk=ch.bk, interpret=interpret)
+            if per_row:
+                # padded rows carry scale 1 (all-zero rows' guard value)
+                x32 = jnp.pad(x32, (0, ch.m_pad - m), constant_values=1.0)
+        y = ops.gemm_w4a4(xp, xs, x32, *_pad_weight_operands(w, ch),
+                          w.scale32, bm=ch.bm, bn=ch.bn, bk=ch.bk,
+                          interpret=interpret, per_row=per_row)
         return y[:m, :n_logical]
 
     if x.shape[-1] != k_logical:
@@ -606,8 +635,10 @@ def qmm(x: Union[jax.Array, QTensor], w: Union[jax.Array, QTensor], *,
         # Fused quantize+GEMM prologue (W4A4 in one dispatch): the scale is
         # derived (or pinned) here, the dense rows are zero-padded onto the
         # tuner grid, and the kernel quantizes tile-by-tile in VMEM.
-        s32x = (_act_scale32_like_quantize_rows(x2) if act_scale32 is None
-                else jnp.asarray(act_scale32, jnp.float32))
+        if act_rht_signs is not None and not per_row_act:
+            raise ValueError("qmm: act_rht_signs requires per_row_act=True "
+                             "(the RHT lever rides the row-local scale "
+                             "contract)")
         ch = tuning.select_tiles("w4a4_fused", m, kp, np_)
         # rows cast to f32 HERE, before padding/streaming — exactly where
         # the composition's quantize_rows casts (see mixfp4_gemm_w4a4_fused:
@@ -617,10 +648,37 @@ def qmm(x: Union[jax.Array, QTensor], w: Union[jax.Array, QTensor], *,
         if ch.m_pad != m or ch.k_pad != k_logical:
             x2p = jnp.pad(x2p, ((0, ch.m_pad - m),
                                 (0, ch.k_pad - k_logical)))
+        signs_p = None
+        if act_rht_signs is not None:
+            if act_rht_signs.shape != (kp,):
+                raise ValueError(
+                    f"qmm: act_rht_signs must live on the weight's packed "
+                    f"Kp grid ({kp},), got {act_rht_signs.shape}")
+            # extend with +1 onto the tuner grid: the tail groups are
+            # all-zero in both operands, so they transform to zero
+            signs_p = jnp.pad(act_rht_signs.astype(jnp.float32),
+                              (0, ch.k_pad - kp), constant_values=1.0)
+        if act_scale32 is not None:
+            s32x = jnp.asarray(act_scale32, jnp.float32)
+            if per_row_act and ch.m_pad != m:
+                s32x = jnp.pad(s32x.reshape(-1), (0, ch.m_pad - m),
+                               constant_values=1.0)
+        elif per_row_act:
+            # row-local scale from the SAME values the prologue quantizes:
+            # the (already padded) rows, RHT-transformed when signs ride
+            # along (shared fwht_rows_math — bit-identical to in-kernel).
+            # Padded rows are all-zero -> guard scale 1 -> zero codes.
+            from repro.kernels.fwht import fwht_rows_math  # deferred
+            xt = (fwht_rows_math(x2p, signs_p, _G)
+                  if signs_p is not None else x2p)
+            s32x = _act_scale32_like_quantize_rows(xt, per_row=True)
+        else:
+            s32x = _act_scale32_like_quantize_rows(x2)
         wp, ws = _pad_weight_operands(w, ch)
         y = ops.gemm_w4a4_fused(x2p, s32x, wp, ws, w.scale32,
                                 bm=ch.bm, bn=ch.bn, bk=ch.bk,
-                                interpret=interpret)
+                                interpret=interpret, per_row=per_row_act,
+                                rht_signs=signs_p)
         return y[:m, :n_logical].reshape(*lead, n_logical)
 
     ch = tuning.select_tiles("w4a16", m, kp, np_)
@@ -678,7 +736,9 @@ def kn_partitions(qt: QTensor) -> tuple:
 
 def qmm_sharded(x: Union[jax.Array, QTensor], w: QTensor, *, mesh,
                 interpret: bool | None = None,
-                fuse_act_quant: bool = False) -> jax.Array:
+                fuse_act_quant: bool = False,
+                per_row_act: bool = False,
+                act_rht_signs: jax.Array | None = None) -> jax.Array:
     """``qmm`` for a model-parallel packed weight: the kernel runs per
     shard under ``shard_map``, so the payload/scale bytes are never
     gathered or dequantized to a full dense weight.
@@ -716,6 +776,12 @@ def qmm_sharded(x: Union[jax.Array, QTensor], w: QTensor, *, mesh,
     composition produces.  Column-parallel stays bitwise-identical to the
     single-device fused kernel: the tuner picks ``bk`` independently of N,
     so every shard keeps the single-device K tiling.
+
+    ``per_row_act=True`` pins the (M,) ROW-LOCAL scale vector into every
+    shard instead (replicated — row amax is a full-K reduction computed
+    here, outside the split), and ``act_rht_signs`` splits along K with
+    the weight (the transform is 16-lane-group-local and shard boundaries
+    land on 16-lane blocks, so each shard transforms exactly its slice).
     """
     from repro.distributed.sharding import shard_map  # deferred: layering
 
@@ -747,7 +813,9 @@ def qmm_sharded(x: Union[jax.Array, QTensor], w: QTensor, *, mesh,
     k_e, n_e = kn_partitions(w)
     if k_e is None and n_e is None:
         return qmm(x, w, interpret=interpret,
-                   fuse_act_quant=fuse_act_quant)
+                   fuse_act_quant=fuse_act_quant,
+                   per_row_act=per_row_act,
+                   act_rht_signs=act_rht_signs)
     sizes = dict(mesh.shape)
     ks, ns = _axes_size(k_e, sizes), _axes_size(n_e, sizes)
     _check_block_granularity(k_e, kp, w.layout.bm, "K", sizes)
@@ -775,11 +843,29 @@ def qmm_sharded(x: Union[jax.Array, QTensor], w: QTensor, *, mesh,
         x_specs = (P(*[None] * (x.ndim - 1), k_e),)
         lead_specs = (None,) * (x.ndim - 1)
         if fuse_act_quant:
-            # global per-tensor scale, derived from the FULL rows before
-            # the K split and replicated into every shard's prologue
-            s32x = _act_scale32_like_quantize_rows(xk.reshape(-1, kp))
+            x2full = xk.reshape(-1, kp)
+            if act_rht_signs is not None:
+                if not per_row_act:
+                    raise ValueError(
+                        "qmm_sharded: act_rht_signs requires per_row_act")
+                if act_rht_signs.shape != (kp,):
+                    raise ValueError(
+                        f"qmm_sharded: act_rht_signs must live on the "
+                        f"packed Kp grid ({kp},), got {act_rht_signs.shape}")
+                from repro.kernels.fwht import fwht_rows_math  # deferred
+                x2full = fwht_rows_math(
+                    x2full.astype(jnp.float32),
+                    act_rht_signs.astype(jnp.float32), _G)
+            # global activation scale, derived from the FULL (transformed)
+            # rows before the K split and pinned into every shard's
+            # prologue — per-row vectors replicate like the scalar
+            s32x = _act_scale32_like_quantize_rows(x2full,
+                                                   per_row=per_row_act)
             x_args = x_args + (s32x,)
             x_specs = x_specs + (P(),)
+            if act_rht_signs is not None:
+                x_args = x_args + (act_rht_signs.astype(jnp.float32),)
+                x_specs = x_specs + (P(k_e),)
 
     def body(x_parts, wp, ws, w32):
         k_loc = 2 * wp.shape[0]   # local K, padded-as-logical (see above)
@@ -792,9 +878,11 @@ def qmm_sharded(x: Union[jax.Array, QTensor], w: QTensor, *, mesh,
                          (xp.shape[0], k_loc), x.dtype)
             y = qmm(xl, qt_w, interpret=interpret)
         elif fuse_act_quant:
-            xl, s32_local = x_parts
+            xl, s32_local = x_parts[0], x_parts[1]
+            signs_local = x_parts[2] if len(x_parts) > 2 else None
             y = qmm(xl, qt_w, interpret=interpret, fuse_act_quant=True,
-                    act_scale32=s32_local)
+                    act_scale32=s32_local, per_row_act=per_row_act,
+                    act_rht_signs=signs_local)
         else:
             (xl,) = x_parts
             y = qmm(xl, qt_w, interpret=interpret)   # f32 out on all paths

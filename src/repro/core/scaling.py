@@ -17,6 +17,7 @@ from repro.core import formats
 
 __all__ = [
     "tensor_scale",
+    "row_scale",
     "block_scale_e4m3",
     "pack_scale_with_type",
     "unpack_scale_and_type",
@@ -39,6 +40,21 @@ def tensor_scale(x: jax.Array, denom: float = formats.PER_TENSOR_DENOM) -> jax.A
     disagree by 1 ulp — the multiply form is identical under both.
     """
     amax = jnp.max(jnp.abs(x)).astype(jnp.float32)
+    return jnp.where(amax > 0, amax * jnp.float32(1.0 / denom), 1.0)
+
+
+def row_scale(x: jax.Array, denom: float = formats.PER_TENSOR_DENOM) -> jax.Array:
+    """Per-ROW FP32 scale: s32[i] = max|X[i, :]| / denom, shape (M,).
+
+    The activation-side deviation from Alg. 1 line 4 (+4 B/row of wire
+    overhead) that makes each quantized row a pure function of that row —
+    the per-tensor reduction couples a row's bytes to its batchmates and
+    to padded suffix rows, which breaks bitwise batch independence in
+    W4A4 serving.  Same guard (all-zero row -> scale 1 -> zero codes) and
+    the same reciprocal-multiply form as :func:`tensor_scale`, so a
+    single-row batch gets bit-identical bytes under either scale kind.
+    """
+    amax = jnp.max(jnp.abs(x), axis=-1).astype(jnp.float32)
     return jnp.where(amax > 0, amax * jnp.float32(1.0 / denom), 1.0)
 
 

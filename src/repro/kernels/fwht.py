@@ -5,6 +5,14 @@ sign-flip + the log2(g) butterfly stages into one VMEM pass avoids g
 intermediate HBM round-trips.  Groups (default 16, the quantization block)
 transform independently, so the kernel tiles rows and keeps the full feature
 extent resident.
+
+``fwht_rows_math`` is the shared sign-flip + butterfly body: the standalone
+kernel, the fused W4A4 GEMM prologue (``mixfp4_gemm_w4a4_fused(rht_signs=)``)
+and the serve-time per-row scale derivation in ``core.qtensor`` all call it,
+so the transformed values — and therefore the dual-format select and the
+row amax — cannot drift between the fused and composed paths.  Every op in
+it is an elementwise f32 add/sub/multiply (no reductions, no FMA
+contraction), so in-kernel and plain-jnp evaluations are bit-identical.
 """
 from __future__ import annotations
 
@@ -14,12 +22,15 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-__all__ = ["fwht_rows"]
+__all__ = ["fwht_rows", "fwht_rows_math"]
 
 
-def _fwht_kernel(x_ref, s_ref, o_ref, *, group: int):
-    x = x_ref[...].astype(jnp.float32) * s_ref[...].astype(jnp.float32)
+def fwht_rows_math(x: jax.Array, signs: jax.Array, group: int) -> jax.Array:
+    """Sign flip + grouped FWHT butterfly on f32 rows: x (bm, k), signs
+    broadcastable to (1, k).  Mirrors ``core.hadamard.rht`` stage for stage
+    (same adds/subs, same ``group ** -0.5`` normalization)."""
     bm, k = x.shape
+    x = x * signs.reshape(1, k)
     x = x.reshape(bm, k // group, group)
     h = 1
     while h < group:
@@ -31,7 +42,13 @@ def _fwht_kernel(x_ref, s_ref, o_ref, *, group: int):
         ).reshape(bm, k // group, group)
         h *= 2
     x = x * (group ** -0.5)
-    o_ref[...] = x.reshape(bm, k).astype(o_ref.dtype)
+    return x.reshape(bm, k)
+
+
+def _fwht_kernel(x_ref, s_ref, o_ref, *, group: int):
+    x = fwht_rows_math(x_ref[...].astype(jnp.float32),
+                       s_ref[...].astype(jnp.float32), group)
+    o_ref[...] = x.astype(o_ref.dtype)
 
 
 @functools.partial(jax.jit, static_argnames=("group", "bm", "interpret"))
@@ -45,7 +62,18 @@ def fwht_rows(
 ) -> jax.Array:
     """Grouped RHT along the last axis of (M, K); signs shape (K,)."""
     m, k = x.shape
-    assert k % group == 0 and signs.shape == (k,)
+    if group <= 0 or group & (group - 1):
+        # mirror core.hadamard.fwht: a non-power-of-two group has no
+        # butterfly factorization — the loop below would silently compute
+        # a partial transform instead of H_g.
+        raise ValueError(
+            f"FWHT group must be a power of two, got {group}")
+    if k % group:
+        raise ValueError(
+            f"axis length {k} not divisible by RHT group {group}")
+    if signs.shape != (k,):
+        raise ValueError(
+            f"signs must have shape ({k},), got {signs.shape}")
     if bm is None:
         bm = max(1, min(256, (4 * 1024 * 1024 // 8) // max(k, 1)))
         while m % bm and bm > 1:

@@ -49,6 +49,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.fwht import fwht_rows_math
 from repro.kernels.mixfp4_quant import quant_block_kernel_math
 
 __all__ = ["mixfp4_gemm_w4a16", "mixfp4_gemm_w4a4", "mixfp4_gemm_w4a4_fused"]
@@ -130,15 +131,32 @@ def _quantize_act_tile(x: jax.Array, inv_s32: jax.Array, bm: int, bk: int):
 # Shared double-buffered kernel body
 # ---------------------------------------------------------------------------
 def _stream_gemm_body(mode: str, nk: int, bm: int, bn: int, bk: int,
-                      s32_ref, x_refs, wp_hbm, ws_hbm, o_ref,
-                      x_slabs, wp_slab, ws_slab, acc_ref, sem):
+                      per_row: bool, group: int,
+                      s32_ref, signs_hbm, x_refs, wp_hbm, ws_hbm, o_ref,
+                      x_slabs, wp_slab, ws_slab, sg_slab, acc_ref, sem):
     """Grid cell (i, j): stream K slabs of the packed operands HBM->VMEM
     through two buffer slots, overlapping the next slab's DMA with the
     current slab's decode + MXU work; the f32 accumulator stays in VMEM
-    scratch and is written to the output block once, after the K loop."""
+    scratch and is written to the output block once, after the K loop.
+
+    ``per_row=True`` reads the scale operand as an (bm, w) row-tile slab
+    instead of the (1, w) scalar row: column 0 carries the combined output
+    scale (x_row * w per-tensor), column 1 (fused mode) the row's
+    activation scale for the prologue, so every output row is scaled by a
+    function of that row alone.  The scalar branch below is untouched —
+    per-tensor callers keep their exact historical op sequence.
+
+    ``signs_hbm`` (fused mode only) streams the RHT sign diagonal in the
+    same K slabs as the activation and applies the grouped butterfly
+    (``fwht_rows_math``) in VMEM ahead of the quantizer — the transform is
+    group-local and ``bk % group == 0``, so slab-wise application equals
+    the whole-row transform."""
     i = pl.program_id(0)
     j = pl.program_id(1)
-    s32 = s32_ref[0, 0]
+    if per_row:
+        s32 = s32_ref[...][:, 0:1]          # (bm, 1) combined row scales
+    else:
+        s32 = s32_ref[0, 0]
 
     def dmas(slot, kk):
         out = []
@@ -157,6 +175,11 @@ def _stream_gemm_body(mode: str, nk: int, bm: int, bn: int, bk: int,
             out.append(pltpu.make_async_copy(
                 x_hbm.at[pl.ds(i * bm, bm), pl.ds(kk * bk, bk)],
                 x_slab.at[slot], sem.at[slot, 0]))
+            if signs_hbm is not None:
+                # sem slot 1 is free in the dense-activation modes
+                out.append(pltpu.make_async_copy(
+                    signs_hbm.at[:, pl.ds(kk * bk, bk)],
+                    sg_slab.at[slot], sem.at[slot, 1]))
         out.append(pltpu.make_async_copy(
             wp_hbm.at[pl.ds(kk * (bk // 2), bk // 2), pl.ds(j * bn, bn)],
             wp_slab.at[slot], sem.at[slot, 2]))
@@ -171,7 +194,10 @@ def _stream_gemm_body(mode: str, nk: int, bm: int, bn: int, bk: int,
     acc_ref[...] = jnp.zeros_like(acc_ref)
 
     if mode == "w4a4_fused":
-        inv_s32 = 1.0 / s32_ref[0, 1]   # x per-tensor scale (prologue)
+        if per_row:
+            inv_s32 = 1.0 / s32_ref[...][:, 1:2]   # (bm, 1) row scales
+        else:
+            inv_s32 = 1.0 / s32_ref[0, 1]   # x per-tensor scale (prologue)
 
     def body(kk, carry):
         cur = kk % 2
@@ -190,7 +216,10 @@ def _stream_gemm_body(mode: str, nk: int, bm: int, bn: int, bk: int,
         elif mode == "w4a4":
             x = _expand_act_tile(x_slabs[0][cur], x_slabs[1][cur], bm, bk)
         else:
-            x = _quantize_act_tile(x_slabs[0][cur], inv_s32, bm, bk)
+            xd = x_slabs[0][cur]
+            if signs_hbm is not None:
+                xd = fwht_rows_math(xd, sg_slab[cur], group)
+            x = _quantize_act_tile(xd, inv_s32, bm, bk)
         w = _expand_weight_tile(wp_slab[cur], ws_slab[cur], bk, bn)
         acc = jax.lax.dot(x, w, preferred_element_type=jnp.float32)
         acc_ref[...] += acc * s32
@@ -203,7 +232,9 @@ def _stream_gemm_body(mode: str, nk: int, bm: int, bn: int, bk: int,
 def _stream_gemm_call(mode: str, x_args: tuple, x_scratch: tuple,
                       s32: jax.Array, payload, scales,
                       m: int, n: int, k: int,
-                      bm: int, bn: int, bk: int, interpret: bool):
+                      bm: int, bn: int, bk: int, interpret: bool,
+                      per_row: bool = False,
+                      signs: jax.Array | None = None, group: int = _G):
     assert m % bm == 0 and n % bn == 0 and k % bk == 0
     assert bk % _G == 0 and bn % _G == 0
     nk = k // bk
@@ -211,32 +242,54 @@ def _stream_gemm_call(mode: str, x_args: tuple, x_scratch: tuple,
     any_spec = pl.BlockSpec(memory_space=pltpu.TPUMemorySpace.ANY)
     kernel = functools.partial(
         _split_refs_kernel, mode=mode, nk=nk, bm=bm, bn=bn, bk=bk,
-        n_x=len(x_args))
+        n_x=len(x_args), per_row=per_row, has_signs=signs is not None,
+        group=group)
+    if per_row:
+        w = s32.shape[1]
+        s32_spec = pl.BlockSpec((bm, w), lambda i, j: (i, 0))
+    else:
+        s32_spec = pl.BlockSpec(s32.shape, lambda i, j: (0, 0))
+    in_specs = [s32_spec] + [any_spec] * (len(x_args) + 2)
+    inputs = (s32, *x_args, payload, scales)
+    scratch = [*x_scratch,
+               pltpu.VMEM((2, bk // 2, bn), jnp.uint8),
+               pltpu.VMEM((2, bk // _G, bn // _G), jnp.uint8)]
+    if signs is not None:
+        in_specs.append(any_spec)
+        inputs = inputs + (signs,)
+        scratch.append(pltpu.VMEM((2, 1, bk), jnp.float32))
+    scratch += [pltpu.VMEM((bm, bn), jnp.float32),
+                pltpu.SemaphoreType.DMA((2, 4))]
     return pl.pallas_call(
         kernel,
         grid=grid,
-        in_specs=[pl.BlockSpec(s32.shape, lambda i, j: (0, 0))]
-        + [any_spec] * (len(x_args) + 2),
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
         out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
-        scratch_shapes=[*x_scratch,
-                        pltpu.VMEM((2, bk // 2, bn), jnp.uint8),
-                        pltpu.VMEM((2, bk // _G, bn // _G), jnp.uint8),
-                        pltpu.VMEM((bm, bn), jnp.float32),
-                        pltpu.SemaphoreType.DMA((2, 4))],
+        scratch_shapes=scratch,
         interpret=interpret,
-    )(s32, *x_args, payload, scales)
+    )(*inputs)
 
 
 def _split_refs_kernel(s32_ref, *refs, mode: str, nk: int,
-                       bm: int, bn: int, bk: int, n_x: int):
+                       bm: int, bn: int, bk: int, n_x: int,
+                       per_row: bool, has_signs: bool, group: int):
     x_refs = refs[:n_x]
-    wp_hbm, ws_hbm, o_ref = refs[n_x:n_x + 3]
-    x_slabs = refs[n_x + 3:n_x + 3 + n_x]
-    wp_slab, ws_slab, acc_ref, sem = refs[n_x + 3 + n_x:]
-    _stream_gemm_body(mode, nk, bm, bn, bk, s32_ref, x_refs,
-                      wp_hbm, ws_hbm, o_ref, x_slabs, wp_slab, ws_slab,
-                      acc_ref, sem)
+    wp_hbm, ws_hbm = refs[n_x:n_x + 2]
+    idx = n_x + 2
+    signs_hbm = refs[idx] if has_signs else None
+    idx += 1 if has_signs else 0
+    o_ref = refs[idx]
+    idx += 1
+    x_slabs = refs[idx:idx + n_x]
+    wp_slab, ws_slab = refs[idx + n_x:idx + n_x + 2]
+    idx += n_x + 2
+    sg_slab = refs[idx] if has_signs else None
+    idx += 1 if has_signs else 0
+    acc_ref, sem = refs[idx:idx + 2]
+    _stream_gemm_body(mode, nk, bm, bn, bk, per_row, group, s32_ref,
+                      signs_hbm, x_refs, wp_hbm, ws_hbm, o_ref, x_slabs,
+                      wp_slab, ws_slab, sg_slab, acc_ref, sem)
 
 
 # ---------------------------------------------------------------------------
@@ -273,7 +326,7 @@ def mixfp4_gemm_w4a16(
 # W4A4 (packed activations: the two-dispatch composition's GEMM half)
 # ---------------------------------------------------------------------------
 @functools.partial(
-    jax.jit, static_argnames=("bm", "bn", "bk", "interpret"))
+    jax.jit, static_argnames=("bm", "bn", "bk", "interpret", "per_row"))
 def mixfp4_gemm_w4a4(
     x_payload: jax.Array,
     x_scales: jax.Array,
@@ -286,8 +339,15 @@ def mixfp4_gemm_w4a4(
     bn: int = 256,
     bk: int = 256,
     interpret: bool = False,
+    per_row: bool = False,
 ) -> jax.Array:
-    """y = dequant(packed X) @ dequant(packed W), f32 out."""
+    """y = dequant(packed X) @ dequant(packed W), f32 out.
+
+    ``per_row=True`` reads ``x_scale32`` as an (M,) row-scale vector (the
+    ``quantize_rows(per_row=True)`` contract): the combined output scale
+    becomes an (M, 1) operand tiled with the row grid, so each output row
+    is a pure function of its own activation row.
+    """
     m = x_payload.shape[0]
     k = x_payload.shape[1] * 2
     n = payload.shape[1]
@@ -296,20 +356,27 @@ def mixfp4_gemm_w4a4(
     bm = min(bm, m)
     bn = min(bn, n)
     bk = min(bk, k)
-    s32 = (x_scale32.astype(jnp.float32)
-           * scale32.astype(jnp.float32)).reshape(1, 1)
+    if per_row:
+        xs32 = jnp.broadcast_to(
+            jnp.asarray(x_scale32, jnp.float32).reshape(-1), (m,))
+        s32 = (xs32 * scale32.astype(jnp.float32)).reshape(m, 1)
+    else:
+        s32 = (x_scale32.astype(jnp.float32)
+               * scale32.astype(jnp.float32)).reshape(1, 1)
     return _stream_gemm_call(
         "w4a4", (x_payload, x_scales),
         (pltpu.VMEM((2, bm, bk // 2), jnp.uint8),
          pltpu.VMEM((2, bm, bk // _G), jnp.uint8)),
-        s32, payload, scales, m, n, k, bm, bn, bk, interpret)
+        s32, payload, scales, m, n, k, bm, bn, bk, interpret,
+        per_row=per_row)
 
 
 # ---------------------------------------------------------------------------
 # W4A4 with fused quantize prologue (one dispatch per projection)
 # ---------------------------------------------------------------------------
 @functools.partial(
-    jax.jit, static_argnames=("bm", "bn", "bk", "interpret"))
+    jax.jit,
+    static_argnames=("bm", "bn", "bk", "interpret", "per_row", "rht_group"))
 def mixfp4_gemm_w4a4_fused(
     x: jax.Array,
     x_scale32: jax.Array,
@@ -321,6 +388,9 @@ def mixfp4_gemm_w4a4_fused(
     bn: int = 256,
     bk: int = 256,
     interpret: bool = False,
+    per_row: bool = False,
+    rht_signs: jax.Array | None = None,
+    rht_group: int = _G,
 ) -> jax.Array:
     """y = dequant(quant(X)) @ dequant(packed W), f32 out — the W4A4 MMA
     with the activation row quantizer fused into the kernel prologue.
@@ -343,6 +413,22 @@ def mixfp4_gemm_w4a4_fused(
     non-bitwise MoE stream under ``lax.scan``/``lax.map``.  Halving the
     activation slab traffic is a TPU-side follow-on that needs the select
     pinned first.
+
+    ``per_row=True`` reads ``x_scale32`` as an (M,) row-scale vector — the
+    prologue quantizes row i under scale32[i] and the output row is scaled
+    by ``scale32[i] * w_scale32``, making it a pure function of activation
+    row i (the serve-time batch-independence contract).
+
+    ``rht_signs`` (with ``per_row``) fuses the grouped random Hadamard
+    transform (``core.hadamard.rht`` semantics, shared ``fwht_rows_math``
+    butterfly) ahead of the quantizer in the same VMEM pass: signs stream
+    in the activation's K slabs, the transform is group-local and
+    ``bk % rht_group == 0``, so the result is bitwise what
+    ``fwht_rows -> quantize_rows(per_row=True) -> mixfp4_gemm_w4a4`` would
+    compute on the same grid.  The caller derives the per-row scale from
+    the TRANSFORMED rows (it is the transformed values being quantized)
+    and must have applied the same ``D``/``H`` to the packed weight's K
+    axis at pack time for the transform to cancel in the dot product.
     """
     m, k = x.shape
     n = payload.shape[1]
@@ -350,11 +436,32 @@ def mixfp4_gemm_w4a4_fused(
     bm = min(bm, m)
     bn = min(bn, n)
     bk = min(bk, k)
-    xs32 = jnp.asarray(x_scale32, jnp.float32).reshape(())
-    # (1, 2): [combined output scale, x per-tensor scale for the prologue]
-    s32 = jnp.stack([xs32 * scale32.astype(jnp.float32).reshape(()),
-                     xs32]).reshape(1, 2)
+    signs = None
+    if rht_signs is not None:
+        if rht_group <= 0 or rht_group & (rht_group - 1):
+            raise ValueError(
+                f"rht_group must be a power of two, got {rht_group}")
+        if bk % rht_group or k % rht_group:
+            raise ValueError(
+                f"rht_group={rht_group} must divide bk={bk} and K={k} so "
+                f"K-slab boundaries align with transform groups")
+        if rht_signs.shape != (k,):
+            raise ValueError(
+                f"rht_signs must have shape ({k},), got {rht_signs.shape}")
+        signs = rht_signs.astype(jnp.float32).reshape(1, k)
+    if per_row:
+        xs32 = jnp.broadcast_to(
+            jnp.asarray(x_scale32, jnp.float32).reshape(-1), (m,))
+        # (M, 2): [combined output scale, row scale for the prologue]
+        s32 = jnp.stack(
+            [xs32 * scale32.astype(jnp.float32).reshape(()), xs32], axis=1)
+    else:
+        xs32 = jnp.asarray(x_scale32, jnp.float32).reshape(())
+        # (1, 2): [combined output scale, x per-tensor scale (prologue)]
+        s32 = jnp.stack([xs32 * scale32.astype(jnp.float32).reshape(()),
+                         xs32]).reshape(1, 2)
     return _stream_gemm_call(
         "w4a4_fused", (x.astype(jnp.float32),),
         (pltpu.VMEM((2, bm, bk), jnp.float32),),
-        s32, payload, scales, m, n, k, bm, bn, bk, interpret)
+        s32, payload, scales, m, n, k, bm, bn, bk, interpret,
+        per_row=per_row, signs=signs, group=rht_group)

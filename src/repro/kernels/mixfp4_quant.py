@@ -116,9 +116,17 @@ def _pack_scale(s8: jax.Array, t: jax.Array) -> jax.Array:
     return jnp.where(mag == 0, mag, mag | (t << 7)).astype(jnp.uint8)
 
 
-def _quant_kernel(s32_ref, x_ref, payload_ref, scale_ref):
-    s32 = s32_ref[0, 0]
-    x = x_ref[...].astype(jnp.float32) * (1.0 / s32)
+def _quant_kernel(s32_ref, x_ref, payload_ref, scale_ref, *,
+                  per_row: bool = False):
+    if per_row:
+        # (bm, 1) row-local scales broadcast over the K extent; the
+        # reciprocal-then-multiply sequence matches the scalar branch (and
+        # the fused GEMM prologue) op for op, so a given row's bytes are
+        # identical whichever entry quantizes it.
+        x = x_ref[...].astype(jnp.float32) * (1.0 / s32_ref[...])
+    else:
+        s32 = s32_ref[0, 0]
+        x = x_ref[...].astype(jnp.float32) * (1.0 / s32)
     bm, k = x.shape
     xs = x.reshape(bm, k // _G, _G)
     q, s8, t = quant_block_kernel_math(xs)
@@ -136,13 +144,14 @@ def _pick_bm(m: int, k: int) -> int:
     return max(bm, 1)
 
 
-@functools.partial(jax.jit, static_argnames=("interpret", "bm"))
+@functools.partial(jax.jit, static_argnames=("interpret", "bm", "per_row"))
 def mixfp4_quant_rows(
     x: jax.Array,
     *,
     bm: int | None = None,
     interpret: bool = False,
     scale32: jax.Array | float | None = None,
+    per_row: bool = False,
 ):
     """Quantize (M, K) with 1-D g=16 blocks along K (MixFP4, RNE).
 
@@ -152,10 +161,23 @@ def mixfp4_quant_rows(
     ``scale32`` pins it instead — incremental producers (the packed KV
     cache writes rows at different decode steps) need every row quantized
     under one shared per-tensor scale, not a per-call data-dependent one.
+
+    ``per_row=True`` switches the level-2 scale to a row-local reduction
+    (``scaling.row_scale``): the returned scale32 is an (M,) vector and
+    each row's bytes depend only on that row — the W4A4 serving contract
+    that breaks batch coupling.  ``scale32`` may then pin an (M,) vector.
     """
     m, k = x.shape
     assert k % _G == 0, f"K={k} must be a multiple of {_G}"
-    if scale32 is None:
+    if per_row:
+        if scale32 is None:
+            amax = jnp.max(jnp.abs(x), axis=-1).astype(jnp.float32)
+            # matches scaling.row_scale bit-for-bit (reciprocal multiply)
+            s32 = jnp.where(amax > 0, amax * (1.0 / 2688.0), 1.0)
+        else:
+            s32 = jnp.asarray(scale32, jnp.float32)
+        s32 = jnp.broadcast_to(s32.reshape(-1), (m,)).reshape(m, 1)
+    elif scale32 is None:
         amax = jnp.max(jnp.abs(x)).astype(jnp.float32)
         # matches scaling.tensor_scale bit-for-bit (reciprocal multiply)
         s32 = jnp.where(amax > 0, amax * (1.0 / 2688.0), 1.0).reshape(1, 1)
@@ -166,11 +188,13 @@ def mixfp4_quant_rows(
         bm = _pick_bm(m, k)
     grid = (pl.cdiv(m, bm),)
 
+    s32_spec = (pl.BlockSpec((bm, 1), lambda i: (i, 0)) if per_row
+                else pl.BlockSpec((1, 1), lambda i: (0, 0)))
     payload, scales = pl.pallas_call(
-        _quant_kernel,
+        functools.partial(_quant_kernel, per_row=per_row),
         grid=grid,
         in_specs=[
-            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+            s32_spec,
             pl.BlockSpec((bm, k), lambda i: (i, 0)),
         ],
         out_specs=[
@@ -183,4 +207,4 @@ def mixfp4_quant_rows(
         ],
         interpret=interpret,
     )(s32, x)
-    return payload, scales, s32[0, 0]
+    return payload, scales, (s32[:, 0] if per_row else s32[0, 0])

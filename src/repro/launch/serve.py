@@ -80,17 +80,31 @@ def main(argv=None):
                          "decode through the fused attention kernel); "
                          "default bf16")
     ap.add_argument("--act-quant", default=None,
-                    choices=["bf16", "mixfp4", "mixfp4-2pass", "mixfp4-qdq"],
+                    choices=["bf16", "mixfp4", "mixfp4-2pass",
+                             "mixfp4-2pass-rowscale", "mixfp4-qdq"],
                     help="W4A4 serving: quantize decode/prefill activations "
                          "on the fly (type-in-sign E4M3 block scales) and "
                          "run every projection through the W4A4 kernel — "
                          "both GEMM operands on the wire format.  'mixfp4' "
-                         "fuses the row quantizer into the kernel prologue "
-                         "(ONE dispatch per projection); 'mixfp4-2pass' is "
-                         "the explicit quantize_rows->GEMM composition it "
-                         "is bitwise-identical to; 'mixfp4-qdq' is the "
+                         "fuses the PER-ROW quantizer into the kernel "
+                         "prologue (ONE dispatch per projection; each "
+                         "output row a pure function of its own "
+                         "activations); 'mixfp4-2pass-rowscale' is the "
+                         "explicit quantize_rows(per_row=True)->GEMM "
+                         "composition it is bitwise-identical to; "
+                         "'mixfp4-2pass' is the legacy per-tensor-scale "
+                         "composition (batch-coupled; kept as the A/B "
+                         "baseline); 'mixfp4-qdq' is the "
                          "dequantize-then-W4A16 debugging oracle; default "
                          "bf16 (W4A16)")
+    ap.add_argument("--act-rht", action="store_true",
+                    help="grouped random Hadamard transform on BOTH W4A4 "
+                         "GEMM operands (weights rotated at pack time, "
+                         "activations in the fused prologue — same "
+                         "deterministic signs, so the rotation cancels in "
+                         "the dot product while flattening quantization "
+                         "outliers; requires --act-quant mixfp4 or "
+                         "mixfp4-2pass-rowscale)")
     ap.add_argument("--kv-pool", type=int, default=0, metavar="PAGES",
                     help="serve the packed KV cache as a PAGES-page pool "
                          "with per-request block tables, copy-on-write "
@@ -166,9 +180,15 @@ def main(argv=None):
         if args.model_parallel:
             ap.error("--model-parallel serves sharded PACKED weights; "
                      "drop --no-pack")
-        if args.act_quant in ("mixfp4", "mixfp4-qdq"):
+        if args.act_quant in ("mixfp4", "mixfp4-2pass",
+                              "mixfp4-2pass-rowscale", "mixfp4-qdq"):
             ap.error("--act-quant mixfp4 is the W4A4 path (both operands "
                      "packed); drop --no-pack")
+    if args.act_rht and args.act_quant not in ("mixfp4",
+                                               "mixfp4-2pass-rowscale"):
+        ap.error("--act-rht rotates both W4A4 operands and needs the "
+                 "per-row scales; use --act-quant mixfp4 or "
+                 "mixfp4-2pass-rowscale")
         if args.save_weights:
             ap.error("--save-weights requires packed weights; drop --no-pack "
                      "(the checkpoint format is the packed QTensor tree)")
@@ -193,6 +213,7 @@ def main(argv=None):
                          max_len=args.max_len,
                          pack_weights=not args.no_pack,
                          kv_quant=args.kv_quant, act_quant=args.act_quant,
+                         act_rht=args.act_rht,
                          mesh=mesh, prefill_buckets=args.prefill_buckets,
                          prefill_chunk=args.prefill_chunk or None,
                          kv_pool=args.kv_pool or None,
@@ -216,22 +237,36 @@ def main(argv=None):
         print(f"[serve] QTensor payload/scales NamedSharding specs: "
               f"{shards}")
     if engine.packed_bytes:
-        kern = "W4A4" if engine.act_quant == "mixfp4" else "W4A16"
+        kern = ("W4A4" if engine.act_quant in ("mixfp4", "mixfp4-2pass",
+                                               "mixfp4-2pass-rowscale")
+                else "W4A16")
         print(f"[serve] projection weights held as packed QTensors: "
               f"{engine.packed_bytes / 1024:.0f} KiB "
               f"({engine.compression:.2f}x smaller than bf16), served "
               f"through qmm -> {kern} kernels")
     if engine.act_quant == "mixfp4":
-        print("[serve] W4A4 fused: the row quantizer runs in the W4A4 "
+        print("[serve] W4A4 fused: the PER-ROW quantizer runs in the W4A4 "
               "kernel's prologue — ONE Pallas dispatch per projection, "
-              "full FP4xFP4 MMA analog")
+              "full FP4xFP4 MMA analog; each output row is a pure "
+              "function of its own activations")
+    elif engine.act_quant == "mixfp4-2pass-rowscale":
+        print("[serve] W4A4 two-dispatch (per-row scales): "
+              "quantize_rows(per_row=True) onto each weight's packed K "
+              "grid, then the packed-operand W4A4 kernel (the fused "
+              "path's bitwise oracle)")
     elif engine.act_quant == "mixfp4-2pass":
-        print("[serve] W4A4 two-dispatch: quantize_rows onto each "
-              "weight's packed K grid, then the packed-operand W4A4 "
-              "kernel (the fused path's bitwise oracle)")
+        print("[serve] W4A4 two-dispatch (LEGACY per-tensor scale): "
+              "quantize_rows onto each weight's packed K grid, then the "
+              "packed-operand W4A4 kernel — batch-coupled; kept as the "
+              "A/B baseline for the per-row modes")
     elif engine.act_quant == "mixfp4-qdq":
         print("[serve] W4A4 qdq oracle: same wire bytes, decoded back to "
               "dense rows and served W4A16")
+    if engine.act_rht:
+        print("[serve] grouped RHT on both W4A4 operands: weights rotated "
+              "at pack time, activations in the fused prologue (shared "
+              "deterministic signs — the rotation cancels in the dot "
+              "product, only quantization statistics change)")
     if engine.kv_quant == "mixfp4":
         # bf16 equivalent: K and V tensors at 2 bytes/value
         bf16_kib = (2 * 2 * engine.batch_size * engine.max_len

@@ -25,7 +25,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
-from repro.core import qtensor
+from repro.core import hadamard, qtensor
 from repro.core.qgemm import QuantConfig, qgemm
 
 __all__ = [
@@ -278,12 +278,21 @@ def qlinear(x: jax.Array, w, ctx: "Ctx", tag: int) -> jax.Array:
     prologue (``qmm(x, w, fuse_act_quant=True)`` — ONE Pallas dispatch per
     projection; under a mesh, ``qmm_sharded`` with the fused flag) using
     the same type-in-sign E4M3 block-scale wire encoding as every other
-    wire tensor.  ``"mixfp4-2pass"`` is the explicit two-dispatch
-    composition the fused path is bitwise-identical to —
-    ``quantize_rows`` onto the weight's packed ``Kp`` grid, then the
-    packed-operand W4A4 kernel — kept as the serving-level oracle and for
-    A/B benchmarks.  ``"mixfp4-qdq"`` is the debugging oracle: the SAME
-    wire bytes are decoded back to dense rows and served W4A16 — what the
+    wire tensor, under the PER-ROW level-2 scale contract: each token
+    row's bytes — and therefore its output row — are a pure function of
+    that row, independent of batchmates and padding.
+    ``"mixfp4-2pass-rowscale"`` is the explicit two-dispatch composition
+    the fused path is bitwise-identical to — ``quantize_rows(per_row=True)``
+    onto the weight's packed ``Kp`` grid, then the per-row W4A4 kernel —
+    kept as the serving-level oracle and for A/B benchmarks.
+    ``ctx.act_rht`` layers the grouped random Hadamard transform ahead of
+    the quantizer on both spellings (fused in the same VMEM pass;
+    ``ops.rht_rows`` for the composition) — the packed weight must carry
+    the matching transform (``pack_projections(act_rht=True)``).
+    ``"mixfp4-2pass"`` is the legacy PER-TENSOR two-dispatch spelling
+    (Alg. 1 line 4 verbatim, batch-coupled), kept as the A/B baseline;
+    ``"mixfp4-qdq"`` is its debugging oracle: the SAME per-tensor wire
+    bytes are decoded back to dense rows and served W4A16 — what the
     W4A4 kernel computes, minus its fused in-VMEM decode.
     """
     if isinstance(w, qtensor.QTensor):
@@ -297,15 +306,31 @@ def qlinear(x: jax.Array, w, ctx: "Ctx", tag: int) -> jax.Array:
                 and not isinstance(x, qtensor.QTensor)):
             lead, k = x.shape[:-1], x.shape[-1]
             x2 = x.reshape(-1, k)
-            y = (qtensor.qmm_sharded(x2, w, mesh=m, fuse_act_quant=True)
-                 if sharded else qtensor.qmm(x2, w, fuse_act_quant=True))
+            signs = (hadamard.serve_signs(2 * w.payload.shape[0])
+                     if ctx.act_rht else None)
+            y = (qtensor.qmm_sharded(x2, w, mesh=m, fuse_act_quant=True,
+                                     per_row_act=True, act_rht_signs=signs)
+                 if sharded else
+                 qtensor.qmm(x2, w, fuse_act_quant=True, per_row_act=True,
+                             act_rht_signs=signs))
             return y.reshape(*lead, y.shape[-1]).astype(x.dtype)
-        if (aq in ("mixfp4-2pass", "mixfp4-qdq") and kernel_w
-                and not isinstance(x, qtensor.QTensor)):
+        if (aq in ("mixfp4-2pass", "mixfp4-2pass-rowscale", "mixfp4-qdq")
+                and kernel_w and not isinstance(x, qtensor.QTensor)):
+            from repro.kernels import ops  # deferred: kernels import core
             kp = 2 * w.payload.shape[0]
             lead, k = x.shape[:-1], x.shape[-1]
-            qx = qtensor.quantize_rows(x.reshape(-1, k), pad_to=kp)
-            if aq == "mixfp4-2pass":
+            per_row = aq == "mixfp4-2pass-rowscale"
+            x2 = x.reshape(-1, k)
+            if per_row and ctx.act_rht:
+                # transform on the packed Kp grid BEFORE quantizing — the
+                # same grid/signs the fused prologue and the pack-time
+                # weight transform use, so H/D cancel in the dot product
+                x2f = x2.astype(jnp.float32)
+                if kp != k:
+                    x2f = jnp.pad(x2f, ((0, 0), (0, kp - k)))
+                x2 = ops.rht_rows(x2f, hadamard.serve_signs(kp))
+            qx = qtensor.quantize_rows(x2, pad_to=kp, per_row=per_row)
+            if aq != "mixfp4-qdq":
                 y = (qtensor.qmm_sharded(qx, w, mesh=m) if sharded
                      else qtensor.qmm(qx, w))
             else:
@@ -345,7 +370,8 @@ def is_packable_projection(key: str, leaf) -> bool:
 
 
 def pack_projections(params, method: str = "mixfp4",
-                     block: tuple[int, int] = (16, 16)):
+                     block: tuple[int, int] = (16, 16),
+                     act_rht: bool = False):
     """Replace every projection-weight leaf of a parameter value tree with a
     packed 2-D-tiled :class:`~repro.core.qtensor.QTensor`.
 
@@ -355,11 +381,32 @@ def pack_projections(params, method: str = "mixfp4",
     one QTensor whose children carry the leading dims, which scan/``lax.map``
     slice transparently.  Returns ``(packed_tree, packed_bytes, dense_bytes)``
     where the byte counts cover the converted leaves (dense at bf16 rates).
+
+    ``act_rht=True`` applies the serve-time grouped random Hadamard
+    transform along each projection's K axis BEFORE quantizing (signs from
+    ``hadamard.serve_signs`` — the deterministic diagonal ``qlinear``'s
+    fused prologue applies to activations, so ``(HDx)·(HDW) = x·W`` up to
+    quantization), and records the diagonals in a top-level
+    ``"rht_signs"`` entry of the returned tree ``{str(K): (K,) f32}`` so
+    checkpoints carry the exact ``D`` alongside the transformed bytes.
+    Requires every projection K to be a multiple of the transform group
+    (16) — the transform must live on the same padded grid as the packed
+    payload.
     """
     spec = qtensor.QuantSpec(method, qtensor.BlockLayout2D(*block))
     stats = {"packed": 0, "dense": 0}
+    signs_used: dict[str, jax.Array] = {}
 
     def convert(w):
+        if act_rht:
+            k_ax = w.shape[-2]
+            if k_ax % 16:
+                raise ValueError(
+                    f"pack_projections(act_rht=True): projection K={k_ax} "
+                    f"must be a multiple of the RHT group (16)")
+            signs = hadamard.serve_signs(k_ax)
+            signs_used[str(k_ax)] = signs
+            w = hadamard.rht(w, signs, axis=-2, group=16)
         lead = w.shape[:-2]
         if lead:
             flat = w.reshape((-1,) + w.shape[-2:])
@@ -384,6 +431,9 @@ def pack_projections(params, method: str = "mixfp4",
         return node
 
     packed = walk(params)
+    if act_rht and isinstance(packed, dict):
+        packed = dict(packed)
+        packed["rht_signs"] = signs_used
     return packed, stats["packed"], stats["dense"]
 
 
@@ -402,16 +452,23 @@ class Ctx:
     mesh (None = single-device; MoE then skips its collectives), and the
     serving activation format: ``act_quant="mixfp4"`` makes every
     packed-weight ``qlinear`` run the fused quantize+GEMM W4A4 kernel in
-    one dispatch (``"mixfp4-2pass"`` = the explicit quantize_rows -> W4A4
-    two-dispatch composition it is bitwise-identical to; ``"mixfp4-qdq"``
-    = the dequantize-then-W4A16 oracle; anything else = dense bf16
-    activations, W4A16)."""
+    one dispatch under PER-ROW activation scales
+    (``"mixfp4-2pass-rowscale"`` = the explicit
+    quantize_rows(per_row=True) -> W4A4 two-dispatch composition it is
+    bitwise-identical to; ``"mixfp4-2pass"`` = the legacy per-tensor
+    two-dispatch baseline; ``"mixfp4-qdq"`` = its dequantize-then-W4A16
+    oracle; anything else = dense bf16 activations, W4A16).
+    ``act_rht=True`` (with the per-row spellings) applies the grouped
+    random Hadamard transform to activations ahead of the quantizer —
+    fused into the same GEMM prologue — against RHT-transformed packed
+    weights (``pack_projections(act_rht=True)``)."""
     key: jax.Array
     quant: QuantConfig
     mesh: Any = None
     data_axes: tuple = ("data",)      # ("pod","data") on the multi-pod mesh
     model_axis: str = "model"
     act_quant: str = "bf16"
+    act_rht: bool = False
 
     def fold(self, i: int) -> "Ctx":
         return dataclasses.replace(self, key=jax.random.fold_in(self.key, i))

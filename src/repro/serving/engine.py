@@ -22,11 +22,22 @@ Three hot paths run over packed data end-to-end (docs/serving.md):
   the fly — in the W4A4 kernel's fused prologue, ONE Pallas dispatch per
   projection — using the same type-in-sign E4M3 block-scale wire encoding,
   the paper's full FP4xFP4 MMA analog (Fig. 9 decode on BOTH operands),
-  for the dense, MoE, SSM and hybrid families.  ``"mixfp4-2pass"`` is the
-  explicit ``quantize_rows`` -> W4A4-kernel two-dispatch composition the
-  fused path is bitwise-identical to (the serving-level oracle and the A/B
-  baseline); ``"mixfp4-qdq"`` is the dequantize-then-W4A16 debugging
-  oracle over the same wire bytes.
+  for the dense, MoE, SSM and hybrid families, under PER-ROW level-2
+  activation scales (+4 B/row vs Alg. 1's per-tensor reduction): each
+  token row's quantized bytes are a pure function of that row, so a
+  request's stream is bitwise-independent of its batchmates, of bucket
+  padding, and of chunked-vs-whole prefill.
+  ``"mixfp4-2pass-rowscale"`` is the explicit
+  ``quantize_rows(per_row=True)`` -> W4A4-kernel two-dispatch composition
+  the fused path is bitwise-identical to (the serving-level oracle and
+  the degradation-ladder target); ``"mixfp4-2pass"`` is the legacy
+  per-tensor two-dispatch baseline (batch-coupled, A/B only) and
+  ``"mixfp4-qdq"`` its dequantize-then-W4A16 debugging oracle.
+  ``act_rht=True`` additionally applies the grouped random Hadamard
+  transform to activations inside the same fused prologue (signs shared
+  with the pack-time weight transform, so ``D``/``H`` cancel in every
+  dot product) — the serve-time outlier lever from the paper's training
+  recipe.
 * Admissions prefill through the models' batched ``prefill_slot`` entry:
   the whole prompt runs in ONE jit call at (P, K) prefill shapes through
   the W4A16 kernels, writing all cache rows at once, instead of the
@@ -37,12 +48,9 @@ Three hot paths run over packed data end-to-end (docs/serving.md):
   prefill executable per distinct prompt length: padded suffix rows are
   causally invisible to the real positions, masked at decode until
   overwritten, and the last-position logits index the true length — the
-  emitted stream is bitwise-identical to the unbucketed engine's under
-  W4A16 (dense-activation) serving.  Caveat: under the W4A4 modes the
-  per-tensor *prefill* activation scale spans the padded suffix rows too,
-  so a bucketed W4A4 prefill can differ from the exact-length one within
-  the documented per-tensor-coupling bounds (docs/serving.md); oracle
-  comparisons stay exact because both engines bucket identically.
+  emitted stream is bitwise-identical to the unbucketed engine's, under
+  W4A16 AND the per-row W4A4 modes (a padded suffix row quantizes under
+  its own scale and cannot move a real row's bytes).
   ``prefill_compiles`` / ``prefill_cache_hits`` count the effect.
 
 With ``mesh=`` the engine serves *sharded* packed weights
@@ -181,7 +189,8 @@ def engine_robustness_spec(*, max_queue: int = 64,
     build) and mirrored live by ``ServeEngine.robustness_report``."""
     ladder = []
     if act_quant == "mixfp4":
-        ladder.append({"from": "fused W4A4 GEMM", "to": "2-pass W4A4",
+        ladder.append({"from": "fused W4A4 GEMM",
+                       "to": "2-pass W4A4 (per-row scales)",
                        "trigger": "failed fused dispatch",
                        "bitwise_preserving": True})
     if kv_pool is not None:
@@ -206,7 +215,8 @@ def _prepad_group(act_quant: str) -> str:
     Both W4A4 spellings share one tuner cache entry ('w4a4'), so the fused
     kernel and the 2-pass composition see identical storage — preserving
     their bitwise-comparability."""
-    return "w4a4" if act_quant in ("mixfp4", "mixfp4-2pass") else "w4a16"
+    return ("w4a4" if act_quant in ("mixfp4", "mixfp4-2pass",
+                                    "mixfp4-2pass-rowscale") else "w4a16")
 
 
 def _prepad_tree(params, group: str, m: int):
@@ -237,7 +247,8 @@ class ServeEngine:
     def __init__(self, cfg: ArchConfig, params, *, batch_size: int = 8,
                  max_len: int = 512, pack_weights: bool = True,
                  method: str = "mixfp4", kv_quant: str | None = None,
-                 act_quant: str | None = None, mesh=None,
+                 act_quant: str | None = None, act_rht: bool = False,
+                 mesh=None,
                  prefill_buckets: str | None = "auto",
                  prefill_chunk: int | None = None,
                  kv_pool: int | None = None, kv_page_len: int = 16,
@@ -283,18 +294,32 @@ class ServeEngine:
                     f"kv_page_len={kv_page_len} must be a multiple of 16 "
                     f"(the MixFP4 block) and divide max_len={max_len}")
         if act_quant not in (None, "bf16", "mixfp4", "mixfp4-2pass",
-                             "mixfp4-qdq"):
+                             "mixfp4-2pass-rowscale", "mixfp4-qdq"):
             raise ValueError(
                 f"unknown act_quant {act_quant!r} (expected None, 'bf16', "
-                "'mixfp4' (fused quantize+GEMM), 'mixfp4-2pass' (the "
-                "two-dispatch composition), or the 'mixfp4-qdq' debugging "
-                "oracle)")
-        if act_quant in ("mixfp4", "mixfp4-2pass", "mixfp4-qdq") \
-                and not pack_weights:
+                "'mixfp4' (fused per-row quantize+GEMM), "
+                "'mixfp4-2pass-rowscale' (its two-dispatch bitwise oracle), "
+                "'mixfp4-2pass' (the legacy per-tensor composition), or "
+                "the 'mixfp4-qdq' debugging oracle)")
+        if act_quant in ("mixfp4", "mixfp4-2pass", "mixfp4-2pass-rowscale",
+                         "mixfp4-qdq") and not pack_weights:
             raise ValueError(
                 "act_quant='mixfp4' is the W4A4 path — both GEMM operands "
                 "on the wire format — which needs packed weights; drop "
                 "pack_weights=False")
+        if act_rht:
+            if act_quant not in ("mixfp4", "mixfp4-2pass-rowscale"):
+                raise ValueError(
+                    "act_rht=True rotates activations AND packed weights "
+                    "with a shared grouped Hadamard, which only the "
+                    "per-row W4A4 modes consume; it requires "
+                    "act_quant='mixfp4' or 'mixfp4-2pass-rowscale' "
+                    f"(got {act_quant!r})")
+            if not pack_weights:
+                raise ValueError(
+                    "act_rht=True transforms the weights at pack time "
+                    "(pack_projections(act_rht=True)); drop "
+                    "pack_weights=False")
         if prefill_buckets not in (None, "off", "auto", "pow2-64"):
             raise ValueError(
                 f"unknown prefill_buckets {prefill_buckets!r} (expected "
@@ -339,15 +364,16 @@ class ServeEngine:
         self.max_len = max_len
         self.kv_quant = kv_quant or "bf16"
         self.act_quant = act_quant or "bf16"
+        self.act_rht = act_rht
         self.mesh = mesh
         self.ctx = Ctx(jax.random.PRNGKey(0), cfg.quant, mesh=mesh,
-                       act_quant=self.act_quant)
+                       act_quant=self.act_quant, act_rht=act_rht)
         if pack_weights:
             # Projection weights become packed QTensors; the dense leaves
             # are dropped from this tree (callers should release their own
             # reference if they want the full HBM saving).
             self.params, self.packed_bytes, self.dense_bytes = \
-                pack_projections(params, method=method)
+                pack_projections(params, method=method, act_rht=act_rht)
             if mesh is not None:
                 # model-axis TP placement: payload/scales co-sharded at
                 # block granularity, logical pspec recorded in the aux so
@@ -573,6 +599,14 @@ class ServeEngine:
             restored = dist_sharding.shard_packed_tree(restored, specs,
                                                        self.mesh)
             self.weight_specs = specs
+        if self.act_rht and not (isinstance(restored, dict)
+                                 and "rht_signs" in restored):
+            raise ValueError(
+                "act_rht=True engine restored a checkpoint with no "
+                "'rht_signs' entry: the packed weights were not "
+                "Hadamard-transformed at pack time "
+                "(pack_projections(act_rht=True)), so the activation RHT "
+                "would no longer cancel in the GEMM")
         self.params = restored
         # recompute storage stats from what was actually restored (a cold
         # engine built with pack_weights=False would otherwise keep 0/1.0)
@@ -909,18 +943,21 @@ class ServeEngine:
     # -- graceful degradation ------------------------------------------
     def _degrade_fused(self, err=None):
         """Fused W4A4 dispatch failed: fall back to the explicit
-        quantize_rows -> W4A4-kernel two-dispatch composition.  The fused
-        path is bitwise-identical to it by construction (PR 5, shared
-        'w4a4' tuner group + prepadded storage), so the stream is
-        preserved exactly — only dispatch count and latency change."""
+        quantize_rows(per_row=True) -> W4A4-kernel two-dispatch
+        composition ('mixfp4-2pass-rowscale').  The fused path is
+        bitwise-identical to it by construction (PR 5/9, shared 'w4a4'
+        tuner group + prepadded storage + the same per-row scale
+        derivation), so the stream is preserved exactly — only dispatch
+        count and latency change.  ``act_rht`` carries over: the 2-pass
+        composition applies the same grouped Hadamard before quantizing."""
         if self.act_quant != "mixfp4":
             raise RuntimeError(
                 "fused-dispatch degradation requested but the engine is "
                 f"not on the fused W4A4 path (act_quant={self.act_quant!r})"
             ) from err
-        self.act_quant = "mixfp4-2pass"
+        self.act_quant = "mixfp4-2pass-rowscale"
         self.ctx = Ctx(jax.random.PRNGKey(0), self.cfg.quant, mesh=self.mesh,
-                       act_quant=self.act_quant)
+                       act_quant=self.act_quant, act_rht=self.act_rht)
         self._prefill_lens.clear()
         self._build_jits()
         self.counters["degraded_fused_to_2pass"] += 1

@@ -3,10 +3,13 @@
 The engine's failure handling has to be *deterministic*, not just
 "doesn't crash": the MixFP4 format bit lives in the sign of the E4M3
 scale byte, so a single corrupted byte silently flips a block's
-micro-format, and under W4A4 a request's quantized bytes depend on its
-batchmates (the documented per-tensor coupling).  The only way to pin
-"a poison request leaves every other stream bitwise-identical to a
-fault-free run" is to make the faults themselves reproducible.
+micro-format.  Since PR 9 the W4A4 activation path quantizes under
+per-ROW scales, so a request's bytes are a pure function of its own
+activations — batchmates (including injected poison victims) cannot
+move them.  That turns the sweep's headline check into a hard claim:
+every unaffected stream must be **bitwise-identical** to the
+fault-free run, under W4A16 AND W4A4 alike.  The only way to pin that
+is to make the faults themselves reproducible.
 
 This module is pure host-side machinery (no jax):
 
@@ -19,22 +22,29 @@ This module is pure host-side machinery (no jax):
   ``checkpoint_read`` — and the injector answers with a
   :class:`FaultAction`: raise a typed error, poison a victim's logits
   (NaN), deny a pool-page acquisition, or advance the clock (a "slow"
-  step).  Every fired event lands in ``injector.log``.
+  step).  Every fired event lands in ``injector.log``.  A ``dispatch``
+  fault degrades the fused W4A4 path to its two-dispatch per-row
+  composition (``mixfp4-2pass-rowscale``) — bitwise-preserving by
+  construction, which the sweep verifies rather than assumes.
 * :class:`VirtualClock` — deterministic time.  When an injector is
   installed the engine's deadlines, TTFT accounting, and retry backoff
   all run on this clock, so "p99 TTFT under injected slow steps" is a
   pure function of the seed.
 * :func:`drive` / :func:`chaos_sweep` — the chaos harness: sweep seeded
   fault schedules against the fault-free oracle engine and assert the
-  lifecycle invariants (ISSUE 7): unaffected streams bitwise-identical,
-  affected streams a strict prefix, every fatal fault resolving to
-  exactly one terminal state, and no pool page / prefix-tree refcount
-  leaks after drain.
+  lifecycle invariants (ISSUE 7/9): unaffected streams
+  bitwise-identical to the fault-free oracle (full identity, not
+  "within coupling bounds" — the per-row scales make the W4A4 run an
+  exact oracle too), affected streams a strict prefix, every fatal
+  fault resolving to exactly one terminal state, and no pool page /
+  prefix-tree refcount leaks after drain.
 
 CLI (the CI ``chaos-smoke`` leg)::
 
     PYTHONPATH=src python -m repro.serving.faults \
         --families dense,moe,ssm,hybrid --seeds 0,1,2
+    PYTHONPATH=src python -m repro.serving.faults \
+        --families dense,ssm --seeds 0,1 --act-quant mixfp4
 """
 from __future__ import annotations
 
@@ -57,7 +67,7 @@ SITES = ("prefill", "decode", "cow_copy", "pool_acquire", "checkpoint_read")
 #   nan       - poison the victim request's logits (host-side NaN)
 #   slow      - advance the clock by delay_ms (an injected slow step)
 #   dispatch  - raise a failed-kernel-dispatch error (the engine degrades
-#               fused -> 2-pass W4A4 when it can)
+#               fused -> 2-pass per-row W4A4 when it can, bitwise)
 #   deny      - pool_acquire only: the pool pretends to be exhausted
 KINDS = ("error", "transient", "nan", "slow", "dispatch", "deny")
 
@@ -354,7 +364,11 @@ def schedule_for_seed(seed: int, *, n_requests: int) -> list:
 
 def check_invariants(oracle: dict, got: dict, injector,
                      pool_stats: dict | None) -> list:
-    """The chaos-sweep assertions (W4A16 families).  Returns a list of
+    """The chaos-sweep assertions.  Full *bitwise* identity against the
+    fault-free oracle for every FINISHED stream and strict-prefix for
+    every interrupted one — under W4A16 and, since the per-row W4A4
+    scales (PR 9), under ``act_quant='mixfp4'`` too (no per-tensor
+    batch coupling left to excuse a byte of drift).  Returns a list of
     violation strings (empty = pass)."""
     bad = []
     fatal = injector.fatal_victims()
@@ -462,6 +476,11 @@ def main(argv=None) -> int:
     ap.add_argument("--seeds", default="0,1,2")
     ap.add_argument("--requests", type=int, default=4)
     ap.add_argument("--new-tokens", type=int, default=4)
+    ap.add_argument("--act-quant", default=None,
+                    help="engine act_quant= for the sweep (e.g. 'mixfp4' "
+                         "runs the fused per-row W4A4 path — the bitwise "
+                         "invariants hold there too, and a 'dispatch' "
+                         "fault exercises the fused->2-pass degradation)")
     args = ap.parse_args(argv)
     seeds = [int(s) for s in args.seeds.split(",") if s]
     ok = True
@@ -476,6 +495,8 @@ def main(argv=None) -> int:
         # can exceed cap (>= 4), so the bitwise oracle holds below that
         batch = 2
         kw: dict = dict(batch_size=batch, max_len=32)
+        if args.act_quant:
+            kw.update(act_quant=args.act_quant)
         if family == "dense":
             kw.update(kv_quant="mixfp4", kv_pool=2 * batch * 2 + 1,
                       kv_page_len=16)

@@ -384,7 +384,7 @@ def test_fused_dispatch_degrades_to_2pass_bitwise(dense_cfg, dense_params):
     # changes dispatch count only — never a token
     assert got["streams"] == oracle["streams"]
     assert all(s is RequestState.FINISHED for s in got["states"].values())
-    assert eng.act_quant == "mixfp4-2pass"
+    assert eng.act_quant == "mixfp4-2pass-rowscale"
     assert eng.counters["degraded_fused_to_2pass"] == 1
 
 

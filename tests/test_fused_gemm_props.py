@@ -106,6 +106,63 @@ def test_fused_both_microformats_appear_and_match(seed, m, k):
         np.asarray(qtensor.qmm(qx, qw, interpret=True)))
 
 
+@settings(max_examples=12, deadline=None)
+@given(st.integers(0, 10_000),
+       st.integers(1, 33),        # M: incl. 1-row decode and prime rows
+       st.integers(1, 70),        # K: mostly NOT multiples of 16 (padding)
+       st.integers(1, 40),        # N: padded to 16-lane tiles
+       st.sampled_from(["mixfp4", "nvfp4"]))
+def test_fused_per_row_bitwise_random_shapes(seed, m, k, n, method):
+    """The serving default (per-row scale32): the fused prologue's
+    (bm,) scale slab must reproduce ``quantize_rows(per_row=True)`` ->
+    W4A4 kernel bit for bit over random shapes and padding — including
+    padded rows, which ride under the all-zero guard scale 1.0 in both
+    paths."""
+    x, qw = _operands(seed, m, k, n, method)
+    y_fused = qtensor.qmm(x, qw, fuse_act_quant=True, per_row_act=True,
+                          interpret=True)
+    qx = qtensor.quantize_rows(x, pad_to=2 * qw.payload.shape[0],
+                               per_row=True, interpret=True)
+    assert qx.scale32.shape == (m,)
+    np.testing.assert_array_equal(
+        np.asarray(y_fused),
+        np.asarray(qtensor.qmm(qx, qw, interpret=True)))
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.integers(0, 10_000),
+       st.integers(1, 17),               # M
+       st.sampled_from([16, 32, 48, 64]),  # K on the packed grid (RHT
+                                           # needs K % group == 0)
+       st.integers(1, 40))               # N
+def test_fused_rht_prologue_bitwise_and_cancels(seed, m, k, n):
+    """Serve-time RHT (``act_rht=``): the fused kernel's grouped-FWHT
+    pre-quantization stage must equal ``ops.rht_rows`` -> per-row
+    ``quantize_rows`` -> W4A4 kernel bitwise (shared ``fwht_rows_math``
+    body, f32 elementwise, no contraction).  And because the weight was
+    rotated with the SAME signs at pack time, the two rotations cancel in
+    the dot product — the output stays a 4-bit-accurate estimate of
+    x @ w, which would fail loudly if either side used different signs."""
+    from repro.core import hadamard
+    kx, kw = jax.random.split(jax.random.PRNGKey(seed))
+    x = jax.random.normal(kx, (m, k)) * 2.0
+    w = jax.random.normal(kw, (k, n)) * 0.3
+    signs = hadamard.serve_signs(k)
+    w_rot = hadamard.rht(w, signs, axis=0, group=16)
+    qw = quantize(w_rot, QuantSpec("mixfp4", BlockLayout2D()))
+    y_fused = qtensor.qmm(x, qw, fuse_act_quant=True, per_row_act=True,
+                          act_rht_signs=signs, interpret=True)
+    xr = ops.rht_rows(x, signs, group=16, interpret=True)
+    qx = qtensor.quantize_rows(xr, pad_to=2 * qw.payload.shape[0],
+                               per_row=True, interpret=True)
+    np.testing.assert_array_equal(
+        np.asarray(y_fused),
+        np.asarray(qtensor.qmm(qx, qw, interpret=True)))
+    want = np.asarray(x @ w)
+    scale = np.abs(want).max() + 1e-6
+    assert np.abs(np.asarray(y_fused) - want).max() / scale < 0.5
+
+
 @settings(max_examples=6, deadline=None)
 @given(st.integers(0, 10_000))
 def test_fused_pinned_scale32_matches_pinned_composition(seed):

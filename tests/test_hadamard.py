@@ -62,3 +62,46 @@ def test_fwht_kernel_matches_ref():
         out_r = ref.ref_fwht_rows(x, s, group=g)
         np.testing.assert_allclose(np.asarray(out_k), np.asarray(out_r),
                                    atol=1e-5)
+
+
+@pytest.mark.parametrize("m", [1, 3, 7])
+@pytest.mark.parametrize("g", [8, 16, 32])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_fwht_kernel_matches_rht_bitwise(m, g, dtype):
+    """Kernel vs ``hadamard.rht`` parity — BITWISE, not approximate.
+
+    ``fwht_rows_math`` mirrors ``rht`` stage for stage (same elementwise
+    adds/subs, same ``group ** -0.5`` multiply, no reductions), and the
+    kernel evaluates it in f32 regardless of input dtype before casting
+    back — so the comparison is exact equality against the f32 reference
+    cast to the input dtype.  This is the guarantee the serve-time RHT
+    (``act_rht=``) leans on: the fused GEMM prologue and the out-of-kernel
+    per-row scale derivation must see identical transformed values.  Odd
+    row counts exercise the kernel's bm fallback to 1-row tiles; the group
+    count 3 per row is deliberately not a power of two.
+    """
+    from repro.kernels import ops
+    k = 3 * g
+    x = jax.random.normal(jax.random.PRNGKey(m * 31 + g), (m, k)).astype(dtype)
+    s = hadamard.serve_signs(k)
+    out_k = ops.rht_rows(x, s, group=g)
+    want = hadamard.rht(x.astype(jnp.float32), s, axis=-1,
+                        group=g).astype(dtype)
+    assert out_k.dtype == dtype
+    np.testing.assert_array_equal(np.asarray(out_k), np.asarray(want))
+
+
+def test_fwht_kernel_rejects_bad_group_and_signs():
+    """A non-power-of-two group has no butterfly factorization: the kernel
+    must refuse rather than silently compute a partial transform (same
+    contract as ``hadamard.fwht``).  Shape mismatches likewise fail fast."""
+    from repro.kernels import ops
+    x = jnp.ones((4, 48), jnp.float32)
+    with pytest.raises(ValueError, match="power of two"):
+        ops.rht_rows(x, jnp.ones((48,)), group=12)
+    with pytest.raises(ValueError, match="not divisible"):
+        ops.rht_rows(x, jnp.ones((48,)), group=32)
+    with pytest.raises(ValueError, match="signs"):
+        ops.rht_rows(x, jnp.ones((16,)), group=16)
+    with pytest.raises(ValueError, match="power of two"):
+        hadamard.fwht(jnp.ones((2, 12)))

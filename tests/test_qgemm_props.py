@@ -88,6 +88,91 @@ def test_w4a4_tile_sweep_matches_oracle(seed, bm, bk, bn):
     _assert_matches_oracle(y, qx, qw, n)
 
 
+@settings(max_examples=12, deadline=None)
+@given(st.integers(0, 10_000),
+       st.integers(2, 16),        # batch rows
+       st.integers(8, 48),        # K incl. non-multiples of 16
+       st.integers(0, 15))
+def test_w4a4_per_row_batch_independence(seed, m, k, row_seed):
+    """THE serving W4A4 contract (per-row scale32): a row's wire bytes and
+    its GEMM output row are a pure function of that row — replacing every
+    OTHER row in the batch, including with a 1000x outlier that would move
+    a per-tensor amax by orders of magnitude, changes nothing.  Bitwise,
+    not approximate.  The legacy per-tensor path provably violates this on
+    the same inputs (its scale32 moves), which is the regression this
+    property pins against."""
+    i = row_seed % m
+    kx, kr = jax.random.split(jax.random.PRNGKey(seed))
+    x_a = jax.random.normal(kx, (m, k)) * 2.0
+    other = jax.random.normal(kr, (m, k)) * 2.0
+    other = other.at[m // 2, 0].set(1000.0)  # outlier in a non-victim row
+    x_b = other.at[i].set(x_a[i])
+    if i == m // 2:
+        x_b = x_b.at[(i + 1) % m, 0].set(1000.0)
+    _, qw = _operands(seed, m, k, 24, "mixfp4")
+    pad = 2 * qw.payload.shape[0]
+    qa = qtensor.quantize_rows(x_a, pad_to=pad, per_row=True, interpret=True)
+    qb = qtensor.quantize_rows(x_b, pad_to=pad, per_row=True, interpret=True)
+    assert qa.scale32.shape == (m,)
+    np.testing.assert_array_equal(np.asarray(qa.payload[i]),
+                                  np.asarray(qb.payload[i]))
+    np.testing.assert_array_equal(np.asarray(qa.scales[i]),
+                                  np.asarray(qb.scales[i]))
+    np.testing.assert_array_equal(np.asarray(qa.scale32[i]),
+                                  np.asarray(qb.scale32[i]))
+    y_a = qtensor.qmm(qa, qw, interpret=True)
+    y_b = qtensor.qmm(qb, qw, interpret=True)
+    np.testing.assert_array_equal(np.asarray(y_a[i]), np.asarray(y_b[i]))
+    # and the legacy per-tensor quantizer is batch-coupled on these exact
+    # inputs: the injected outlier moves the shared scale32
+    ta = qtensor.quantize_rows(x_a, pad_to=pad, interpret=True)
+    tb = qtensor.quantize_rows(x_b, pad_to=pad, interpret=True)
+    assert float(ta.scale32) != float(tb.scale32)
+
+
+def test_w4a4_per_row_outlier_row_does_not_degrade_neighbors():
+    """Accuracy motivation for per-row scale32.  The two-level format
+    shields per-tensor mode from moderate outliers (the uint8 E4M3 block
+    scales absorb ~2^8 of dynamic range), but an extreme spiky row pushes
+    every quiet row's block scale into E4M3 underflow and their codes
+    collapse toward zero.  Per-row scales are immune BY CONSTRUCTION: the
+    quiet rows' wire bytes — and therefore their GEMM output rows — are
+    bit-identical with and without the spike (their solo-quantization
+    accuracy), while the per-tensor error blows up.  Weight error is shared
+    by both paths (same qw), so the gap isolates the activation scale
+    policy."""
+    kx, kw_ = jax.random.split(jax.random.PRNGKey(7))
+    m, k, n = 8, 64, 32
+    x_quiet = jax.random.normal(kx, (m, k)) * 2.0
+    x = x_quiet.at[0].multiply(1e6)
+    w = jax.random.normal(kw_, (k, n)) * 0.3
+    qw = quantize(w, QuantSpec("mixfp4", BlockLayout2D()))
+    pad = 2 * qw.payload.shape[0]
+    y_true = jnp.asarray(x, jnp.float32) @ qw.dequantize()
+    q_t = qtensor.quantize_rows(x, pad_to=pad, interpret=True)
+    q_r = qtensor.quantize_rows(x, pad_to=pad, per_row=True, interpret=True)
+    q_solo = qtensor.quantize_rows(x_quiet, pad_to=pad, per_row=True,
+                                   interpret=True)
+    quiet = np.s_[1:]  # rows that did NOT spike
+    # bitwise: the spike moved nothing in the quiet rows' per-row bytes
+    np.testing.assert_array_equal(np.asarray(q_r.payload[quiet]),
+                                  np.asarray(q_solo.payload[quiet]))
+    np.testing.assert_array_equal(np.asarray(q_r.scales[quiet]),
+                                  np.asarray(q_solo.scales[quiet]))
+    np.testing.assert_array_equal(np.asarray(q_r.scale32[quiet]),
+                                  np.asarray(q_solo.scale32[quiet]))
+    y_t = qtensor.qmm(q_t, qw, interpret=True)
+    y_r = qtensor.qmm(q_r, qw, interpret=True)
+    y_solo = qtensor.qmm(q_solo, qw, interpret=True)
+    np.testing.assert_array_equal(np.asarray(y_r[quiet]),
+                                  np.asarray(y_solo[quiet]))
+    ref_scale = float(jnp.abs(y_true[quiet]).max()) + 1e-6
+    err_t = float(jnp.abs(y_t[quiet] - y_true[quiet]).max()) / ref_scale
+    err_r = float(jnp.abs(y_r[quiet] - y_true[quiet]).max()) / ref_scale
+    assert err_r < 0.1, err_r           # quiet rows keep 4-bit accuracy
+    assert err_r < 0.5 * err_t, (err_r, err_t)
+
+
 @settings(max_examples=10, deadline=None)
 @given(st.integers(0, 10_000), st.integers(2, 24), st.integers(1, 60))
 def test_w4a4_both_microformats_appear_and_match(seed, m, k):

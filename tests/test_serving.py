@@ -523,6 +523,13 @@ def test_serving_bench_emits_expected_json(tmp_path):
     assert aq["gemm_dispatches_per_projection"]["w4a16"] == 1.0
     assert aq["gemm_dispatches_per_projection"]["w4a4"] == 1.0
     assert aq["gemm_dispatches_per_projection"]["w4a4_2pass"] == 2.0
+    # per-row scale32 / serve-time RHT accuracy section (CI smoke leg
+    # asserts the full schema; here just the acceptance bits)
+    ar = on_disk["act_rowscale"]
+    assert set(ar["families"]) == {"dense", "moe", "ssm", "hybrid"}
+    assert ar["all_families_not_worse"] is True, ar
+    assert all(f["per_row_batch_invariant"] for f in
+               ar["families"].values()), ar
     # the paged pool section: paged==fixed streams, real prefix hits
     kp = on_disk["kv_pool"]
     assert kp["paged_matches_fixed"] is True
@@ -565,35 +572,39 @@ def _family_cfg(family: str):
 
 @pytest.mark.parametrize("family", ["dense", "moe", "ssm", "hybrid"])
 def test_w4a4_stream_matches_dequantize_oracle(family):
-    """act_quant='mixfp4' decode must produce the identical token stream
-    to the dequantize-then-W4A16 oracle ('mixfp4-qdq': the SAME wire
-    bytes, decoded in the kernel's factored-scale form and served through
-    the W4A16 kernel) — so the W4A4 kernel's in-VMEM dual-format decode is
-    pinned against an independent path, per model family."""
+    """Each W4A4 spelling is pinned against its wire-compatible oracle,
+    per model family: the fused per-row path ('mixfp4') against the
+    'mixfp4-2pass-rowscale' composition (quantize_rows(per_row=True) ->
+    W4A4 kernel — SAME per-row bytes, independent dispatch structure), and
+    the legacy per-tensor composition ('mixfp4-2pass') against the
+    dequantize-then-W4A16 oracle ('mixfp4-qdq' — SAME per-tensor bytes,
+    decoded in the kernel's factored-scale form through the W4A16 kernel).
+    The per-row and per-tensor pairs quantize with DIFFERENT scale32
+    policies, so only within-pair equality is exact."""
     cfg, seed = _family_cfg(family)
     params, _ = build_model(cfg).init(jax.random.PRNGKey(seed))
     streams = {}
-    for aq in ("mixfp4", "mixfp4-qdq"):
+    for aq in ("mixfp4", "mixfp4-2pass-rowscale", "mixfp4-2pass",
+               "mixfp4-qdq"):
         eng = ServeEngine(cfg, params, batch_size=1, max_len=16,
                           act_quant=aq)
         streams[aq] = _serve_one(eng, [3, 4, 5], 4)
-    assert streams["mixfp4"] == streams["mixfp4-qdq"], (family, streams)
+    assert streams["mixfp4"] == streams["mixfp4-2pass-rowscale"], \
+        (family, streams)
+    assert streams["mixfp4-2pass"] == streams["mixfp4-qdq"], \
+        (family, streams)
     assert all(0 <= t < cfg.vocab for t in streams["mixfp4"])
 
 
 def test_w4a4_concurrent_ragged_matches_oracle(small_cfg):
     """W4A4 continuous batching at per-slot ragged lengths: each slot's
     activations quantize at its own cache position, and the concurrent
-    W4A4 streams equal the oracle engine's (same admissions, same batch
-    shapes, same wire bytes).
-
-    NOTE the deliberate scope: concurrent is compared to concurrent, not
-    to solo engines.  The level-2 activation scale is the paper's
-    PER-TENSOR scale (Alg. 1 line 4) derived per decode step over the
-    whole batch's rows, so a slot's quantized bytes legitimately depend
-    on its batchmates' activation range — the documented W4A4 batch
-    coupling (docs/serving.md "Accuracy caveats"), unlike W4A16/packed-KV
-    where concurrent logits match solo to tolerance."""
+    fused streams equal the per-row composition oracle's bitwise (same
+    admissions, same batch shapes, same per-row wire bytes).  The old
+    per-tensor batch-coupling caveat that used to live here is gone: a
+    row's scale32 is derived from that row alone, so ragged batchmates
+    cannot move anyone's bytes (see
+    test_w4a4_stream_invariant_to_batchmates for the direct pin)."""
     model = build_model(small_cfg)
     params, _ = model.init(jax.random.PRNGKey(11))
     pa = np.array([3, 1, 4, 1, 5], np.int32)
@@ -610,9 +621,39 @@ def test_w4a4_concurrent_ragged_matches_oracle(small_cfg):
                 out[uid].append(tok)
         return out
 
-    got, want = both("mixfp4"), both("mixfp4-qdq")
+    got, want = both("mixfp4"), both("mixfp4-2pass-rowscale")
     assert got == want
     assert all(len(v) == 4 for v in got.values()), got
+
+
+def test_w4a4_stream_invariant_to_batchmates(small_cfg):
+    """THE serving-level batch-independence pin: the same request, served
+    under act_quant='mixfp4' next to two DIFFERENT batchmates (different
+    content and length, one with a deliberately outlier-heavy prompt
+    embedding path), emits the bitwise-identical token stream.  Under the
+    old per-tensor activation scale this diverged — the batchmate's
+    activation range moved the shared scale32 and with it the victim's
+    wire bytes."""
+    model = build_model(small_cfg)
+    params, _ = model.init(jax.random.PRNGKey(13))
+    victim = np.array([3, 1, 4, 1, 5], np.int32)
+
+    def stream_of_victim(mate_prompt):
+        eng = ServeEngine(small_cfg, params, batch_size=2, max_len=32,
+                          act_quant="mixfp4")
+        eng.add_request(Request(uid=0, prompt=victim, max_new_tokens=5))
+        eng.add_request(Request(uid=1, prompt=mate_prompt,
+                                max_new_tokens=5))
+        out = {0: [], 1: []}
+        while any(s is not None for s in eng.slots):
+            for uid, tok in eng.step():
+                out[uid].append(tok)
+        assert len(out[0]) == 5
+        return out[0]
+
+    a = stream_of_victim(np.array([2, 7, 1, 8], np.int32))
+    b = stream_of_victim(np.array([60, 61, 62, 63, 1, 2, 3], np.int32))
+    assert a == b, (a, b)
 
 
 def test_w4a4_composes_with_packed_kv(small_cfg):
@@ -623,12 +664,12 @@ def test_w4a4_composes_with_packed_kv(small_cfg):
     model = build_model(small_cfg)
     params, _ = model.init(jax.random.PRNGKey(7))
     streams = {}
-    for aq in ("mixfp4", "mixfp4-qdq"):
+    for aq in ("mixfp4", "mixfp4-2pass-rowscale"):
         eng = ServeEngine(small_cfg, params, batch_size=1, max_len=32,
                           kv_quant="mixfp4", act_quant=aq)
         assert isinstance(eng.cache["k"], qtensor.QTensor)
         streams[aq] = _serve_one(eng, [9, 8, 7], 5)
-    assert streams["mixfp4"] == streams["mixfp4-qdq"], streams
+    assert streams["mixfp4"] == streams["mixfp4-2pass-rowscale"], streams
 
 
 def test_w4a4_validation(small_cfg):
@@ -662,17 +703,19 @@ def test_pack_projections_skips_non_projection_leaves():
 # ---------------------------------------------------------------------------
 @pytest.mark.parametrize("family", ["dense", "moe"])
 def test_w4a4_fused_stream_matches_two_dispatch(family):
-    """act_quant='mixfp4' (fused prologue) must emit the IDENTICAL token
-    stream to 'mixfp4-2pass' (quantize_rows -> W4A4 kernel): the kernels
-    are bitwise-identical, so even the argmax chain cannot diverge."""
+    """act_quant='mixfp4' (fused per-row prologue) must emit the IDENTICAL
+    token stream to 'mixfp4-2pass-rowscale' (quantize_rows(per_row=True)
+    -> W4A4 kernel): the kernels are bitwise-identical, so even the argmax
+    chain cannot diverge."""
     cfg, seed = _family_cfg(family)
     params, _ = build_model(cfg).init(jax.random.PRNGKey(seed))
     streams = {}
-    for aq in ("mixfp4", "mixfp4-2pass"):
+    for aq in ("mixfp4", "mixfp4-2pass-rowscale"):
         eng = ServeEngine(cfg, params, batch_size=1, max_len=16,
                           act_quant=aq)
         streams[aq] = _serve_one(eng, [3, 4, 5], 4)
-    assert streams["mixfp4"] == streams["mixfp4-2pass"], (family, streams)
+    assert streams["mixfp4"] == streams["mixfp4-2pass-rowscale"], \
+        (family, streams)
 
 
 def test_w4a4_fused_one_dispatch_per_projection(small_cfg):
@@ -701,6 +744,10 @@ def test_w4a4_fused_one_dispatch_per_projection(small_cfg):
     assert c_fused == {"gemm_w4a4_fused": n_proj}, (c_fused, n_proj)
     c_two = counts("mixfp4-2pass")
     assert c_two == {"quantize_rows": n_proj, "gemm_w4a4": n_proj}, c_two
+    # the per-row composition has the same dispatch structure as the
+    # legacy per-tensor one — only the scale32 shape differs
+    c_rs = counts("mixfp4-2pass-rowscale")
+    assert c_rs == {"quantize_rows": n_proj, "gemm_w4a4": n_proj}, c_rs
 
 
 def test_prefill_bucketing_stream_bitwise_and_compile_reuse(small_cfg):
@@ -735,18 +782,108 @@ def test_prefill_bucketing_stream_bitwise_and_compile_reuse(small_cfg):
     assert eng_b.prefill_dispatches == eng_b.admissions == 4
 
 
+def test_w4a4_act_rht_stream_matches_composition(small_cfg):
+    """Serve-time RHT (``act_rht=True``): the fused engine (in-prologue
+    grouped FWHT) must emit bitwise the per-row two-dispatch engine's
+    stream — both rotate activations with ``hadamard.serve_signs`` on the
+    packed K grid and serve weights rotated with the SAME signs at pack
+    time, so the transform cancels in every dot product."""
+    model = build_model(small_cfg)
+    params, _ = model.init(jax.random.PRNGKey(19))
+    streams = {}
+    for aq in ("mixfp4", "mixfp4-2pass-rowscale"):
+        eng = ServeEngine(small_cfg, params, batch_size=1, max_len=16,
+                          act_quant=aq, act_rht=True)
+        assert eng.act_rht
+        streams[aq] = _serve_one(eng, [3, 4, 5], 4)
+    assert streams["mixfp4"] == streams["mixfp4-2pass-rowscale"], streams
+    # and the validation surface: RHT rides the per-row modes only
+    with pytest.raises(ValueError, match="act_rht"):
+        ServeEngine(small_cfg, params, batch_size=1, max_len=16,
+                    act_quant="mixfp4-2pass", act_rht=True)
+    with pytest.raises(ValueError, match="act_rht"):
+        ServeEngine(small_cfg, params, batch_size=1, max_len=16,
+                    act_rht=True)
+
+
+def test_w4a4_prefill_bucketing_stream_bitwise(small_cfg):
+    """Bucketed prefill under act_quant='mixfp4' must emit BITWISE the
+    unbucketed engine's streams.  This is the regression the per-row
+    activation scale32 fixes: with the old per-tensor scale the bucket's
+    zero-padded suffix rows sat in the same amax reduction as the real
+    prompt rows, so padding a prompt from 5 to 8 rows could move every
+    real row's wire bytes.  Per-row scales make a padded row's existence
+    invisible to its neighbours — exact equality, no tolerance."""
+    model = build_model(small_cfg)
+    params, _ = model.init(jax.random.PRNGKey(3))
+    prompts = [[3, 4, 5], [1, 2, 3, 4, 5], [9, 8, 7, 6], [2, 2]]
+
+    def run(buckets):
+        eng = ServeEngine(small_cfg, params, batch_size=2, max_len=32,
+                          act_quant="mixfp4", prefill_buckets=buckets)
+        streams = {}
+        pending = [Request(uid=i, prompt=np.array(p, np.int32),
+                           max_new_tokens=4)
+                   for i, p in enumerate(prompts)]
+        while pending or any(s is not None for s in eng.slots):
+            while pending and eng.add_request(pending[0]):
+                pending.pop(0)
+            for uid, tok in eng.step():
+                streams.setdefault(uid, []).append(tok)
+        return streams, eng
+
+    bucketed, eng_b = run("pow2-64")
+    exact, _ = run("off")
+    assert bucketed == exact, (bucketed, exact)
+    # the buckets really did pad: 3, 5, 4, 2 all share ONE compiled shape
+    assert eng_b.prefill_compiles == 1, eng_b.prefill_compiles
+
+
+def test_w4a4_chunked_prefill_matches_whole_prompt(small_cfg):
+    """Chunked prefill under act_quant='mixfp4' must emit BITWISE the
+    whole-prompt engine's streams: each chunk's rows quantize with their
+    own per-row scales, so neither the chunk boundary placement nor the
+    final chunk's padding can move a real row's bytes (with the per-tensor
+    scale the per-chunk amax differed from the whole-prompt amax, so
+    chunked W4A4 was only same-schedule deterministic)."""
+    model = build_model(small_cfg)
+    params, _ = model.init(jax.random.PRNGKey(17))
+    prompts = [np.array([9, 8, 7, 3, 1], np.int32),
+               (np.arange(30, dtype=np.int32) * 7 + 1) % small_cfg.vocab,
+               np.array([1, 2], np.int32)]
+
+    def drive(prefill_chunk):
+        eng = ServeEngine(small_cfg, params, batch_size=2, max_len=48,
+                          act_quant="mixfp4", prefill_chunk=prefill_chunk)
+        reqs = [Request(uid=i, prompt=p, max_new_tokens=4)
+                for i, p in enumerate(prompts)]
+        eng.add_request(reqs[0])
+        eng.add_request(reqs[1])      # chunked while req 0 decodes
+        eng.step()
+        eng.submit(reqs[2])           # queued behind the full batch
+        guard = 0
+        while any(len(r.generated) < 4 for r in reqs):
+            eng.step()
+            guard += 1
+            assert guard < 200, "engine made no progress"
+        return {r.uid: list(r.generated) for r in reqs}
+
+    assert drive(4) == drive(None)
+
+
 def test_prefill_bucketing_composes_with_packed_kv_and_w4a4(small_cfg):
     """Bucketing + packed KV + fused W4A4 compose: both engines bucket
-    identically, so the fused stream still matches the 2pass oracle."""
+    identically, so the fused stream still matches the per-row 2pass
+    oracle."""
     model = build_model(small_cfg)
     params, _ = model.init(jax.random.PRNGKey(5))
     streams = {}
-    for aq in ("mixfp4", "mixfp4-2pass"):
+    for aq in ("mixfp4", "mixfp4-2pass-rowscale"):
         eng = ServeEngine(small_cfg, params, batch_size=1, max_len=32,
                           kv_quant="mixfp4", act_quant=aq,
                           prefill_buckets="pow2-64")
         streams[aq] = _serve_one(eng, [9, 8, 7], 5)
-    assert streams["mixfp4"] == streams["mixfp4-2pass"], streams
+    assert streams["mixfp4"] == streams["mixfp4-2pass-rowscale"], streams
 
 
 def test_bucket_len_ladder():
