@@ -34,7 +34,14 @@ per commit:
   TTFT and inter-token latency (virtual clock), the stall-free-decode
   assertion (no step spends more than the chunk budget on prefill) and
   the chunked==unchunked stream oracle (``results["frontend"]``;
-  asserted by the CI leg).
+  asserted by the CI leg),
+* crash-safe serving costs (``results["durability"]``; also asserted by
+  the CI leg): journaling overhead on steady-state decode throughput
+  (``journal_sync`` off vs batch vs always), recovery wall time vs
+  in-flight count with the resumed streams checked bitwise against a
+  fault-free oracle, and the drain completion rate under seeded Poisson
+  load (every accepted request FINISHED, every post-drain arrival
+  rejected with the typed ``draining`` reason).
 
 Run:  PYTHONPATH=src python -m benchmarks.serving_bench [--tiny] [--out F]
       [--act-quant mixfp4]
@@ -643,6 +650,171 @@ def _frontend_section(cfg, params, batch: int, max_len: int, *,
     return out
 
 
+def _durability_section(cfg, params, batch: int, max_len: int, *,
+                        n_new: int = 40, seed: int = 0) -> dict:
+    """Crash-safe-serving costs (``results["durability"]``; asserted by
+    the CI serving-bench-smoke leg):
+
+    * journaling overhead on steady-state decode throughput — the same
+      full-batch decode drive with the request journal off vs on
+      (``journal_sync='batch'``: one buffered write per token, an OS
+      flush per step, an fsync every ``sync_every`` steps) and on with
+      ``'always'`` for context; the CI bar is <15% on the default
+      'batch' policy at THIS toy scale (the fsync cost is fixed while a
+      64-wide decode step is sub-millisecond — at real model scale the
+      fraction vanishes),
+    * recovery wall time vs in-flight count — journaled engines are
+      abandoned mid-decode and a fresh engine ``recover()``s (replay +
+      history re-prefill + re-admission), timed per in-flight depth,
+      with the resumed streams checked bitwise against a fault-free
+      oracle,
+    * drain completion rate under seeded Poisson load on the VIRTUAL
+      clock — ``begin_drain()`` fires mid-arrival-process; every
+      accepted request must still reach FINISHED and every post-drain
+      arrival must be rejected with the typed ``draining`` reason."""
+    import tempfile
+    import time as _time
+
+    from repro.serving import faults as flt
+    from repro.serving.engine import EngineDrainingError
+    from repro.serving.faults import VirtualClock
+
+    rng = np.random.RandomState(seed)
+    prompts = [rng.randint(0, cfg.vocab, 4 + i % 3).astype(np.int32)
+               for i in range(max(batch, 8))]
+    out: dict = {"n_new": n_new}
+
+    # 1. journaling overhead on decode tokens/s (off vs batch vs always)
+    def decode_tok_per_s(jdir, sync):
+        kw = ({} if jdir is None
+              else dict(journal_dir=jdir, journal_sync=sync))
+        eng = ServeEngine(cfg, params, batch_size=batch, max_len=max_len,
+                          **kw)
+        for i in range(batch):
+            eng.submit(Request(uid=i, prompt=prompts[i],
+                               max_new_tokens=n_new))
+        emitted, guard = 0, 0
+        while emitted < 2 * batch:    # admission + compile warmup
+            emitted += len(eng.step())
+            guard += 1
+            assert guard < 200, "durability warmup made no progress"
+        t0 = _time.perf_counter()
+        n = 0
+        while eng.has_work():
+            n += len(eng.step())
+        dt = _time.perf_counter() - t0
+        return n / max(dt, 1e-9)
+
+    modes: dict = {}
+    for name, sync in (("off", None), ("batch", "batch"),
+                       ("always", "always")):
+        best = 0.0
+        for _ in range(2):            # best-of-2 damps CI timer noise
+            if sync is None:
+                best = max(best, decode_tok_per_s(None, None))
+            else:
+                with tempfile.TemporaryDirectory() as td:
+                    best = max(best, decode_tok_per_s(td, sync))
+        modes[name] = best
+    out["journal_overhead"] = {
+        "decode_tok_per_s": modes,
+        "overhead_frac_batch": max(0.0, modes["off"] / modes["batch"] - 1),
+        "overhead_frac_always": max(0.0,
+                                    modes["off"] / modes["always"] - 1),
+    }
+    common.emit("serving_journal_overhead",
+                out["journal_overhead"]["overhead_frac_batch"],
+                f"decode tok/s off={modes['off']:.0f} "
+                f"batch={modes['batch']:.0f} always={modes['always']:.0f}")
+
+    # 2. recovery wall time vs in-flight count (+ bitwise resume check)
+    rec_new = 8
+    recovery: dict = {}
+    for n_inflight in (1, batch, 2 * batch):
+        ps = prompts[:n_inflight]
+        oracle = flt.drive(
+            ServeEngine(cfg, params, batch_size=batch, max_len=max_len),
+            ps, max_new_tokens=rec_new)
+        with tempfile.TemporaryDirectory() as td:
+            eng = ServeEngine(cfg, params, batch_size=batch,
+                              max_len=max_len, journal_dir=td,
+                              journal_sync="always")
+            reqs = [Request(uid=i, prompt=p, max_new_tokens=rec_new)
+                    for i, p in enumerate(ps)]
+            pre: dict = {r.uid: [] for r in reqs}
+            for r in reqs:
+                eng.submit(r)
+            for _ in range(4):        # a few steps, then 'crash'
+                for uid, tok in eng.step():
+                    pre[uid].append(tok)
+            eng2 = ServeEngine(cfg, params, batch_size=batch,
+                               max_len=max_len, journal_dir=td,
+                               journal_sync="always")
+            t0 = _time.perf_counter()
+            rep = eng2.recover()      # replay + history re-prefill
+            recover_ms = (_time.perf_counter() - t0) * 1e3
+            post: dict = {}
+            guard = 0
+            while eng2.has_work():
+                for uid, tok in eng2.step():
+                    post.setdefault(uid, []).append(tok)
+                guard += 1
+                assert guard < 500, "recovery drive made no progress"
+            bitwise = all(
+                pre[uid] + post.get(uid, []) == oracle["streams"][uid]
+                for uid in pre)
+        recovery[str(n_inflight)] = {
+            "recover_ms": recover_ms,
+            "resumed": rep["resumed"] + rep["finalized"],
+            "replayed_records": rep["replayed_records"],
+            "bitwise_vs_oracle": bitwise,
+        }
+    out["recovery"] = recovery
+    common.emit(
+        "serving_recovery_ms", recovery[str(batch)]["recover_ms"],
+        " ".join(f"n={k}:{v['recover_ms']:.0f}ms"
+                 f"(bitwise={v['bitwise_vs_oracle']})"
+                 for k, v in recovery.items()))
+
+    # 3. drain completion rate under seeded Poisson load (virtual clock)
+    n_req, rate_per_s, step_s = 10, 150.0, 0.005
+    arrivals = np.cumsum(rng.exponential(1.0 / rate_per_s, size=n_req))
+    clock = VirtualClock()
+    eng = ServeEngine(cfg, params, batch_size=batch, max_len=max_len,
+                      clock=clock)
+    reqs = [Request(uid=i, prompt=prompts[i % len(prompts)],
+                    max_new_tokens=4) for i in range(n_req)]
+    nxt, accepted, rejected, guard = 0, [], 0, 0
+    drain_at = n_req // 2
+    while nxt < n_req or eng.has_work():
+        while nxt < n_req and arrivals[nxt] <= clock():
+            if len(accepted) == drain_at and not eng.draining:
+                eng.begin_drain()
+            try:
+                eng.submit(reqs[nxt])
+                accepted.append(reqs[nxt])
+            except EngineDrainingError:
+                rejected += 1
+            nxt += 1
+        eng.step()
+        clock.advance(step_s)
+        guard += 1
+        assert guard < 5000, "drain drive made no progress"
+    ledger = eng.finish_drain()
+    finished = sum(r.state is RequestState.FINISHED for r in accepted)
+    out["drain"] = {
+        "accepted": len(accepted),
+        "rejected_draining": rejected,
+        "completion_rate": finished / max(len(accepted), 1),
+        "drained_clean": ledger["drained"],
+        "survivors": len(ledger["survivors"]),
+    }
+    common.emit("serving_drain_completion", out["drain"]["completion_rate"],
+                f"accepted={len(accepted)} rejected={rejected} "
+                f"survivors={out['drain']['survivors']}")
+    return out
+
+
 def bench_serving(out_path: str = "BENCH_serving.json", *,
                   tiny: bool = False, act_quant: str | None = None) -> dict:
     cfg = _bench_cfg(tiny)
@@ -710,6 +882,8 @@ def bench_serving(out_path: str = "BENCH_serving.json", *,
                                                 act_quant=act_quant)
 
     results["frontend"] = _frontend_section(cfg, params, batch, max_len)
+
+    results["durability"] = _durability_section(cfg, params, batch, max_len)
 
     with open(out_path, "w") as f:
         json.dump(results, f, indent=2, sort_keys=True)

@@ -275,6 +275,25 @@ class CheckpointManager:
                              "(no pytree_spec in manifest)")
         return step, spec
 
+    def packed_fingerprint(self, step: int | None = None) -> str:
+        """Content fingerprint of a packed checkpoint: sha256 over the
+        manifest's per-array ``packed_checksums`` (canonical JSON), or
+        over the flat per-leaf shas for pre-packed manifests.  The
+        serving journal pins this next to its request records so crash
+        recovery can refuse to resume streams against different weight
+        bytes (journal <-> checkpoint step pinning)."""
+        if step is None:
+            step = self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint in {self.dir}")
+        with open(os.path.join(self._step_dir(step),
+                               "manifest.json")) as f:
+            manifest = json.load(f)
+        basis = manifest["extra"].get("packed_checksums") \
+            or [leaf["sha"] for leaf in manifest["leaves"]]
+        blob = json.dumps(basis, sort_keys=True).encode()
+        return hashlib.sha256(blob).hexdigest()[:16]
+
     def restore_packed(self, step: int | None = None, *,
                        verify_packed: bool = True, **kw):
         """Restore a packed QTensor tree from the manifest spec alone.

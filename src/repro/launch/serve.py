@@ -47,6 +47,8 @@ if _n is not None:
         + os.environ.get("XLA_FLAGS", ""))
 
 import argparse
+import signal
+import threading
 import time
 
 import jax
@@ -136,8 +138,43 @@ def main(argv=None):
                          "demo drive: POST /generate streams SSE token "
                          "frames (client disconnect cancels the request), "
                          "GET /metrics scrapes Prometheus text, "
-                         "GET /healthz is liveness (serving.server; "
-                         "port 0 binds an ephemeral port)")
+                         "GET /healthz is liveness, GET /readyz readiness, "
+                         "GET /resume/{uid} re-attaches to a recovered "
+                         "stream (serving.server; port 0 binds an "
+                         "ephemeral port).  SIGTERM drains gracefully")
+    ap.add_argument("--journal-dir", default=None, metavar="DIR",
+                    help="crash-safe serving: append-only CRC-per-record "
+                         "request journal (admissions, per-step tokens, "
+                         "terminal transitions) written through the "
+                         "request state machine (serving.journal); a "
+                         "restarted process passes --recover to rebuild "
+                         "every in-flight stream bitwise")
+    ap.add_argument("--journal-sync", default="batch",
+                    choices=["always", "batch", "off"],
+                    help="journal fsync policy: 'always' per record, "
+                         "'batch' once per engine step (default), 'off' "
+                         "OS-buffered.  Greedy decode re-derives tokens "
+                         "lost to an unsynced tail, so 'batch' still "
+                         "resumes bitwise")
+    ap.add_argument("--recover", action="store_true",
+                    help="replay --journal-dir on startup: every "
+                         "non-terminal journaled request re-prefills its "
+                         "prompt + token history into fresh slots/pages "
+                         "and continues decode bitwise identical to the "
+                         "uninterrupted run; clients re-attach at "
+                         "GET /resume/{uid}")
+    ap.add_argument("--drain-deadline-ms", type=float, default=10000.0,
+                    metavar="MS",
+                    help="graceful-drain budget on SIGTERM/Ctrl-C: stop "
+                         "admissions (readyz flips to 'draining'), let "
+                         "in-flight requests finish within MS, then "
+                         "journal the ledger snapshot and exit")
+    ap.add_argument("--startup-budget-s", type=float, default=60.0,
+                    metavar="S",
+                    help="exit nonzero if the engine worker never reaches "
+                         "'ready' (answering calls) within S seconds of "
+                         "HTTP bind — so an orchestrator's restart loop "
+                         "sees a wedged startup instead of hanging")
     ap.add_argument("--max-queue", type=int, default=64, metavar="N",
                     help="bounded admission queue: submissions beyond N "
                          "waiting requests are rejected with backpressure "
@@ -158,7 +195,8 @@ def main(argv=None):
                          "engine's host/device boundaries, e.g. "
                          "'7:decode=nan@3,pool_acquire=deny@p0.1' "
                          "(serving.faults.parse_faults; sites prefill/"
-                         "decode/cow_copy/pool_acquire/checkpoint_read, "
+                         "decode/cow_copy/pool_acquire/checkpoint_read/"
+                         "journal_write/process_crash, "
                          "kinds error/transient/nan/slow/dispatch/deny). "
                          "The engine then runs on the injector's virtual "
                          "clock")
@@ -176,6 +214,8 @@ def main(argv=None):
     args = ap.parse_args(argv)
 
     # flag-conflict checks BEFORE the (expensive) model init
+    if args.recover and not args.journal_dir:
+        ap.error("--recover replays a request journal; give --journal-dir")
     if args.no_pack:
         if args.model_parallel:
             ap.error("--model-parallel serves sharded PACKED weights; "
@@ -221,7 +261,15 @@ def main(argv=None):
                          max_queue=args.max_queue,
                          deadline_ms=args.deadline_ms,
                          ttft_budget_ms=args.ttft_budget_ms,
+                         journal_dir=args.journal_dir,
+                         journal_sync=args.journal_sync,
                          faults=injector)
+    if args.journal_dir:
+        stats = engine.journal.stats
+        print(f"[serve] request journal at {args.journal_dir} "
+              f"(sync={args.journal_sync}): {stats['records']} record(s) "
+              f"on disk, {stats.get('truncated_bytes', 0)} torn/corrupt "
+              f"byte(s) truncated")
     if injector is not None:
         print(f"[serve] fault injection armed: seed {injector.seed}, "
               f"{len(injector.rules)} rule(s); engine on the injector's "
@@ -286,17 +334,56 @@ def main(argv=None):
               f"{args.save_weights}")
         return
 
+    if args.recover:
+        rep = engine.recover()
+        print(f"[serve] journal recovery: {rep['replayed_records']} "
+              f"record(s) -> {rep['requests']} request(s) "
+              f"({rep['already_terminal']} already terminal, "
+              f"{rep['resumed']} resumed, {rep['finalized']} finalized "
+              f"from history); resumed streams continue bitwise — "
+              f"clients re-attach at GET /resume/{{uid}}")
+
     if args.http_port is not None:
         from repro.serving.server import ServingServer
         with ServingServer(engine, port=args.http_port) as srv:
+            # startup budget: the worker loop must be spinning AND the
+            # engine must answer a call (first step may be compiling)
+            # before we call this process 'ready'; a wedged init exits
+            # nonzero so a restart loop can see it
+            t0 = time.time()
+            ok = srv.worker.ready.wait(args.startup_budget_s)
+            if ok:
+                try:
+                    srv.worker.call(
+                        lambda eng: True,
+                        timeout=max(0.1, args.startup_budget_s
+                                    - (time.time() - t0)))
+                except TimeoutError:
+                    ok = False
+            if not ok:
+                print(f"[serve] FATAL: engine not ready within "
+                      f"{args.startup_budget_s:.0f}s startup budget")
+                sys.exit(1)
             print(f"[serve] HTTP front-end on http://127.0.0.1:{srv.port} "
                   f"— POST /generate (SSE token stream), GET /metrics "
-                  f"(Prometheus), GET /healthz; Ctrl-C to stop")
+                  f"(Prometheus), GET /healthz (liveness), GET /readyz "
+                  f"(readiness), GET /resume/{{uid}}; SIGTERM or Ctrl-C "
+                  f"drains gracefully")
+            stop = threading.Event()
+            signal.signal(signal.SIGTERM, lambda *_: stop.set())
             try:
-                while True:
-                    time.sleep(1.0)
+                while not stop.wait(0.2):
+                    pass
             except KeyboardInterrupt:
-                print("[serve] shutting down")
+                pass
+            print(f"[serve] draining (deadline "
+                  f"{args.drain_deadline_ms:.0f} ms): admissions "
+                  f"stopped, in-flight requests finishing")
+            rep = srv.drain(args.drain_deadline_ms)
+            status = "complete" if rep["drained"] else "hit deadline"
+            print(f"[serve] drain {status}: {rep['completed']} request(s) "
+                  f"finished, {len(rep['survivors'])} survivor(s) "
+                  f"journaled for recovery")
         return
 
     rng = np.random.RandomState(args.seed)

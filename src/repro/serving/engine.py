@@ -71,6 +71,7 @@ import collections
 import contextlib
 import dataclasses
 import enum
+import os
 from typing import Any
 
 import jax
@@ -82,9 +83,11 @@ from repro.core import qtensor
 from repro.distributed import sharding as dist_sharding
 from repro.models.base import ArchConfig, Ctx, build_model, pack_projections
 from repro.serving.faults import InjectedFault, SystemClock
+from repro.serving.journal import JournalError, RequestJournal, replay
 from repro.serving.kvpool import KVPool
 from repro.serving.metrics import MetricsRegistry
 from repro.serving.scheduler import ChunkedPrefillScheduler
+from repro.serving.watchdog import StepWatchdog
 
 _TRANSFORMER_FAMILIES = ("dense", "moe", "vlm")
 
@@ -116,6 +119,7 @@ REJECT_BAD_MAX_NEW = "bad_max_new_tokens"
 REJECT_TOO_LONG = "too_long"
 REJECT_OVER_POOL_CAPACITY = "over_pool_capacity"
 REJECT_QUEUE_FULL = "queue_full"
+REJECT_DRAINING = "draining"
 
 # Typed terminal reasons -------------------------------------------------
 REASON_MAX_NEW = "max_new_tokens"          # FINISHED
@@ -128,6 +132,8 @@ REASON_RETRIES = "retries_exhausted"       # FAILED: transient never cleared
 REASON_DEADLINE = "deadline"               # EXPIRED: total deadline passed
 REASON_TTFT = "ttft_deadline"              # EXPIRED: no first token in budget
 REASON_CANCELLED = "user_cancel"           # CANCELLED
+REASON_SLOW_CLIENT = "slow_client"         # CANCELLED: sink queue overflow
+REASON_WATCHDOG = "watchdog_timeout"       # FAILED: hung-step budget blown
 
 
 class RequestValidationError(ValueError):
@@ -145,6 +151,14 @@ class QueueFullError(RuntimeError):
     shed load or retry later; the engine state is untouched."""
 
     reason = REJECT_QUEUE_FULL
+
+
+class EngineDrainingError(RuntimeError):
+    """The engine is draining (``begin_drain()``): admissions are closed
+    while in-flight requests finish.  Clients should retry against a
+    replacement instance; the engine state is untouched."""
+
+    reason = REJECT_DRAINING
 
 
 @dataclasses.dataclass
@@ -256,7 +270,11 @@ class ServeEngine:
                  ttft_budget_ms: float | None = None, faults=None,
                  clock=None, degrade_after_deferrals: int | None = None,
                  retry_max: int = 3, retry_base_ms: float = 10.0,
-                 retry_cap_ms: float = 1000.0):
+                 retry_cap_ms: float = 1000.0,
+                 journal_dir: str | None = None,
+                 journal_sync: str = "batch",
+                 hung_step_budget_ms: float | None = None,
+                 watchdog_fail_after: int = 2):
         if max_queue < 1:
             raise ValueError(f"max_queue={max_queue} must be >= 1")
         if degrade_after_deferrals is not None and degrade_after_deferrals < 1:
@@ -475,6 +493,20 @@ class ServeEngine:
         self.metrics = MetricsRegistry()
         self._step_prefill_tokens = 0   # prompt tokens spent this step
         self.max_prefill_tokens_per_step = 0
+        # durability: append-only request journal (admission prompts,
+        # emitted tokens, terminal transitions) + graceful-drain flag +
+        # hung-step watchdog.  The journal writes THROUGH the existing
+        # state machine (submit/_mark_terminal/step), so replaying it
+        # reconstructs exactly the lifecycle the counters saw.
+        self.journal_sync = journal_sync
+        self.journal = (RequestJournal(journal_dir, sync=journal_sync)
+                        if journal_dir is not None else None)
+        self.draining = False
+        self.recovered_uids: list[int] = []
+        self._weights_pin: dict | None = None   # journal <-> ckpt pinning
+        self.watchdog = (StepWatchdog(hung_step_budget_ms,
+                                      fail_after=watchdog_fail_after)
+                         if hung_step_budget_ms is not None else None)
         self._build_jits()
 
     def _build_jits(self):
@@ -553,8 +585,23 @@ class ServeEngine:
     # static layout metadata travels in the manifest spec).
     # ------------------------------------------------------------------
     def save_weights(self, directory: str, step: int = 0):
-        CheckpointManager(directory).save_packed(step, self.params,
-                                                blocking=True)
+        mgr = CheckpointManager(directory)
+        mgr.save_packed(step, self.params, blocking=True)
+        self._pin_weights(directory, step, mgr)
+
+    def _pin_weights(self, directory: str, step: int, mgr):
+        """Record the packed-checkpoint pin (step + manifest fingerprint)
+        on the engine AND in the journal, so ``recover()`` can refuse to
+        resume journaled streams against different weight bytes."""
+        try:
+            fp = mgr.packed_fingerprint(step)
+        except (OSError, ValueError, KeyError):
+            fp = None
+        self._weights_pin = {"dir": str(directory), "step": int(step),
+                             "fingerprint": fp}
+        self._journal_append({"t": "ckpt", "dir": str(directory),
+                              "step": int(step), "fp": fp})
+        self._journal_flush()
 
     def load_weights(self, directory: str, step: int | None = None):
         """Restore a packed checkpoint; a mesh engine restores each leaf
@@ -616,6 +663,10 @@ class ServeEngine:
         if self.mesh is None:
             self.params = _prepad_tree(
                 self.params, _prepad_group(self.act_quant), self.batch_size)
+        if step is None:
+            step = mgr.latest_step()
+        if step is not None:
+            self._pin_weights(directory, step, mgr)
 
     # ------------------------------------------------------------------
     # request lifecycle: validation, bounded queue, admission, faults
@@ -659,10 +710,17 @@ class ServeEngine:
 
     def submit(self, req: Request):
         """Enqueue a request on the bounded admission queue (strict FIFO).
-        Raises :class:`RequestValidationError` / :class:`QueueFullError`
-        with a typed reason; on success the request is QUEUED and will be
-        admitted by a later ``step()`` as slots and pool pages free up."""
+        Raises :class:`RequestValidationError` / :class:`QueueFullError` /
+        :class:`EngineDrainingError` with a typed reason; on success the
+        request is QUEUED and will be admitted by a later ``step()`` as
+        slots and pool pages free up."""
         self._validate(req)
+        if self.draining:
+            self.counters[f"rejected:{REJECT_DRAINING}"] += 1
+            raise EngineDrainingError(
+                "engine is draining: admissions are closed while "
+                "in-flight requests finish (retry against a replacement "
+                "instance)")
         if len(self.queue) >= self.max_queue:
             self.counters[f"rejected:{REJECT_QUEUE_FULL}"] += 1
             raise QueueFullError(
@@ -673,27 +731,76 @@ class ServeEngine:
         self.requests[req.uid] = req
         self.queue.append(req)
         self.counters["submitted"] += 1
+        self._journal_submit(req)
 
-    def cancel(self, uid: int) -> bool:
+    def cancel(self, uid: int, reason: str = REASON_CANCELLED) -> bool:
         """Cancel a queued or in-flight request.  Returns True if the
         request transitioned to CANCELLED (slot and pool pages released);
-        False if it is unknown or already terminal."""
+        False if it is unknown or already terminal.  ``reason`` types the
+        terminal verdict (``user_cancel`` by default; the HTTP front-end
+        passes ``slow_client`` for sink-overflow evictions)."""
         req = self.requests.get(uid)
         if req is None or req.state.terminal:
             return False
         if req.state is RequestState.QUEUED:
             with contextlib.suppress(ValueError):
                 self.queue.remove(req)
-            self._mark_terminal(req, RequestState.CANCELLED,
-                                REASON_CANCELLED)
+            self._mark_terminal(req, RequestState.CANCELLED, reason)
             return True
         i = next(i for i, s in enumerate(self.slots) if s is req)
-        self._finish_request(i, RequestState.CANCELLED, REASON_CANCELLED)
+        self._finish_request(i, RequestState.CANCELLED, reason)
         return True
 
     def has_work(self) -> bool:
         return bool(self.queue) or any(
             s is not None and not s.done for s in self.slots)
+
+    # -- journal write-through -----------------------------------------
+    def _journal_append(self, rec: dict):
+        """Append one record behind the ``journal_write`` fault boundary.
+        Transients (and real OSErrors) retry with capped backoff; a fatal
+        failure DISABLES journaling and keeps serving (fail-open: losing
+        durability is a counter + alert, not an outage) — recovery then
+        resumes from the last committed record, which greedy determinism
+        makes safe (the re-decoded tokens are bitwise the lost ones)."""
+        if self.journal is None:
+            return
+        try:
+            self._with_retries("journal_write",
+                               lambda: self.journal.append(rec),
+                               retryable=(OSError,))
+        except (InjectedFault, OSError) as e:
+            self.counters["journal_write_failed"] += 1
+            self.counters["journal_disabled"] = 1
+            with contextlib.suppress(Exception):
+                self.journal.close()
+            self.journal = None
+            del e
+
+    def _journal_submit(self, req: Request):
+        if self.journal is None:
+            return
+        rec = {"t": "submit", "uid": req.uid,
+               "prompt": [int(t) for t in np.asarray(req.prompt).ravel()],
+               "max_new_tokens": int(req.max_new_tokens)}
+        if req.deadline_ms is not None:
+            rec["deadline_ms"] = req.deadline_ms
+        if req.ttft_budget_ms is not None:
+            rec["ttft_budget_ms"] = req.ttft_budget_ms
+        self._journal_append(rec)
+
+    def _journal_flush(self):
+        """Step-boundary flush: under ``journal_sync='batch'`` this is the
+        one fsync that commits the whole step's token records."""
+        if self.journal is not None:
+            try:
+                self.journal.flush()
+            except OSError:
+                self.counters["journal_write_failed"] += 1
+                self.counters["journal_disabled"] = 1
+                with contextlib.suppress(Exception):
+                    self.journal.close()
+                self.journal = None
 
     # -- fault hooks / clock -------------------------------------------
     def _fire(self, site: str, *, uid: int | None = None, scoped=True):
@@ -754,6 +861,8 @@ class ServeEngine:
         self._validate(req)
         if req.submitted_at is None:
             req.submitted_at = self.clock()
+        if req.uid not in self.requests:
+            self._journal_submit(req)    # once per uid across re-tries
         self.requests[req.uid] = req
         res = self._try_admit(req)
         if res == "deferred":
@@ -770,6 +879,10 @@ class ServeEngine:
         if free is None:
             return "no_slot"
         i = free
+        if req.generated:
+            # a recovered request resumes mid-stream: re-prefill its full
+            # token history instead of just the prompt
+            return self._resume_admit(i, req)
         if self.kv_pool is None:
             self.slots[i] = req
             req.state = RequestState.PREFILLING
@@ -846,6 +959,93 @@ class ServeEngine:
         # written after this point)
         self.kv_pool.insert(req.prompt, adm.pages)
         req.state = RequestState.RUNNING
+        return "admitted"
+
+    def _resume_admit(self, i: int, req: Request) -> str:
+        """Admit a request that already holds generated tokens (recovery
+        after a restart): re-prefill its full history
+        ``prompt ++ generated[:-1]`` into slot ``i`` — the same replay
+        the paged->fixed-slot degradation rung uses, value-preserving
+        under greedy decode and *bitwise* under W4A16 and the per-row
+        W4A4 modes (the pinned ``KV_SCALE32`` write-order contract makes
+        every cache row a pure function of the token history).  Decode
+        then continues by feeding ``generated[-1]`` at the history
+        length, exactly where the pre-crash engine stopped.
+
+        The history runs in ONE prefill dispatch even on chunked-prefill
+        engines (chunked prefill is bitwise whole-prefill, so skipping
+        the chunk ledger changes cost, not bytes).  On paged engines the
+        pages stay anonymous (not prefix-registered): the trailing page
+        is still being written by decode, and a restarted pool has no
+        sharers to serve anyway."""
+        hist_tail = np.asarray(req.generated[:-1], np.int32)
+        history = np.asarray(req.prompt, np.int32)
+        if hist_tail.size:
+            history = np.concatenate([history, hist_tail])
+        # same final cache footprint as the original request:
+        # len(history) + shim_new - 1 == len(prompt) + max_new - 1
+        shim_new = req.max_new_tokens - max(len(req.generated) - 1, 0)
+        shim = Request(uid=req.uid, prompt=history,
+                       max_new_tokens=shim_new)
+        if self.kv_pool is not None:
+            act = self._fire("pool_acquire", uid=req.uid)
+            if act is not None and act.error is not None:
+                if act.error.transient:
+                    return "deferred"
+                self._mark_terminal(req, RequestState.FAILED,
+                                    REASON_POOL_ERROR, error=act.error)
+                return "failed"
+            if act is not None and act.deny:
+                self.counters["injected_pool_denials"] += 1
+                return "deferred"
+            adm = self.kv_pool.acquire(history, shim_new)
+            if adm is None:
+                return "deferred"
+            self.slots[i] = req
+            req.state = RequestState.PREFILLING
+            self.lengths[i] = 0
+            self.cache = self.model.reset_slot(self.cache, i)
+            self._slot_pages[i] = adm.pages
+            row = np.zeros((self.block_tables.shape[1],), np.int32)
+            row[:len(adm.pages)] = adm.pages
+            self.block_tables[i] = row
+            self.cache = dict(self.cache,
+                              pages=jnp.asarray(self.block_tables))
+            if adm.cow is not None:
+                cow_act = self._fire("cow_copy", uid=req.uid)
+                if cow_act is not None and cow_act.error is not None:
+                    self._finish_request(i, RequestState.FAILED,
+                                         REASON_COW_ERROR,
+                                         error=cow_act.error)
+                    return "failed"
+                src, dst = adm.cow
+                self.cache = self._copy_page(self.cache, jnp.int32(src),
+                                             jnp.int32(dst))
+            start_pos = adm.shared_len
+        else:
+            self.slots[i] = req
+            req.state = RequestState.PREFILLING
+            self.lengths[i] = 0
+            self.cache = self.model.reset_slot(self.cache, i)
+            start_pos = 0
+        try:
+            self._with_retries("prefill", None, uid=req.uid)
+            self._prefill_slot(i, shim, start_pos=start_pos)
+        except InjectedFault as e:
+            reason = REASON_RETRIES if e.transient else REASON_INJECTED
+            self._finish_request(i, RequestState.FAILED, reason, error=e)
+            return "failed"
+        except Exception as e:
+            self._finish_request(i, RequestState.FAILED,
+                                 REASON_PREFILL_ERROR, error=e)
+            raise
+        # lengths[i] = len(history) (set by _prefill_slot); the resumed
+        # decode feeds generated[-1] there next step, exactly where the
+        # pre-crash engine stopped.  (A request with NO emitted tokens
+        # never lands here — it re-admits through the ordinary
+        # prompt-prefill path, which stages the first token itself.)
+        req.state = RequestState.RUNNING
+        self.counters["resumed"] += 1
         return "admitted"
 
     def _guarded_prefill(self, i: int, req: Request, start_pos: int = 0):
@@ -1018,7 +1218,172 @@ class ServeEngine:
         spec["request_states"] = dict(states)
         spec["act_quant"] = self.act_quant
         spec["paged"] = self.kv_pool is not None
+        spec["draining"] = self.draining
+        spec["journaled"] = self.journal is not None
+        if self.watchdog is not None:
+            spec["watchdog"] = self.watchdog.report()
         return spec
+
+    # -- graceful drain / crash recovery -------------------------------
+    def begin_drain(self):
+        """Close admissions: ``submit()`` now rejects with the typed
+        ``draining`` reason while in-flight (and already-queued) requests
+        keep stepping to completion.  Idempotent."""
+        if not self.draining:
+            self.draining = True
+            self.counters["drain_begun"] = 1
+
+    def finish_drain(self) -> dict:
+        """Snapshot the ledger after the drain loop stops: one ``ledger``
+        journal record (counters, per-request final states, any
+        mid-prefill cursors) committed with a forced fsync — whatever the
+        steady-state ``journal_sync`` policy, the drain snapshot itself
+        is durable.  Requests still live at the drain deadline stay
+        non-terminal in the journal: the NEXT process recovers them."""
+        survivors = [uid for uid, r in self.requests.items()
+                     if not r.state.terminal]
+        if self.journal is not None:
+            rec = {"t": "ledger",
+                   "counters": {k: float(v)
+                                for k, v in self.counters.items()},
+                   "requests": {str(uid): {"state": str(r.state),
+                                           "reason": r.finish_reason,
+                                           "n_tokens": len(r.generated)}
+                                for uid, r in self.requests.items()},
+                   "survivors": survivors}
+            if self.scheduler is not None:
+                rec["prefill_jobs"] = self.scheduler.jobs_report()
+            self._journal_append(rec)
+            if self.journal is not None:
+                try:
+                    self.journal.flush(force_sync=True)
+                except OSError:
+                    self.counters["journal_write_failed"] += 1
+        terminal = len(self.requests) - len(survivors)
+        return {"drained": not survivors, "completed": terminal,
+                "survivors": survivors}
+
+    def drain(self, deadline_ms: float | None = None,
+              max_steps: int = 10000) -> dict:
+        """Blocking graceful drain: close admissions, step until the
+        batch and queue empty or ``deadline_ms`` passes (on the engine
+        clock), then snapshot the ledger.  Returns the
+        :meth:`finish_drain` report plus the steps spent.  The HTTP
+        worker drives the same three phases non-blockingly
+        (serving.server)."""
+        self.begin_drain()
+        t0 = self.clock()
+        steps = 0
+        while self.has_work() and steps < max_steps:
+            if deadline_ms is not None \
+                    and (self.clock() - t0) * 1e3 > deadline_ms:
+                break
+            self.step()
+            steps += 1
+        report = self.finish_drain()
+        report["steps"] = steps
+        return report
+
+    def recover(self, journal_dir: str | None = None) -> dict:
+        """Rebuild every non-terminal journaled request into THIS (fresh)
+        engine and continue decode.
+
+        Each live request is reconstructed with its journaled prompt and
+        token history and re-enters the batch through the resume
+        admission path (:meth:`_resume_admit`): the full history
+        ``prompt ++ generated[:-1]`` re-prefills into a fresh slot/pool
+        pages — bitwise the pre-crash cache rows under the pinned
+        ``KV_SCALE32`` contract — and decode resumes by feeding
+        ``generated[-1]`` exactly where the dead process stopped.  Under
+        greedy decode the resumed stream is bitwise-identical to the
+        uninterrupted run (W4A16 and the per-row W4A4 modes;
+        tests/test_recovery.py property-tests fixed-slot, paged and
+        chunked-prefill engines), and tokens that were emitted but lost
+        to an unsynced journal tail are simply re-derived and re-emitted.
+
+        A journal that pins packed weights (``ckpt`` record) refuses to
+        resume unless this engine restored the same step with the same
+        manifest fingerprint — bitwise resume is only promised under the
+        same weight bytes.  Requests whose token count already reached
+        ``max_new_tokens`` (terminal record lost in the tail) are
+        finalized FINISHED without re-admission."""
+        if journal_dir is not None:
+            if self.journal is None:
+                self.journal = RequestJournal(journal_dir,
+                                              sync=self.journal_sync)
+            elif os.path.abspath(self.journal.dir) \
+                    != os.path.abspath(journal_dir):
+                raise JournalError(
+                    f"engine already journals to {self.journal.dir}; "
+                    f"refusing to recover from {journal_dir}")
+        if self.journal is None:
+            raise JournalError(
+                "recover() needs a journal: pass journal_dir= or "
+                "construct the engine with journal_dir=")
+        state = replay(self.journal.records)
+        ck = state.checkpoint
+        if ck is not None:
+            pin = self._weights_pin
+            if pin is None:
+                raise JournalError(
+                    f"journal pins packed weights to step {ck['step']} "
+                    f"of {ck['dir']} but this engine never restored a "
+                    "checkpoint; load_weights() that step first — "
+                    "bitwise resume is only promised under the same "
+                    "weight bytes")
+            if ck.get("fingerprint") and pin.get("fingerprint") \
+                    and ck["fingerprint"] != pin["fingerprint"]:
+                raise JournalError(
+                    f"journal pins packed weights to manifest "
+                    f"fingerprint {ck['fingerprint']} (step "
+                    f"{ck['step']}) but this engine restored "
+                    f"{pin['fingerprint']} (step {pin['step']})")
+            if ck.get("step") != pin.get("step"):
+                raise JournalError(
+                    f"journal pins packed weights to step {ck['step']} "
+                    f"but this engine restored step {pin['step']}")
+        report = {"replayed_records": len(self.journal.records),
+                  "requests": len(state.requests),
+                  "already_terminal": 0, "resumed": 0, "finalized": 0,
+                  "dangling_tokens": state.dangling_tokens,
+                  "truncated_bytes":
+                      self.journal.stats.get("truncated_bytes", 0),
+                  "corrupt_record_index":
+                      self.journal.stats.get("corrupt_record_index")}
+        now = self.clock()
+        for rr in state.requests.values():
+            if rr.terminal:
+                report["already_terminal"] += 1
+                continue
+            req = Request(uid=rr.uid,
+                          prompt=np.asarray(rr.prompt, np.int32),
+                          max_new_tokens=rr.max_new_tokens,
+                          generated=list(rr.tokens),
+                          deadline_ms=rr.deadline_ms,
+                          ttft_budget_ms=rr.ttft_budget_ms)
+            # deadline anchors restart at recovery: the dead process's
+            # wall time is gone and a recovered stream should not expire
+            # the instant it resumes
+            req.submitted_at = now
+            if rr.tokens:
+                req.first_token_at = now
+                req._last_token_at = now
+            self.requests[req.uid] = req
+            self.recovered_uids.append(req.uid)
+            if len(rr.tokens) >= rr.max_new_tokens:
+                self._mark_terminal(req, RequestState.FINISHED,
+                                    REASON_MAX_NEW)
+                report["finalized"] += 1
+                continue
+            req.state = RequestState.QUEUED
+            self.queue.append(req)
+            report["resumed"] += 1
+            self.counters["recovered"] += 1
+        # place as many as fit now; the rest re-admit as slots free up
+        # (recovery may requeue past max_queue — repopulation, not load)
+        self._pump()
+        self._journal_flush()
+        return report
 
     # -- terminal transitions ------------------------------------------
     def _mark_terminal(self, req: Request, state: RequestState, reason: str,
@@ -1028,6 +1393,8 @@ class ServeEngine:
         req.error = error
         req.done = True
         self.counters[f"{state.value.lower()}:{reason}"] += 1
+        self._journal_append({"t": "terminal", "uid": req.uid,
+                              "state": state.value, "reason": reason})
 
     def _finish_request(self, i: int, state: RequestState, reason: str,
                         error: Exception | None = None):
@@ -1238,12 +1605,17 @@ class ServeEngine:
             "max_prefill_tokens_per_step":
                 float(self.max_prefill_tokens_per_step),
         })
+        gauges["draining"] = float(self.draining)
         report = {"counters": counters, "gauges": gauges,
                   "histograms": snap["histograms"]}
         if self.kv_pool is not None:
             report["kv_pool"] = self.kv_pool.stats()
         if self.scheduler is not None:
             report["scheduler"] = self.scheduler.report()
+        if self.journal is not None:
+            report["journal"] = self.journal.report()
+        if self.watchdog is not None:
+            report["watchdog"] = self.watchdog.report()
         return report
 
     def step(self) -> list[tuple[int, int]]:
@@ -1263,6 +1635,13 @@ class ServeEngine:
         with no token emitted and the survivors' streams are untouched
         (decode is row-independent, so they stay bitwise-identical to a
         fault-free run under W4A16)."""
+        t0 = self.clock()
+        # the process_crash boundary fires BEFORE any state mutation: a
+        # "crash between steps" leaves exactly the journal the previous
+        # step's flush committed, which is what a SIGKILL leaves too
+        act = self._fire("process_crash", scoped=False)
+        if act is not None and act.error is not None:
+            raise act.error
         self._expire_deadlines()
         self._pump()
         if self.scheduler is not None:
@@ -1292,6 +1671,8 @@ class ServeEngine:
                 self.metrics.observe("ttft_ms", req.ttft_ms())
                 req.generated.append(req._next)
                 out.append((req.uid, req._next))
+                self._journal_append({"t": "token", "uid": req.uid,
+                                      "tok": int(req._next)})
                 if len(req.generated) >= req.max_new_tokens:
                     self._finish_request(i, RequestState.FINISHED,
                                          REASON_MAX_NEW)
@@ -1300,6 +1681,7 @@ class ServeEngine:
             active.append(i)
         if not active:
             self._note_step(0)
+            self._finish_step(t0)
             return out
         logits = self._guarded_decode(toks, active)
         # one vectorized argmax + host transfer per step, not one per
@@ -1319,6 +1701,8 @@ class ServeEngine:
             req.generated.append(tok)
             self.lengths[i] += 1
             out.append((req.uid, tok))
+            self._journal_append({"t": "token", "uid": req.uid,
+                                  "tok": tok})
             if req._last_token_at is not None:
                 self.metrics.observe("itl_ms",
                                      (now - req._last_token_at) * 1e3)
@@ -1327,7 +1711,45 @@ class ServeEngine:
                 self._finish_request(i, RequestState.FINISHED,
                                      REASON_MAX_NEW)
         self._note_step(len(active))
+        self._finish_step(t0)
         return out
+
+    def _finish_step(self, t0: float):
+        """Step-boundary durability + liveness work: one journal flush
+        commits the step's token records (the ``journal_sync='batch'``
+        fsync point), then the watchdog hears the step's heartbeat and
+        its verdicts run the degradation ladder."""
+        self._journal_flush()
+        if self.watchdog is None:
+            return
+        verdict = self.watchdog.beat((self.clock() - t0) * 1e3)
+        if verdict == "degrade":
+            # first strikes ride the existing bitwise-preserving ladder
+            # when a rung is armed; otherwise the strike just counts
+            if self.act_quant == "mixfp4":
+                self._degrade_fused()
+            self.counters["watchdog_degrades"] += 1
+        elif verdict == "fail":
+            self._watchdog_fail()
+
+    def _watchdog_fail(self):
+        """Past the degradation rung: fail the most starved in-flight
+        request (longest since its last token — the one the hung steps
+        are starving hardest) with the typed ``watchdog_timeout`` reason,
+        releasing its slot and pool pages instead of wedging the batch."""
+        live = [(i, r) for i, r in enumerate(self.slots)
+                if r is not None and not r.done]
+        if not live:
+            return
+
+        def anchor(req):
+            if req._last_token_at is not None:
+                return req._last_token_at
+            return req.submitted_at if req.submitted_at is not None else 0.0
+
+        i, _ = min(live, key=lambda ir: anchor(ir[1]))
+        self._finish_request(i, RequestState.FAILED, REASON_WATCHDOG)
+        self.counters["watchdog_fails"] += 1
 
     def _guarded_decode(self, toks, active):
         """The decode dispatch behind the 'decode' fault boundary.

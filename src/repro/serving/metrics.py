@@ -140,7 +140,7 @@ def render_prometheus(report: dict, prefix: str = "mixfp4") -> str:
                 f'{pn}{{quantile="0.{q[1:]}"}} {snap.get(q, 0.0)}')
         lines.append(f"{pn}_count {snap.get('count', 0)}")
         lines.append(f"{pn}_sum {snap.get('sum', 0.0)}")
-    for section in ("kv_pool", "scheduler"):
+    for section in ("kv_pool", "scheduler", "journal", "watchdog"):
         sub = report.get(section)
         if isinstance(sub, dict):
             for name, value in sorted(sub.items()):

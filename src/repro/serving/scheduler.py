@@ -159,6 +159,15 @@ class ChunkedPrefillScheduler:
     def max_prefill_tokens_per_step(self) -> int:
         return max((s["prefill_tokens"] for s in self.step_log), default=0)
 
+    def jobs_report(self) -> list[dict]:
+        """Per-job cursor snapshot (FIFO order) — the drain ledger
+        journals it so a post-restart operator can see exactly which
+        admissions died mid-prefill (recovery re-prefills them from
+        position 0; the cursors are forensic, not replayed)."""
+        return [{"uid": j.uid, "slot": j.slot, "p_len": j.p_len,
+                 "cursor": j.cursor, "chunks_done": j.chunks_done}
+                for j in self._jobs.values()]
+
     def report(self) -> dict:
         """Ledger summary for ``metrics_report()`` / the frontend bench."""
         return {

@@ -53,12 +53,13 @@ import queue
 import socket
 import threading
 
-from repro.serving.engine import (QueueFullError, Request, RequestState,
+from repro.serving.engine import (EngineDrainingError, QueueFullError,
+                                  REASON_SLOW_CLIENT, Request, RequestState,
                                   RequestValidationError, ServeEngine)
 from repro.serving.metrics import render_prometheus
 
 __all__ = ["EngineWorker", "ServingServer", "stream_generate",
-           "scrape_metrics"]
+           "resume_stream", "scrape_metrics", "get_json"]
 
 import numpy as np
 
@@ -89,6 +90,22 @@ class EngineWorker:
         self._thread = threading.Thread(target=self._run, daemon=True,
                                         name="mixfp4-engine-worker")
         self.steps = 0
+        # readiness: set once the worker loop is actually spinning (the
+        # /readyz split — 'starting' until then, 'draining' after a drain
+        # begins, 'ready' in between)
+        self.ready = threading.Event()
+
+    @property
+    def phase(self) -> str:
+        if not self._thread.is_alive() and not self.ready.is_set():
+            return "starting"
+        if getattr(self.engine, "draining", False):
+            return "draining"
+        return "ready" if self.ready.is_set() else "starting"
+
+    @property
+    def alive(self) -> bool:
+        return self._thread.is_alive()
 
     # -- lifecycle -----------------------------------------------------
     def start(self) -> "EngineWorker":
@@ -109,8 +126,10 @@ class EngineWorker:
         sink as an ``error`` event — the caller never blocks."""
         self._cmds.put(("submit", req, sink))
 
-    def cancel_async(self, uid: int) -> None:
-        self._cmds.put(("cancel", uid, None))
+    def cancel_async(self, uid: int, reason: str | None = None) -> None:
+        """Enqueue a cancel; ``reason`` (e.g. ``slow_client``) lands in the
+        request's typed ``finish_reason`` and the engine counters."""
+        self._cmds.put(("cancel", uid, reason))
 
     def call(self, fn, timeout: float = 30.0):
         """Run ``fn(engine)`` on the worker thread and return its result —
@@ -145,7 +164,8 @@ class EngineWorker:
                 req, sink = a, b
                 try:
                     self.engine.submit(req)
-                except (RequestValidationError, QueueFullError) as e:
+                except (RequestValidationError, QueueFullError,
+                        EngineDrainingError) as e:
                     reason = getattr(e, "reason", "rejected")
                     sink(("error", _terminal_info(req, reason=reason,
                                                   state="REJECTED")))
@@ -153,7 +173,10 @@ class EngineWorker:
                 self._sinks[req.uid] = sink
                 self._emitted[req.uid] = 0
             elif kind == "cancel":
-                self.engine.cancel(a)
+                if b is None:
+                    self.engine.cancel(a)
+                else:
+                    self.engine.cancel(a, reason=b)
             elif kind == "call":
                 a(self.engine)
 
@@ -179,8 +202,30 @@ class EngineWorker:
                     else "error")
             sink((kind, _terminal_info(req)))
 
+    def attach_resume(self, uid: int, sink, timeout: float = 30.0):
+        """Attach ``sink`` to an in-flight (possibly recovered) request and
+        return ``(tokens_so_far, terminal_info | None)``.  Runs on the
+        worker thread between steps, so the snapshot and the attach are
+        atomic w.r.t. token emission: the caller replays ``tokens_so_far``
+        itself, then live frames follow with consecutive indices.  For a
+        request already terminal, no sink is installed and the terminal
+        info comes back for the caller to send.  Returns None for an
+        unknown uid."""
+        def attach(engine):
+            req = engine.requests.get(uid)
+            if req is None:
+                return None
+            toks = [int(t) for t in req.generated]
+            if req.state.terminal:
+                return toks, _terminal_info(req)
+            self._sinks[uid] = sink
+            self._emitted[uid] = len(toks)
+            return toks, None
+        return self.call(attach, timeout=timeout)
+
     def _run(self):
         while not self._stop.is_set():
+            self.ready.set()
             self._drain_cmds()
             if not self.engine.has_work():
                 self._flush_terminal()
@@ -283,7 +328,13 @@ class ServingServer:
       released (tests/test_server.py pins the regression).
     * ``GET /metrics`` — Prometheus text rendering of
       ``engine.metrics_report()``.
-    * ``GET /healthz`` — liveness + step counter.
+    * ``GET /healthz`` — liveness: 200 while the process is up, with the
+      lifecycle phase (``starting`` / ``ready`` / ``draining``).
+    * ``GET /readyz`` — readiness: 200 only when ``ready`` and the engine
+      thread answers, with queue/slot/pool gauges inline; 503 otherwise.
+    * ``GET /resume/{uid}`` — re-attach to an in-flight (typically
+      journal-recovered) stream: replays all tokens so far, then live
+      frames — bitwise the uninterrupted stream.
 
     Use as a context manager (binds an ephemeral loopback port by
     default, runs the asyncio loop in a daemon thread)::
@@ -294,14 +345,48 @@ class ServingServer:
     """
 
     def __init__(self, engine: ServeEngine, host: str = "127.0.0.1",
-                 port: int = 0):
+                 port: int = 0, *, max_sink_frames: int = 256,
+                 sndbuf: int | None = None):
         self.worker = EngineWorker(engine)
         self.host = host
         self.port = port          # 0 => ephemeral, resolved on start
+        # per-stream frame-queue bound: a client that stops reading lets
+        # the handler's queue grow unboundedly while the engine keeps
+        # decoding for it — past this many undelivered frames the stream
+        # gets one typed `slow_client` error frame and the request is
+        # cancelled (slot + pool pages released)
+        self.max_sink_frames = int(max_sink_frames)
+        # test knob: shrink each connection's kernel send buffer so a
+        # stalled reader backs the handler up in milliseconds, not MBs
+        self.sndbuf = sndbuf
         self._loop: asyncio.AbstractEventLoop | None = None
         self._thread: threading.Thread | None = None
         self._server: asyncio.base_events.Server | None = None
         self._started = threading.Event()
+
+    def _bounded_sink(self, loop, frames: asyncio.Queue, uid: int):
+        """Worker-thread -> loop bridge with the slow-client bound.  Runs
+        ON the worker thread; ``frames.qsize()`` is a GIL-safe read.  On
+        overflow it enqueues the single typed terminal itself and drops
+        everything after (including the engine's own cancel terminal), so
+        exactly one terminal frame goes on the wire."""
+        state = {"over": False}
+
+        def sink(event):
+            if state["over"]:
+                return
+            kind, payload = event
+            if kind == "token" and frames.qsize() >= self.max_sink_frames:
+                state["over"] = True
+                n = payload.get("index", 0)
+                loop.call_soon_threadsafe(frames.put_nowait, ("error", {
+                    "uid": uid, "state": str(RequestState.CANCELLED),
+                    "finish_reason": REASON_SLOW_CLIENT, "n_tokens": n}))
+                self.worker.cancel_async(uid, REASON_SLOW_CLIENT)
+                return
+            loop.call_soon_threadsafe(frames.put_nowait, event)
+
+        return sink
 
     # -- request handlers ----------------------------------------------
     async def _handle_generate(self, reader, writer, body: bytes):
@@ -321,14 +406,17 @@ class ServingServer:
                       ttft_budget_ms=spec.get("ttft_budget_ms"))
         loop = asyncio.get_running_loop()
         frames: asyncio.Queue = asyncio.Queue()
-
-        def sink(event):   # worker thread -> loop
-            loop.call_soon_threadsafe(frames.put_nowait, event)
-
+        sink = self._bounded_sink(loop, frames, uid)
         writer.write(_response_head("200 OK", "text/event-stream",
                                     chunked=True))
         await writer.drain()
         self.worker.submit_async(req, sink)
+        await self._pump_frames(reader, writer, frames, uid)
+
+    async def _pump_frames(self, reader, writer, frames: asyncio.Queue,
+                           uid: int):
+        """Shared streaming loop for /generate and /resume: forward frames
+        until the single terminal, cancel on client EOF."""
         # EOF watch: the request line + body are fully read, so the next
         # (and only) read completing means the client went away
         eof_watch = asyncio.ensure_future(reader.read(1))
@@ -356,6 +444,43 @@ class ServingServer:
         finally:
             eof_watch.cancel()
 
+    async def _handle_resume(self, reader, writer, uid: int):
+        """GET /resume/{uid}: re-attach to an in-flight (typically
+        journal-recovered) request.  Replays every token generated so far
+        with its original index, then streams live frames — the
+        concatenation is bitwise the uninterrupted stream (the journal
+        recovery property), which tools/restart_smoke.py asserts over a
+        real SIGKILL."""
+        loop = asyncio.get_running_loop()
+        frames: asyncio.Queue = asyncio.Queue()
+        sink = self._bounded_sink(loop, frames, uid)
+        try:
+            res = self.worker.attach_resume(uid, sink)
+        except TimeoutError:
+            await _send_plain(writer, "503 Service Unavailable",
+                              b'{"error": "engine stalled"}')
+            return
+        if res is None:
+            await _send_plain(writer, "404 Not Found", json.dumps(
+                {"error": f"unknown uid {uid}"}).encode())
+            return
+        toks, terminal = res
+        writer.write(_response_head("200 OK", "text/event-stream",
+                                    chunked=True))
+        await writer.drain()
+        for i, tok in enumerate(toks):
+            await _send_chunk(writer, _sse(
+                {"type": "token", "uid": uid, "token": tok, "index": i,
+                 "replayed": True}))
+        if terminal is not None:
+            kind = ("done" if terminal.get("state") in
+                    (str(RequestState.FINISHED), str(RequestState.CANCELLED))
+                    else "error")
+            await _send_chunk(writer, _sse({"type": kind, **terminal}))
+            await _send_chunk(writer, b"")
+            return
+        await self._pump_frames(reader, writer, frames, uid)
+
     async def _handle_metrics(self, writer):
         report = self.worker.call(lambda eng: eng.metrics_report())
         await _send_plain(writer, "200 OK",
@@ -363,11 +488,55 @@ class ServingServer:
                           ctype="text/plain; version=0.0.4")
 
     async def _handle_healthz(self, writer):
+        """Liveness: 200 while the process serves HTTP at all.  Reports
+        the lifecycle phase but never touches the engine thread — a
+        wedged step must not fail liveness (that is /readyz's job)."""
         await _send_plain(writer, "200 OK", json.dumps(
-            {"ok": True, "steps": self.worker.steps}).encode())
+            {"ok": self.worker.alive, "phase": self.worker.phase,
+             "steps": self.worker.steps}).encode())
+
+    async def _handle_readyz(self, writer):
+        """Readiness: 200 only in phase 'ready' with the engine thread
+        answering; 503 while starting, draining, or stalled.  Carries the
+        queue/slot/pool gauges inline so an orchestrator's readiness
+        probe doubles as a cheap load snapshot."""
+        phase = self.worker.phase
+        body: dict = {"phase": phase, "steps": self.worker.steps}
+        status = "200 OK"
+        if phase != "ready" or not self.worker.alive:
+            status = "503 Service Unavailable"
+        else:
+            def _gauges(eng):
+                pool = eng.pool_report()
+                return {
+                    "queue_depth": len(eng.queue),
+                    "active_slots":
+                        sum(s is not None for s in eng.slots),
+                    "batch_size": eng.batch_size,
+                    "pool": None if pool is None else {
+                        k: pool[k] for k in ("pages_total", "pages_free",
+                                             "pages_active")},
+                }
+            try:
+                body.update(self.worker.call(_gauges, timeout=2.0))
+            except TimeoutError:
+                status = "503 Service Unavailable"
+                body["phase"] = "stalled"
+        body["ready"] = status.startswith("200")
+        await _send_plain(writer, status, json.dumps(body).encode())
 
     async def _handle_conn(self, reader, writer):
         try:
+            if self.sndbuf is not None:
+                sock = writer.get_extra_info("socket")
+                if sock is not None:
+                    sock.setsockopt(socket.SOL_SOCKET, socket.SO_SNDBUF,
+                                    self.sndbuf)
+                # the asyncio transport buffers ~64KB before drain()
+                # blocks; shrink it too, or the kernel buffer knob alone
+                # never back-pressures the handler
+                writer.transport.set_write_buffer_limits(
+                    high=self.sndbuf, low=0)
             parsed = await _read_request(reader)
             if parsed is None:
                 return
@@ -378,6 +547,16 @@ class ServingServer:
                 await self._handle_metrics(writer)
             elif method == "GET" and target == "/healthz":
                 await self._handle_healthz(writer)
+            elif method == "GET" and target == "/readyz":
+                await self._handle_readyz(writer)
+            elif method == "GET" and target.startswith("/resume/"):
+                try:
+                    uid = int(target[len("/resume/"):])
+                except ValueError:
+                    await _send_plain(writer, "400 Bad Request",
+                                      b'{"error": "bad uid"}')
+                    return
+                await self._handle_resume(reader, writer, uid)
             else:
                 await _send_plain(writer, "404 Not Found",
                                   b'{"error": "no such route"}')
@@ -417,6 +596,23 @@ class ServingServer:
         if not self._started.wait(10.0):
             raise RuntimeError("HTTP server failed to bind in 10s")
         return self
+
+    def drain(self, deadline_ms: float | None = None,
+              poll_s: float = 0.01) -> dict:
+        """Graceful drain (the SIGTERM path): stop admissions — /readyz
+        flips to 503 'draining', new submits get a typed ``draining``
+        rejection — let in-flight requests run to their terminals within
+        ``deadline_ms``, then journal the ledger snapshot.  Returns the
+        engine's ``finish_drain()`` report."""
+        import time as _time
+        self.worker.call(lambda eng: eng.begin_drain())
+        deadline = (None if deadline_ms is None
+                    else _time.monotonic() + deadline_ms / 1000.0)
+        while self.worker.call(lambda eng: eng.has_work()):
+            if deadline is not None and _time.monotonic() >= deadline:
+                break
+            _time.sleep(poll_s)
+        return self.worker.call(lambda eng: eng.finish_drain())
 
     def stop(self):
         if self._loop is not None and self._server is not None:
@@ -463,50 +659,83 @@ def stream_generate(host: str, port: int, prompt, *, max_new_tokens: int = 8,
             b"Content-Type: application/json\r\n"
             b"Content-Length: " + str(len(body)).encode() + b"\r\n"
             b"\r\n" + body)
-        buf = b""
-        head_done = False
-        tokens_seen = 0
-        while True:
-            try:
-                data = sock.recv(65536)
-            except TimeoutError:
-                raise TimeoutError(
-                    f"no frame from {host}:{port} in {timeout}s")
-            if not data:
+        yield from _sse_frames(sock, host, port, timeout,
+                               abort_after=abort_after)
+
+
+def resume_stream(host: str, port: int, uid: int, *,
+                  timeout: float = 120.0):
+    """GET /resume/{uid} and yield decoded SSE frames: every token
+    generated so far (``"replayed": true``) followed by live frames, so
+    the full index sequence is the uninterrupted stream."""
+    with socket.create_connection((host, port), timeout=timeout) as sock:
+        sock.sendall(f"GET /resume/{int(uid)} HTTP/1.1\r\n"
+                     f"Host: {host}\r\n\r\n".encode())
+        yield from _sse_frames(sock, host, port, timeout)
+
+
+def _sse_frames(sock, host, port, timeout, *, abort_after=None):
+    buf = b""
+    head_done = False
+    tokens_seen = 0
+    while True:
+        try:
+            data = sock.recv(65536)
+        except TimeoutError:
+            raise TimeoutError(
+                f"no frame from {host}:{port} in {timeout}s")
+        if not data:
+            return
+        buf += data
+        if not head_done:
+            if b"\r\n\r\n" not in buf:
+                continue
+            head, buf = buf.split(b"\r\n\r\n", 1)
+            status = head.split(b"\r\n", 1)[0].decode("latin-1")
+            if " 200 " not in status + " ":
+                # error responses are small JSON bodies; surface them
+                yield {"type": "http_error", "status": status,
+                       "body": buf.decode("utf-8", "replace")}
                 return
+            head_done = True
+        # chunked-encoding SSE: frames are "data: {...}\n\n"; chunk
+        # framing never splits our search because we re-scan the
+        # buffer — strip chunk-size lines lazily by searching for
+        # the SSE delimiter in the raw stream
+        while b"\n\n" in buf:
+            raw, buf = buf.split(b"\n\n", 1)
+            start = raw.find(b"data: ")
+            if start < 0:
+                continue
+            frame = json.loads(raw[start + len(b"data: "):])
+            yield frame
+            if frame.get("type") in ("done", "error"):
+                return
+            if frame.get("type") == "token":
+                tokens_seen += 1
+                if abort_after is not None \
+                        and tokens_seen >= abort_after:
+                    # hard-close mid-stream: the server's EOF watch
+                    # turns this into cancel(uid)
+                    sock.close()
+                    return
+
+
+def get_json(host: str, port: int, path: str,
+             timeout: float = 30.0) -> tuple[int, dict]:
+    """GET a JSON route (/healthz, /readyz) -> (status_code, body)."""
+    with socket.create_connection((host, port), timeout=timeout) as sock:
+        sock.sendall(f"GET {path} HTTP/1.1\r\nHost: {host}\r\n\r\n"
+                     .encode())
+        buf = b""
+        while True:
+            data = sock.recv(65536)
+            if not data:
+                break
             buf += data
-            if not head_done:
-                if b"\r\n\r\n" not in buf:
-                    continue
-                head, buf = buf.split(b"\r\n\r\n", 1)
-                status = head.split(b"\r\n", 1)[0].decode("latin-1")
-                if " 200 " not in status + " ":
-                    # error responses are small JSON bodies; surface them
-                    yield {"type": "http_error", "status": status,
-                           "body": buf.decode("utf-8", "replace")}
-                    return
-                head_done = True
-            # chunked-encoding SSE: frames are "data: {...}\n\n"; chunk
-            # framing never splits our search because we re-scan the
-            # buffer — strip chunk-size lines lazily by searching for
-            # the SSE delimiter in the raw stream
-            while b"\n\n" in buf:
-                raw, buf = buf.split(b"\n\n", 1)
-                start = raw.find(b"data: ")
-                if start < 0:
-                    continue
-                frame = json.loads(raw[start + len(b"data: "):])
-                yield frame
-                if frame.get("type") in ("done", "error"):
-                    return
-                if frame.get("type") == "token":
-                    tokens_seen += 1
-                    if abort_after is not None \
-                            and tokens_seen >= abort_after:
-                        # hard-close mid-stream: the server's EOF watch
-                        # turns this into cancel(uid)
-                        sock.close()
-                        return
+    head, _, body = buf.partition(b"\r\n\r\n")
+    code = int(head.split(b"\r\n", 1)[0].split()[1])
+    return code, json.loads(body.decode() or "{}")
 
 
 def scrape_metrics(host: str, port: int, timeout: float = 30.0) -> str:

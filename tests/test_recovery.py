@@ -1,0 +1,309 @@
+"""Crash recovery, graceful drain, and the step watchdog — through the
+real engine.
+
+The storage contract is pinned host-side in tests/test_journal.py; here
+the claims run end-to-end:
+
+* **bitwise resume** — kill-and-recover at strided step boundaries
+  (``crash_restart_sweep``) across fixed-slot, paged, chunked-prefill and
+  per-row W4A4 engines: pre-crash tokens ++ post-recovery tokens must
+  equal the fault-free oracle stream exactly, every request must reach a
+  terminal state, and a paged pool must end with zero active pages,
+* **drain** — ``begin_drain()`` closes admissions with the typed
+  ``draining`` rejection while in-flight work finishes; the ledger
+  snapshot is journaled durably; a blown drain deadline leaves survivors
+  non-terminal in the journal for the NEXT process to recover (and that
+  hand-off is itself bitwise),
+* **watchdog** — sustained injected-slow steps on the virtual clock walk
+  the degradation ladder deterministically: first strike degrades (the
+  fused W4A4 engine drops to its bitwise 2-pass composition), the
+  ``fail_after``-th consecutive strike fails the most starved request
+  with the typed ``watchdog_timeout`` reason,
+* **checkpoint pinning** — a journal that pins packed weights refuses to
+  resume on an engine that never restored them (or restored different
+  bytes), because bitwise resume is only promised under the same weights,
+* **fail-open journaling** — a fatal ``journal_write`` fault disables the
+  journal and keeps serving (counter, not outage).
+"""
+import os
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.core.qgemm import QuantConfig
+from repro.models.base import ArchConfig, build_model
+from repro.serving.engine import (EngineDrainingError, JournalError,
+                                  Request, ServeEngine)
+from repro.serving.faults import (FaultInjector, FaultRule, VirtualClock,
+                                  crash_restart_sweep, drive)
+from repro.serving.journal import RequestJournal, replay, scan_journal
+
+
+@pytest.fixture(scope="module")
+def small_cfg():
+    return ArchConfig(name="recovery-test", family="dense", n_layers=2,
+                      d_model=64, n_heads=2, n_kv_heads=2, d_ff=128,
+                      vocab=64, attn_chunk=64,
+                      quant=QuantConfig(method="mixfp4"))
+
+
+@pytest.fixture(scope="module")
+def params(small_cfg):
+    return build_model(small_cfg).init(jax.random.PRNGKey(0))[0]
+
+
+PROMPTS = [[1, 2, 3, 4], [5, 6, 7]]
+
+# engine-shape configurations the bitwise-resume property must hold on:
+# fixed-slot, paged, chunked-prefill, and the per-row W4A4 activation
+# paths (fused and explicit 2-pass) — the recovery re-prefill must land
+# byte-identical KV rows under every cache and quantization layout
+CONFIGS = {
+    "fixed": {},
+    "paged": dict(kv_quant="mixfp4", kv_pool=9, kv_page_len=16),
+    "chunked": dict(prefill_chunk=4),
+    "w4a4-fused": dict(act_quant="mixfp4"),
+    "w4a4-paged-chunked": dict(act_quant="mixfp4-2pass-rowscale",
+                               kv_quant="mixfp4", kv_pool=9,
+                               kv_page_len=16, prefill_chunk=4),
+}
+
+
+def _make_engine_factory(cfg, params, **kw):
+    kw.setdefault("batch_size", 2)
+    kw.setdefault("max_len", 32)
+
+    def make_engine(faults=None, journal_dir=None):
+        return ServeEngine(cfg, params, faults=faults,
+                           journal_dir=journal_dir,
+                           journal_sync="always", **kw)
+
+    return make_engine
+
+
+# ---------------------------------------------------------------------------
+# tentpole: kill-and-recover bitwise, across engine configurations
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("config", sorted(CONFIGS))
+def test_crash_recover_bitwise(small_cfg, params, tmp_path, config):
+    """SIGKILL-equivalent crashes at strided step boundaries, then
+    recovery over the same journal: every stream must be bitwise the
+    uninterrupted oracle's, every request terminal, no leaked pool
+    pages.  ``crash_restart_sweep`` raises listing violations."""
+    make_engine = _make_engine_factory(small_cfg, params,
+                                       **CONFIGS[config])
+    rep = crash_restart_sweep(make_engine, PROMPTS,
+                              journal_root=str(tmp_path),
+                              max_new_tokens=4, crash_stride=2,
+                              max_crashes=3)
+    ran = [c for c in rep["crashes"] if not c.get("skipped")]
+    assert ran, rep
+    assert all(c["recovered"] + c["finalized"] >= 1 for c in ran), ran
+
+
+def test_recover_finalizes_request_with_lost_terminal(small_cfg, params,
+                                                      tmp_path):
+    """A request whose token records already reach max_new_tokens but
+    whose terminal record was lost in the unsynced tail is finalized
+    FINISHED at recovery WITHOUT re-admission (re-decoding it would
+    emit a duplicate stream to a client that already saw the end)."""
+    j = RequestJournal(str(tmp_path), sync="always")
+    j.append({"t": "submit", "uid": 5, "prompt": [1, 2, 3],
+              "max_new_tokens": 3})
+    for t in (7, 8, 9):
+        j.append({"t": "token", "uid": 5, "tok": t})
+    j.close()                        # note: no terminal record
+    eng = ServeEngine(small_cfg, params, batch_size=2, max_len=32)
+    rep = eng.recover(str(tmp_path))
+    assert rep == {**rep, "requests": 1, "resumed": 0, "finalized": 1}
+    req = eng.requests[5]
+    assert str(req.state) == "FINISHED"
+    assert req.finish_reason == "max_new_tokens"
+    assert req.generated == [7, 8, 9]
+    assert not eng.has_work()
+    # ...and the finalization itself was journaled: a second recovery
+    # sees the request terminal
+    assert replay(scan_journal(j.path)[0]).requests[5].terminal
+
+
+def test_recover_empty_journal_is_cold_start(small_cfg, params, tmp_path):
+    eng = ServeEngine(small_cfg, params, batch_size=2, max_len=32)
+    rep = eng.recover(str(tmp_path))
+    assert rep["requests"] == rep["resumed"] == rep["finalized"] == 0
+    # the engine is fully serviceable afterwards
+    got = drive(eng, PROMPTS, max_new_tokens=3)
+    oracle = drive(ServeEngine(small_cfg, params, batch_size=2,
+                               max_len=32), PROMPTS, max_new_tokens=3)
+    assert got["streams"] == oracle["streams"]
+
+
+# ---------------------------------------------------------------------------
+# graceful drain
+# ---------------------------------------------------------------------------
+def test_drain_rejects_typed_and_journals_ledger(small_cfg, params,
+                                                 tmp_path):
+    eng = ServeEngine(small_cfg, params, batch_size=2, max_len=32,
+                      journal_dir=str(tmp_path), journal_sync="batch")
+    for i, p in enumerate(PROMPTS):
+        eng.submit(Request(uid=i, prompt=np.asarray(p, np.int32),
+                           max_new_tokens=3))
+    eng.step()
+    eng.begin_drain()
+    with pytest.raises(EngineDrainingError):
+        eng.submit(Request(uid=99, prompt=np.asarray([1], np.int32),
+                           max_new_tokens=1))
+    assert eng.counters["rejected:draining"] == 1
+    rep = eng.drain()
+    assert rep["drained"] and rep["survivors"] == []
+    assert rep["completed"] == len(PROMPTS)
+    assert all(str(r.state) == "FINISHED" for r in eng.requests.values())
+    # the ledger snapshot hit disk durably (forced fsync under 'batch')
+    recs, _ = scan_journal(os.path.join(str(tmp_path),
+                                        "requests.journal"))
+    ledgers = [r for r in recs if r["t"] == "ledger"]
+    assert len(ledgers) == 1
+    assert ledgers[0]["survivors"] == []
+    assert set(ledgers[0]["requests"]) == {"0", "1"}
+    assert eng.journal.fsyncs >= 1
+
+
+def test_drain_deadline_survivors_recovered_bitwise(small_cfg, params,
+                                                    tmp_path):
+    """A drain that blows its deadline leaves the stragglers non-terminal
+    in the journal; the NEXT process recovers them and the stitched
+    streams are still bitwise the uninterrupted run — the deploy-under-
+    load story end to end."""
+    oracle = drive(ServeEngine(small_cfg, params, batch_size=2,
+                               max_len=32), PROMPTS, max_new_tokens=5)
+    eng = ServeEngine(small_cfg, params, batch_size=2, max_len=32,
+                      journal_dir=str(tmp_path), journal_sync="always")
+    pre: dict = {i: [] for i in range(len(PROMPTS))}
+    for i, p in enumerate(PROMPTS):
+        eng.submit(Request(uid=i, prompt=np.asarray(p, np.int32),
+                           max_new_tokens=5))
+    for uid, tok in eng.step():
+        pre[uid].append(tok)
+    rep = eng.drain(deadline_ms=0.0)     # expires before another step
+    assert not rep["drained"]
+    assert sorted(rep["survivors"]) == [0, 1]
+    # the dead process's ledger names the survivors for the next one
+    recs, _ = scan_journal(os.path.join(str(tmp_path),
+                                        "requests.journal"))
+    assert [r for r in recs if r["t"] == "ledger"][-1]["survivors"] \
+        == rep["survivors"]
+    eng2 = ServeEngine(small_cfg, params, batch_size=2, max_len=32,
+                       journal_dir=str(tmp_path), journal_sync="always")
+    rec = eng2.recover()
+    assert rec["resumed"] == 2
+    post: dict = {i: [] for i in pre}
+    while eng2.has_work():
+        for uid, tok in eng2.step():
+            post[uid].append(tok)
+    for uid in pre:
+        assert pre[uid] + post[uid] == oracle["streams"][uid], uid
+        assert str(eng2.requests[uid].state) == "FINISHED"
+
+
+# ---------------------------------------------------------------------------
+# step watchdog
+# ---------------------------------------------------------------------------
+def test_watchdog_degrades_then_fails_deterministically(small_cfg, params):
+    """Injected slow steps on the virtual clock: one overrun degrades
+    (the fused W4A4 engine drops to the bitwise 2-pass composition),
+    sustained overruns fail ONE request with the typed
+    ``watchdog_timeout`` reason — and the survivor still finishes."""
+    clock = VirtualClock()
+    inj = FaultInjector(0, [FaultRule("decode", "slow", at=(1, 2, 3),
+                                      delay_ms=500.0)], clock=clock)
+    eng = ServeEngine(small_cfg, params, batch_size=2, max_len=32,
+                      act_quant="mixfp4", faults=inj, clock=clock,
+                      hung_step_budget_ms=100.0, watchdog_fail_after=2)
+    got = drive(eng, PROMPTS, max_new_tokens=6)
+    assert eng.counters["watchdog_degrades"] >= 1
+    assert eng.act_quant == "mixfp4-2pass-rowscale"   # ladder rung fired
+    assert eng.counters["watchdog_fails"] == 1
+    assert eng.counters["failed:watchdog_timeout"] == 1
+    states = sorted(str(s) for s in got["states"].values())
+    assert states == ["FAILED", "FINISHED"]
+    wd = eng.watchdog.report()
+    assert wd["overruns"] == 3 and wd["fails"] == 1
+    # degradation preserved the survivor's stream bitwise (fused and
+    # 2-pass per-row W4A4 are the same bytes by construction)
+    oracle = drive(ServeEngine(small_cfg, params, batch_size=2,
+                               max_len=32, act_quant="mixfp4"),
+                   PROMPTS, max_new_tokens=6)
+    fin = next(u for u, s in got["states"].items()
+               if str(s) == "FINISHED")
+    assert got["streams"][fin] == oracle["streams"][fin]
+
+
+def test_watchdog_quiet_run_never_fires(small_cfg, params):
+    clock = VirtualClock()
+    eng = ServeEngine(small_cfg, params, batch_size=2, max_len=32,
+                      clock=clock, hung_step_budget_ms=100.0)
+    drive(eng, PROMPTS, max_new_tokens=3)
+    wd = eng.watchdog.report()
+    assert wd["beats"] > 0 and wd["overruns"] == 0
+    assert eng.counters["watchdog_degrades"] == 0
+    assert eng.counters["watchdog_fails"] == 0
+
+
+# ---------------------------------------------------------------------------
+# journal <-> packed-checkpoint pinning
+# ---------------------------------------------------------------------------
+def test_recover_refuses_unpinned_and_mismatched_weights(small_cfg, params,
+                                                         tmp_path):
+    jdir = str(tmp_path / "journal")
+    ckpt = str(tmp_path / "ckpt")
+    eng = ServeEngine(small_cfg, params, batch_size=2, max_len=32,
+                      journal_dir=jdir, journal_sync="always")
+    eng.save_weights(ckpt, step=3)
+    eng.submit(Request(uid=0, prompt=np.asarray([1, 2, 3], np.int32),
+                       max_new_tokens=4))
+    eng.step()
+    # crash: abandon un-flushed.  A fresh engine that never restored the
+    # pinned checkpoint must refuse to resume...
+    cold = ServeEngine(small_cfg, params, batch_size=2, max_len=32)
+    with pytest.raises(JournalError, match="never restored"):
+        cold.recover(jdir)
+    # ...one that restored a DIFFERENT step must refuse too...
+    wrong = ServeEngine(small_cfg, params, batch_size=2, max_len=32)
+    wrong.save_weights(str(tmp_path / "other"), step=9)
+    with pytest.raises(JournalError, match="step"):
+        wrong.recover(jdir)
+    # ...and one that load_weights() the pinned step resumes bitwise.
+    good = ServeEngine(small_cfg, params, batch_size=2, max_len=32)
+    good.load_weights(ckpt, step=3)
+    rep = good.recover(jdir)
+    assert rep["resumed"] == 1
+    stream = list(eng.requests[0].generated)
+    while good.has_work():
+        for uid, tok in good.step():
+            stream.append(tok)
+    oracle = drive(ServeEngine(small_cfg, params, batch_size=2,
+                               max_len=32), [[1, 2, 3]],
+                   max_new_tokens=4)
+    assert stream == oracle["streams"][0]
+
+
+# ---------------------------------------------------------------------------
+# fail-open journaling
+# ---------------------------------------------------------------------------
+def test_journal_write_fault_fails_open(small_cfg, params, tmp_path):
+    """A fatal journal-append fault disables journaling and keeps
+    serving: durability loss is a counter, not an outage, and the
+    streams stay bitwise the un-journaled run."""
+    inj = FaultInjector(0, [FaultRule("journal_write", "error", at=(0,))])
+    eng = ServeEngine(small_cfg, params, batch_size=2, max_len=32,
+                      faults=inj, journal_dir=str(tmp_path),
+                      journal_sync="always")
+    got = drive(eng, PROMPTS, max_new_tokens=3)
+    assert eng.journal is None
+    assert eng.counters["journal_disabled"] == 1
+    assert eng.counters["journal_write_failed"] >= 1
+    assert all(str(s) == "FINISHED" for s in got["states"].values())
+    oracle = drive(ServeEngine(small_cfg, params, batch_size=2,
+                               max_len=32), PROMPTS, max_new_tokens=3)
+    assert got["streams"] == oracle["streams"]

@@ -21,8 +21,8 @@ from repro.core.qgemm import QuantConfig
 from repro.models.base import ArchConfig, build_model
 from repro.serving.engine import Request, ServeEngine
 from repro.serving.faults import FaultInjector, FaultRule
-from repro.serving.server import (ServingServer, scrape_metrics,
-                                  stream_generate)
+from repro.serving.server import (ServingServer, get_json, resume_stream,
+                                  scrape_metrics, stream_generate)
 
 
 @pytest.fixture(scope="module")
@@ -194,3 +194,134 @@ def test_healthz_and_404(small_cfg, params):
         conn2 = http.client.HTTPConnection(srv.host, srv.port, timeout=30)
         conn2.request("GET", "/nope")
         assert conn2.getresponse().status == 404
+
+
+# ---------------------------------------------------------------------------
+# PR 10: bounded sinks, readiness phases, stream resume
+# ---------------------------------------------------------------------------
+def _parse_sse_blob(blob: bytes):
+    """Decode every SSE frame out of a raw captured byte stream (HTTP
+    header and chunk-size lines carry no ``data:`` prefix, so they fall
+    out naturally)."""
+    frames = []
+    for raw in blob.split(b"\n\n"):
+        i = raw.find(b"data: ")
+        if i >= 0:
+            frames.append(json.loads(raw[i + len(b"data: "):]))
+    return frames
+
+
+def test_slow_client_hits_bounded_sink_and_is_cancelled(small_cfg, params):
+    """A client that stops reading must not wedge the engine or grow the
+    sink queue without bound: past ``max_sink_frames`` the request is
+    cancelled with the typed ``slow_client`` reason, exactly ONE error
+    terminal goes on the wire, and the slot (and its tokens/frames
+    backlog) is released while the engine keeps stepping."""
+    import socket
+    import time
+
+    eng = _engine(small_cfg, params, max_len=128)
+    # tiny kernel buffers on BOTH ends so ~100 frames overflow them, and
+    # a tiny sink bound so the overflow trips fast
+    with ServingServer(eng, max_sink_frames=8, sndbuf=512) as srv:
+        body = json.dumps({"prompt": [1, 2, 3, 4], "uid": 77,
+                           "max_new_tokens": 120}).encode()
+        sock = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
+        try:
+            # RCVBUF must shrink BEFORE connect: the TCP window is
+            # negotiated at the handshake
+            sock.setsockopt(socket.SOL_SOCKET, socket.SO_RCVBUF, 512)
+            sock.settimeout(120.0)
+            sock.connect((srv.host, srv.port))
+            sock.sendall(b"POST /generate HTTP/1.1\r\nHost: t\r\n"
+                         b"Content-Type: application/json\r\n"
+                         b"Content-Length: " + str(len(body)).encode()
+                         + b"\r\n\r\n" + body)
+            # ...and then never read: the engine must cancel us, not hang
+            deadline = time.time() + 120.0
+            while time.time() < deadline:
+                counters = srv.worker.call(lambda e: dict(e.counters),
+                                           timeout=30.0)
+                if counters.get("cancelled:slow_client"):
+                    break
+                time.sleep(0.05)
+            assert counters.get("cancelled:slow_client") == 1, counters
+            # the stalled request's slot is free again
+            active = srv.worker.call(
+                lambda e: sum(s is not None for s in e.slots),
+                timeout=30.0)
+            assert active == 0
+            # NOW read what the server managed to send: buffered token
+            # frames, then exactly one typed error terminal
+            blob = b""
+            sock.settimeout(10.0)
+            while True:
+                try:
+                    data = sock.recv(65536)
+                except TimeoutError:
+                    break
+                if not data:
+                    break
+                blob += data
+        finally:
+            sock.close()
+    frames = _parse_sse_blob(blob)
+    terminal = [f for f in frames if f["type"] in ("done", "error")]
+    assert len(terminal) == 1 and frames[-1] is terminal[0], frames[-2:]
+    assert terminal[0]["type"] == "error"
+    assert terminal[0]["state"] == "CANCELLED"
+    assert terminal[0]["finish_reason"] == "slow_client"
+    assert len(_tokens(frames)) < 120
+
+
+def test_readyz_phases_and_gauges(small_cfg, params):
+    """/healthz is pure liveness (200 in every phase); /readyz flips
+    ready -> draining and carries the queue/slot/pool gauges."""
+    with ServingServer(_engine(small_cfg, params)) as srv:
+        assert srv.worker.ready.wait(60.0)
+        code, body = get_json(srv.host, srv.port, "/readyz")
+        assert code == 200 and body["ready"] is True
+        assert body["phase"] == "ready"
+        assert body["queue_depth"] == 0 and body["active_slots"] == 0
+        assert body["batch_size"] == 2 and body["pool"] is None
+        srv.worker.call(lambda e: e.begin_drain())
+        code, body = get_json(srv.host, srv.port, "/readyz")
+        assert code == 503 and body["ready"] is False
+        assert body["phase"] == "draining"
+        code, body = get_json(srv.host, srv.port, "/healthz")
+        assert code == 200 and body["ok"] is True      # still alive
+        assert body["phase"] == "draining"
+        rep = srv.drain()
+        assert rep["drained"] and rep["survivors"] == []
+
+
+def test_readyz_reports_pool_gauges(small_cfg, params):
+    eng = _engine(small_cfg, params, kv_quant="mixfp4", kv_pool=9,
+                  kv_page_len=16)
+    with ServingServer(eng) as srv:
+        code, body = get_json(srv.host, srv.port, "/readyz")
+    assert code == 200
+    assert body["pool"]["pages_total"] > 0
+    assert body["pool"]["pages_free"] == body["pool"]["pages_total"]
+    assert body["pool"]["pages_active"] == 0
+
+
+def test_resume_replays_finished_stream_bitwise(small_cfg, params):
+    """GET /resume/{uid} after the stream finished: every token comes
+    back flagged ``replayed`` with its original index, then the original
+    terminal — the reconnect path a crashed client (or a recovered
+    server's clients) uses."""
+    prompt, n_new = [1, 2, 3, 4], 6
+    with ServingServer(_engine(small_cfg, params)) as srv:
+        live = list(stream_generate(srv.host, srv.port, prompt, uid=21,
+                                    max_new_tokens=n_new))
+        again = list(resume_stream(srv.host, srv.port, 21))
+        missing = list(resume_stream(srv.host, srv.port, 999))
+    assert _tokens(again) == _tokens(live)
+    tok_frames = [f for f in again if f["type"] == "token"]
+    assert all(f.get("replayed") for f in tok_frames)
+    assert [f["index"] for f in tok_frames] == list(range(n_new))
+    assert again[-1]["type"] == "done"
+    assert again[-1]["finish_reason"] == "max_new_tokens"
+    assert len(missing) == 1 and missing[0]["type"] == "http_error"
+    assert "404" in missing[0]["status"]
